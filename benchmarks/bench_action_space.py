@@ -1,0 +1,152 @@
+"""Fig. 4: discrete vs continuous action space.
+
+The paper found a discrete action space "failed miserably" without a far
+richer state space. We train (a) the paper's continuous Gaussian policy and
+(b) a categorical policy (same residual trunk, per-stage softmax over thread
+counts) under the SAME episode budget, and report best-reward fraction of
+R_max for each.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import make_scenario_env, train_agent
+from repro.core import networks as nets
+from repro.core.simulator import env_reset, env_step, observe, OBS_DIM
+from repro.core.exploration import explore
+from repro.core.simulator import SimEnv
+from repro.optim import adamw_init, adamw_update
+
+N_MAX = 50
+EPISODES = 1500
+M = 10
+
+
+def _discrete_policy_init(key):
+    p = nets.policy_init(key, obs_dim=OBS_DIM, act_dim=3)
+    # replace the Gaussian head with logits over N_MAX bins per stage
+    p["logits"] = nets.linear_init(jax.random.fold_in(key, 7), 256, 3 * N_MAX,
+                                   use_bias=True, dtype=jnp.float32)
+    return p
+
+
+def _discrete_apply(p, obs):
+    h = jnp.tanh(nets.linear(p["embed"], obs)) if False else None
+    # reuse the trunk exactly as the continuous policy
+    from repro.nn.layers import linear
+    h = jnp.tanh(linear(p["embed"], obs))
+    for b in ("b0", "b1", "b2"):
+        h = nets._block_apply(p[b], h, jax.nn.relu)
+    h = jnp.tanh(h)
+    return linear(p["logits"], h).reshape(*obs.shape[:-1], 3, N_MAX)
+
+
+def _train_discrete(env_params, *, seed=0):
+    key = jax.random.PRNGKey(seed)
+    params = _discrete_policy_init(key)
+    vparams = nets.value_init(jax.random.fold_in(key, 1))
+    both = {"pi": params, "v": vparams}
+    opt = adamw_init(both)
+
+    def rollout(pi, key):
+        k0, ks = jax.random.split(key)
+        st = env_reset(env_params, k0)
+        obs = observe(env_params, st)
+
+        def step(carry, k):
+            st, obs = carry
+            logits = _discrete_apply(pi, obs)  # (3, N_MAX)
+            a = jax.random.categorical(k, logits, axis=-1)  # (3,)
+            logp = jnp.sum(jax.nn.log_softmax(logits, -1)[
+                jnp.arange(3), a])
+            st, obs2, r = env_step(env_params, st, (a + 1).astype(jnp.float32))
+            return (st, obs2), (obs, a, r, logp)
+
+        _, traj = jax.lax.scan(step, (st, obs), jax.random.split(ks, M))
+        return traj
+
+    def returns(rew, gamma=0.99):
+        def back(g, r):
+            g = r + gamma * g
+            return g, g
+        _, gs = jax.lax.scan(back, jnp.zeros(()), rew, reverse=True)
+        return gs
+
+    def loss(both, batch):
+        obs, act, ret, logp_old = batch
+        logits = _discrete_apply(both["pi"], obs)  # (B,3,N)
+        lp = jnp.take_along_axis(jax.nn.log_softmax(logits, -1),
+                                 act[..., None], axis=-1)[..., 0].sum(-1)
+        v = nets.value_apply(both["v"], obs)
+        adv = ret - jax.lax.stop_gradient(v)
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        ratio = jnp.exp(lp - logp_old)
+        s1 = ratio * adv
+        s2 = jnp.clip(ratio, 0.8, 1.2) * adv
+        ent = -jnp.sum(jax.nn.softmax(logits, -1)
+                       * jax.nn.log_softmax(logits, -1), axis=(-1, -2)).mean()
+        return (-jnp.minimum(s1, s2).mean() + 0.5 * jnp.mean((ret - v) ** 2)
+                - 0.1 * ent)
+
+    @jax.jit
+    def episode(both, opt, key):
+        ks = jax.random.split(key, 32)
+        obs, act, rew, logp = jax.vmap(lambda k: rollout(both["pi"], k))(ks)
+        ret = jax.vmap(returns)(rew)
+        batch = (obs.reshape(-1, OBS_DIM), act.reshape(-1, 3),
+                 ret.reshape(-1), logp.reshape(-1))
+        for _ in range(4):
+            g = jax.grad(loss)(both, batch)
+            both, opt, _ = adamw_update(both, g, opt, lr=3e-4,
+                                        weight_decay=0.0, max_grad_norm=0.5)
+        return both, opt, rew.sum(1)
+
+    key = jax.random.PRNGKey(seed + 100)
+    best = -np.inf
+    n_ep = 0
+    while n_ep < EPISODES:
+        key, k = jax.random.split(key)
+        both, opt, ep_r = episode(both, opt, k)
+        n_ep += 32
+        best = max(best, float(jnp.max(ep_r)))
+    return best
+
+
+def main(rows=None):
+    rows = rows if rows is not None else []
+    p = make_scenario_env("read", n_max=N_MAX)
+    env = SimEnv(p, seed=0)
+    env.reset()
+    ex = explore(env.probe, n_samples=150, n_max=N_MAX, seed=0)
+    target = ex.r_max * M
+
+    t0 = time.time()
+    _, res, _ = train_agent(p, seed=0, episodes=EPISODES, n_max=N_MAX)
+    cont_frac = res.best_reward / target
+    t_cont = time.time() - t0
+
+    t0 = time.time()
+    disc_best = _train_discrete(p, seed=0)
+    disc_frac = disc_best / target
+    t_disc = time.time() - t0
+
+    rows += [
+        ("action_space.continuous_frac_rmax", cont_frac * 1e6,
+         f"{cont_frac:.3f} in {t_cont:.0f}s"),
+        ("action_space.discrete_frac_rmax", disc_frac * 1e6,
+         f"{disc_frac:.3f} in {t_disc:.0f}s"),
+        ("action_space.continuous_advantage", (cont_frac - disc_frac) * 1e6,
+         f"continuous better by {cont_frac - disc_frac:+.3f} "
+         "(paper Fig.4: discrete fails to converge)"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(",".join(str(x) for x in r))

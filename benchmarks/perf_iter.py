@@ -1,0 +1,79 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb harness: lower one (arch x shape x mesh) cell with config
+overrides, print the three roofline terms + top byte sites + collective mix,
+and append the iteration to runs/perf/log.jsonl.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch granite-34b \
+      --shape train_4k --tag tri --set attn_backend=chunked_tri
+"""
+
+import argparse
+import json
+import time
+
+from repro.configs import get_config
+from repro.launch.dryrun import lower_cell
+
+
+def _parse_val(v):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    if v in ("True", "true"):
+        return True
+    if v in ("False", "false"):
+        return False
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--fsdp-over-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="cfg overrides key=value")
+    ap.add_argument("--log", default="runs/perf/log.jsonl")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = _parse_val(v)
+    cfg = get_config(args.arch).replace(**overrides) if overrides else None
+
+    t0 = time.time()
+    res = lower_cell(args.arch, args.shape, multi_pod=args.mesh == "multi",
+                     fsdp_over_pod=args.fsdp_over_pod, cfg_override=cfg)
+    res["tag"] = args.tag
+    res["overrides"] = overrides
+    res["wall_s"] = round(time.time() - t0, 1)
+
+    os.makedirs(os.path.dirname(args.log), exist_ok=True)
+    with open(args.log, "a") as f:
+        f.write(json.dumps(res, default=str) + "\n")
+
+    if res["status"] != "ok":
+        print(json.dumps(res, indent=1, default=str)[:2000])
+        return
+    print(f"[{args.tag}] {args.arch}/{args.shape}/{args.mesh} {overrides}")
+    print(f"  compute_s={res['compute_s']:.3f} memory_s={res['memory_s']:.3f} "
+          f"collective_s={res['collective_s']:.3f} dom={res['dominant']} "
+          f"roofline_frac={res['compute_s']/max(res['compute_s'],res['memory_s'],res['collective_s']):.4f}")
+    print(f"  useful_flops={res['useful_flops_ratio']:.4f} "
+          f"GB/dev={res['state_bytes_per_device']/1e9:.2f} "
+          f"compile={res['compile_s']}s")
+    print("  coll:", {k: f"{v:.3g}" for k, v in res["collective_by_kind"].items()})
+    print("  top byte sites:")
+    for k, v in list(res.get("bytes_top_sites", {}).items())[:8]:
+        print(f"    {v:.3e}  {k}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Deliverable (g): the roofline table. Reads the dry-run artifacts
+(runs/dryrun/*.json) and emits per (arch x shape x mesh):
+
+    compute_s / memory_s / collective_s, dominant term, roofline step time,
+    MODEL_FLOPS ratio (6ND / HLO flops), bytes/device, collective mix.
+
+Also derives the "roofline fraction" = compute_s / max(all terms) — the
+fraction of the step during which the MXUs could be busy if the dominant
+term were fully overlapped; 1.0 means compute-bound at the target.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COLUMNS = ["arch", "shape", "mesh", "status", "chips", "compute_s",
+           "memory_s", "collective_s", "dominant", "roofline_fraction",
+           "useful_flops_ratio", "state_GB_per_dev", "hlo_flops",
+           "collective_bytes"]
+
+
+def _default_dir():
+    for d in ("runs/dryrun_final", "runs/dryrun"):
+        if glob.glob(os.path.join(d, "*.json")):
+            return d
+    return "runs/dryrun"
+
+
+def load_cells(dryrun_dir=None):
+    dryrun_dir = dryrun_dir or _default_dir()
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells):
+    rows = []
+    for c in cells:
+        if c["status"] != "ok":
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "mesh": c["mesh"], "status": c["status"],
+                         "reason": c.get("reason", c.get("error", ""))[:60]})
+            continue
+        terms = {"compute": c["compute_s"], "memory": c["memory_s"],
+                 "collective": c["collective_s"]}
+        step = max(terms.values())
+        rows.append({
+            "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+            "status": "ok", "chips": c["chips"],
+            "compute_s": round(c["compute_s"], 4),
+            "memory_s": round(c["memory_s"], 4),
+            "collective_s": round(c["collective_s"], 4),
+            "dominant": c["dominant"],
+            "roofline_fraction": round(c["compute_s"] / step, 4) if step else None,
+            "useful_flops_ratio": round(c["useful_flops_ratio"], 4)
+            if c.get("useful_flops_ratio") else None,
+            "state_GB_per_dev": round(c["state_bytes_per_device"] / 1e9, 2),
+            "hlo_flops": f"{c['hlo_flops']:.3g}",
+            "collective_bytes": f"{c['collective_bytes']:.3g}",
+        })
+    return rows
+
+
+def markdown(rows):
+    hdr = ["arch", "shape", "mesh", "dom", "compute_s", "memory_s",
+           "collective_s", "roofline_frac", "useful_flops", "GB/dev"]
+    out = ["| " + " | ".join(hdr) + " |",
+           "|" + "---|" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']}: {r.get('reason','')} |" + " |" * 6)
+            continue
+        out.append("| " + " | ".join(str(x) for x in (
+            r["arch"], r["shape"], r["mesh"], r["dominant"], r["compute_s"],
+            r["memory_s"], r["collective_s"], r["roofline_fraction"],
+            r["useful_flops_ratio"], r["state_GB_per_dev"])) + " |")
+    return "\n".join(out)
+
+
+def main(rows=None, dryrun_dir=None):
+    rows = rows if rows is not None else []
+    cells = load_cells(dryrun_dir)
+    ok = [c for c in cells if c["status"] == "ok"]
+    skip = [c for c in cells if c["status"] == "skip"]
+    err = [c for c in cells if c["status"] == "error"]
+    rows.append(("roofline.cells_ok", len(ok) * 1e6,
+                 f"{len(ok)} ok / {len(skip)} skip / {len(err)} error"))
+    if not ok:
+        return rows
+    # aggregate statistics for the CSV; the full table goes to EXPERIMENTS.md
+    for mesh in ("single", "multi"):
+        sub = [c for c in ok if c["mesh"] == mesh]
+        if not sub:
+            continue
+        doms = {}
+        for c in sub:
+            doms[c["dominant"]] = doms.get(c["dominant"], 0) + 1
+        fracs = [c["compute_s"] / max(c["compute_s"], c["memory_s"],
+                                      c["collective_s"]) for c in sub]
+        rows.append((f"roofline.{mesh}.dominant_mix", len(sub) * 1e6,
+                     str(doms)))
+        rows.append((f"roofline.{mesh}.mean_roofline_fraction",
+                     sum(fracs) / len(fracs) * 1e6,
+                     f"{sum(fracs) / len(fracs):.3f}"))
+        worst = min(sub, key=lambda c: c["compute_s"] / max(
+            c["compute_s"], c["memory_s"], c["collective_s"]))
+        rows.append((f"roofline.{mesh}.worst_cell", 0,
+                     f"{worst['arch']}/{worst['shape']} dom={worst['dominant']}"))
+    # baseline-vs-optimized fleet speedup, when both sweeps exist
+    opt = {(c["arch"], c["shape"], c["mesh"]): c
+           for c in load_cells("runs/dryrun_opt")} if glob.glob(
+               "runs/dryrun_opt/*.json") else {}
+    if opt:
+        import math
+        sp = []
+        for c in ok:
+            o = opt.get((c["arch"], c["shape"], c["mesh"]))
+            if not o or o.get("status") != "ok":
+                continue
+            sb = max(c["compute_s"], c["memory_s"], c["collective_s"])
+            so = max(o["compute_s"], o["memory_s"], o["collective_s"])
+            sp.append(sb / so)
+        if sp:
+            gm = math.exp(sum(math.log(x) for x in sp) / len(sp))
+            rows.append(("roofline.optimized_geomean_speedup", gm * 1e6,
+                         f"{gm:.2f}x over {len(sp)} cells "
+                         "(baseline runs/dryrun_final vs runs/dryrun_opt)"))
+    return rows
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(markdown(table(cells)))

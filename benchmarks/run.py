@@ -1,0 +1,52 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  Fig. 3  -> bench_convergence     (completion time vs Marlin)
+  Fig. 4  -> bench_action_space    (discrete vs continuous actions)
+  Fig. 5  -> bench_bottleneck      (3 bottleneck scenarios, stability)
+  Table I -> bench_end_to_end      (Globus/Marlin/AutoMDT, live engine)
+  §V-A    -> bench_training_time   (offline training wall time)
+  (g)     -> roofline              (dry-run roofline aggregates)
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_training_time, bench_convergence,
+                            bench_bottleneck, bench_action_space,
+                            bench_end_to_end, bench_finetune, roofline)
+    suites = [
+        ("training_time", bench_training_time.main),
+        ("convergence", bench_convergence.main),
+        ("bottleneck", bench_bottleneck.main),
+        ("action_space", bench_action_space.main),
+        ("end_to_end", bench_end_to_end.main),
+        ("finetune", bench_finetune.main),
+        ("roofline", roofline.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        t0 = time.time()
+        try:
+            rows = fn([])
+            for r in rows:
+                n, us, derived = r
+                print(f"{n},{us:.1f},{str(derived).replace(',', ';')}")
+            print(f"suite.{name}.wall_s,{(time.time() - t0) * 1e6:.0f},"
+                  f"{time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"suite.{name}.FAILED,0,{traceback.format_exc(limit=1)!r}",
+                  flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Paper Fig. 5: the three bottleneck scenarios (read / network / write).
+Trains one agent per scenario, then races AutoMDT vs Marlin vs Globus and
+prints time-to-95%-utilization + the final thread allocations.
+
+  PYTHONPATH=src python examples/bottleneck_scenarios.py
+"""
+
+import numpy as np
+
+from benchmarks.common import (SCENARIOS, make_scenario_env, train_agent,
+                               run_controller_in_sim, time_to_utilization)
+from repro.core import GlobusController, MarlinOptimizer
+
+
+def main():
+    for name, sc in SCENARIOS.items():
+        p = make_scenario_env(name)
+        ctrl, res, ex = train_agent(p, seed=1, episodes=1500)
+        print(f"\n=== {name}-bottleneck (optimal streams {sc['optimal']}) ===")
+        for label, controller in (("AutoMDT", ctrl),
+                                  ("Marlin", MarlinOptimizer(n_max=50)),
+                                  ("Globus", GlobusController())):
+            tr = run_controller_in_sim(p, controller, steps=60)
+            t95 = time_to_utilization(tr, ex.bottleneck)
+            alloc = tr["threads"][-5:].mean(axis=0).round(1)
+            print(f"  {label:8s} t95={str(t95):>5s}s "
+                  f"delivered={tr['delivered']:6.1f} Gbit "
+                  f"final alloc={alloc.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

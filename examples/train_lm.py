@@ -1,0 +1,33 @@
+"""End-to-end training driver: the ~100M-family (smollm) reduced config,
+AutoMDT-tuned input pipeline, fault-tolerant loop, async checkpointing.
+
+  PYTHONPATH=src python examples/train_lm.py --steps 100
+(full-size arch training runs through the same driver on a pod:
+  python -m repro.launch.train --arch smollm-135m --steps 500)
+"""
+
+import argparse
+
+from repro.configs import get_smoke_config
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--controller", default="autotmdt")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    _, info = train(cfg, steps=args.steps, batch=args.batch, seq=args.seq,
+                    ckpt_dir="runs/example_train", controller=args.controller)
+    print(f"loss {info['losses'][0]:.3f} -> {info['losses'][-1]:.3f} over "
+          f"{len(info['losses'])} steps in {info['wall_s']:.1f}s "
+          f"(checkpoints={info['report'].checkpoints})")
+
+
+if __name__ == "__main__":
+    main()

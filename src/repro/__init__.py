@@ -1,0 +1,21 @@
+"""repro — AutoMDT (Modular Architecture for High-Performance and Low Overhead
+Data Transfers) implemented as a first-class feature of a production-grade
+multi-pod JAX training/inference framework.
+
+Layers:
+  repro.core       — the paper's contribution: simulator, PPO agent, utility,
+                     exploration, Marlin/Globus baselines, production controller
+  repro.transfer   — real modular 3-stage transfer engine (read/network/write)
+  repro.data       — AutoMDT-tuned input data pipeline
+  repro.checkpoint — async checkpointing/restore through the transfer engine
+  repro.runtime    — fault tolerance, stragglers, elastic re-mesh, compression
+  repro.nn         — pure-JAX module substrate
+  repro.models     — the 10 assigned architecture families
+  repro.optim      — AdamW + schedules
+  repro.sharding   — logical-axis rules -> NamedSharding
+  repro.kernels    — Pallas TPU kernels (flash attention, SSD scan, sim step)
+  repro.configs    — assigned architecture configs
+  repro.launch     — mesh / dryrun / train / serve entry points
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+from repro.checkpoint.checkpointer import (
+    save_checkpoint,
+    load_checkpoint,
+    latest_step,
+    AsyncCheckpointer,
+)

@@ -1,0 +1,223 @@
+"""Checkpointing through the modular transfer engine.
+
+Serialize: the state pytree is flattened (path-keyed), each leaf becomes a
+contiguous byte span in one blob with an index. The blob is then pumped
+through a 3-stage TransferEngine (device->host staging = read, staging ->
+store route = network, fsync/commit = write) whose concurrency an AutoMDT
+controller can tune — checkpoint traffic is exactly the bulk-transfer problem
+the paper optimizes, and async checkpointing keeps it off the training
+critical path.
+
+Layout per checkpoint:  <dir>/step_<N>/ckpt.bin + manifest.json
+Writes are atomic (tmp dir + rename); ``keep`` old checkpoints are retained;
+blob sha256 is verified on restore. Restore accepts target shardings so a
+checkpoint taken on one mesh can be loaded onto another (elastic re-mesh:
+parameters are addressed by tree path, not by device layout).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+
+import numpy as np
+
+import jax
+
+from repro.transfer.engine import TransferEngine, FileSink
+
+
+class _BlobSource:
+    def __init__(self, blob, chunk_bytes=4 << 20):
+        self.blob = blob
+        self.chunk = chunk_bytes
+        self._off = 0
+        self._lock = threading.Lock()
+
+    def next_chunk(self):
+        with self._lock:
+            if self._off >= len(self.blob):
+                return None
+            off = self._off
+            n = min(self.chunk, len(self.blob) - off)
+            self._off += n
+        return off, self.blob[off:off + n]
+
+    def exhausted(self):
+        with self._lock:
+            return self._off >= len(self.blob)
+
+
+def _path_str(path):
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def serialize_state(state):
+    """-> (blob bytes, index list). Index entry: [path, dtype, shape, off, n]."""
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    index = []
+    parts = []
+    off = 0
+    for path, leaf in leaves:
+        arr = np.asarray(jax.device_get(leaf))
+        # bf16 has no numpy dtype name round-trip; store raw bytes + jax dtype
+        raw = arr.tobytes()
+        index.append([_path_str(path), str(leaf.dtype), list(arr.shape),
+                      off, len(raw)])
+        parts.append(raw)
+        off += len(raw)
+    return b"".join(parts), index
+
+
+def deserialize_state(blob, index, like):
+    """Rebuild the pytree with dtypes/shapes from the manifest; ``like`` gives
+    the tree structure (and optional shardings via jax.device_put later)."""
+    import jax.numpy as jnp
+    by_path = {e[0]: e for e in index}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path, leaf in leaves:
+        p = _path_str(path)
+        e = by_path[p]
+        _, dtype, shape, off, n = e
+        arr = np.frombuffer(blob[off:off + n],
+                            dtype=jnp.dtype(dtype)).reshape(shape)
+        out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def save_checkpoint(ckpt_dir, state, step, *, keep=3, controller=None,
+                    throttles=(None, None, None), chunk_bytes=4 << 20,
+                    use_engine=True):
+    """Returns the checkpoint path. Blocking (AsyncCheckpointer wraps this)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    blob, index = serialize_state(state)
+    digest = hashlib.sha256(blob).hexdigest()
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    bin_path = os.path.join(tmp, "ckpt.bin")
+
+    if use_engine:
+        src = _BlobSource(blob, chunk_bytes)
+        sink = FileSink(bin_path)
+        eng = TransferEngine(src, sink, throttles=throttles,
+                             initial_concurrency=(2, 2, 2),
+                             metric_interval=0.2)
+        try:
+            import time
+            while not eng.done():
+                if controller is not None:
+                    eng.set_concurrency(controller.step(eng.observe()))
+                time.sleep(0.02)
+        finally:
+            eng.close()
+            sink.close()
+    else:
+        with open(bin_path, "wb") as f:
+            f.write(blob)
+
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": step, "sha256": digest, "index": index}, f)
+    shutil.rmtree(final, ignore_errors=True)
+    os.rename(tmp, final)
+
+    # prune
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+    return final
+
+
+def latest_steps(ckpt_dir):
+    out = []
+    if not os.path.isdir(ckpt_dir):
+        return out
+    for d in os.listdir(ckpt_dir):
+        if d.startswith("step_") and not d.startswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+                out.append(int(d.split("_")[1]))
+    return out
+
+
+def latest_step(ckpt_dir):
+    steps = latest_steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir, like, *, step=None, shardings=None):
+    """-> (state, step). Verifies sha256. ``shardings`` (optional pytree of
+    NamedSharding) re-lays the state onto a (possibly different) mesh —
+    the elastic-scaling restore path."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    with open(os.path.join(d, "ckpt.bin"), "rb") as f:
+        blob = f.read()
+    digest = hashlib.sha256(blob).hexdigest()
+    if digest != manifest["sha256"]:
+        raise IOError(f"checkpoint {d} corrupt: sha mismatch")
+    state = deserialize_state(blob, manifest["index"], like)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, step
+
+
+class AsyncCheckpointer:
+    """Non-blocking saves: the caller's device_get snapshot happens inline
+    (cheap host copy), serialization + engine transfer run on a worker
+    thread. ``wait()`` drains; at most one save in flight (newer supersedes
+    queued)."""
+
+    def __init__(self, ckpt_dir, *, keep=3, controller=None):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self.controller = controller
+        self._pending = None
+        self._lock = threading.Lock()
+        self._thread = None
+        self.last_error = None
+
+    def save(self, state, step):
+        snapshot = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        with self._lock:
+            self._pending = (snapshot, step)
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._drain, daemon=True)
+                self._thread.start()
+
+    def _drain(self):
+        while True:
+            with self._lock:
+                if self._pending is None:
+                    return
+                snapshot, step = self._pending
+                self._pending = None
+            try:
+                save_checkpoint(self.ckpt_dir, snapshot, step, keep=self.keep,
+                                controller=self.controller)
+            except Exception as e:  # surfaced via last_error + wait()
+                self.last_error = e
+
+    def wait(self):
+        t = self._thread
+        if t is not None:
+            t.join()
+        if self.last_error:
+            raise self.last_error

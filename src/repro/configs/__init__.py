@@ -1,0 +1,2 @@
+from repro.configs.registry import get_config, get_smoke_config, list_archs, ARCHS
+from repro.configs.shapes import SHAPES, shape_supported, input_specs

@@ -1,0 +1,87 @@
+"""The assigned input-shape grid and ShapeDtypeStruct input specs.
+
+``train_*`` lowers train_step; ``prefill_*`` lowers serve prefill;
+``decode_*`` / ``long_*`` lower serve_step (one token against a KV cache of
+seq_len). long_500k requires a sub-quadratic decode path: it runs for
+SSM / hybrid / sliding-window archs and is recorded as a skip otherwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_supported(cfg, shape_id):
+    """(supported, reason)."""
+    if shape_id == "long_500k":
+        sub_quadratic = cfg.family in ("ssm", "hybrid") or cfg.window > 0
+        if not sub_quadratic:
+            return False, ("full quadratic attention; long_500k runs only for "
+                           "SSM/hybrid/linear-attn per assignment")
+    return True, ""
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape_id, *, scale=1):
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape)
+    cell. ``scale`` divides batch/seq for reduced smoke runs."""
+    spec = SHAPES[shape_id]
+    B = max(spec["batch"] // scale, 1)
+    S = max(spec["seq"] // scale, 8)
+    kind = spec["kind"]
+    i32 = jnp.int32
+
+    if kind == "train":
+        batch = {"tokens": _sd((B, S), i32), "labels": _sd((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sd((B, max(S // cfg.src_ratio, 8), cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.family == "vlm":
+            V = min(cfg.n_vision_tokens, S // 2)
+            batch["vision_embeds"] = _sd((B, V, cfg.d_model), jnp.bfloat16)
+            batch["positions_thw"] = _sd((3, B, S), i32)
+        return batch
+
+    if kind == "prefill":
+        batch = {"tokens": _sd((B, S), i32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sd((B, max(S // cfg.src_ratio, 8), cfg.d_model),
+                                  jnp.bfloat16)
+        if cfg.family == "vlm":
+            V = min(cfg.n_vision_tokens, S // 2)
+            batch["vision_embeds"] = _sd((B, V, cfg.d_model), jnp.bfloat16)
+            batch["positions_thw"] = _sd((3, B, S), i32)
+        return batch
+
+    # decode: one new token; the cache spec is built separately via eval_shape
+    return {"tokens": _sd((B, 1), i32)}
+
+
+def concrete_inputs(cfg, shape_id, *, scale=1, seed=0):
+    """Real (host) arrays matching input_specs — smoke tests / examples."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, s in input_specs(cfg, shape_id, scale=scale).items():
+        if s.dtype == jnp.int32:
+            if name == "positions_thw":
+                _, b, t = s.shape
+                pos = np.broadcast_to(np.arange(t, dtype=np.int32), (3, b, t))
+                out[name] = jnp.asarray(pos)
+            else:
+                out[name] = jnp.asarray(
+                    rng.integers(0, cfg.vocab, size=s.shape, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(rng.normal(0, 1, s.shape), dtype=s.dtype)
+    return out

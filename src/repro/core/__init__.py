@@ -1,0 +1,22 @@
+"""AutoMDT — the paper's primary contribution.
+
+  simref.py      Algorithm 1, faithful: event-driven priority-queue simulator
+  simulator.py   TPU-native adaptation: dense fixed-timestep vectorized sim
+  utility.py     U = sum_i t_i / k^{n_i}; R_max; k = 1.02
+  exploration.py random-threads logging phase -> B_i, TPT_i, b, n_i*, R_max
+  networks.py    residual actor/critic exactly as §IV-D
+  ppo.py         Algorithm 2 training (+ vectorized beyond-paper trainer)
+  marlin.py      baseline: 3 independent single-variable gradient-descent opts
+  globus.py      baseline: static configuration
+  controller.py  production phase (§IV-F)
+"""
+
+from repro.core.utility import utility, stage_utility, r_max, K_DEFAULT
+from repro.core.simulator import SimParams, SimEnv, make_env_params
+from repro.core.simref import EventSimulator
+from repro.core.networks import policy_init, policy_apply, value_init, value_apply
+from repro.core.ppo import PPOConfig, train_ppo, train_ppo_vectorized
+from repro.core.marlin import MarlinOptimizer
+from repro.core.globus import GlobusController
+from repro.core.exploration import explore, ExplorationResult
+from repro.core.controller import AutoMDTController

@@ -1,0 +1,78 @@
+"""Production phase (§IV-F): load the best offline-trained checkpoint and
+re-enter the interaction loop with no episode limit until the dataset has
+been transferred. Every step: sample a continuous action from the policy's
+diagonal Gaussian, round to integers, clamp to [1, n_max], apply to the real
+engine, probe throughput, repeat.
+
+Works against any engine exposing:
+    observe() -> dict(threads, throughputs, sender_free, receiver_free,
+                      sender_capacity, receiver_capacity)
+    set_concurrency((n_r, n_n, n_w))
+Both repro.transfer.TransferEngine and the simulators provide this.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as nets
+
+
+class AutoMDTController:
+    def __init__(self, policy_params, *, n_max=100, bw_ref=None,
+                 deterministic=False, seed=0):
+        self.params = policy_params
+        self.n_max = n_max
+        self.bw_ref = bw_ref  # normalization reference (exploration B max)
+        self.deterministic = deterministic
+        self._key = jax.random.PRNGKey(seed)
+        self._apply = jax.jit(nets.policy_apply)
+
+    def _obs_vector(self, obs: dict):
+        bw = self.bw_ref or max(max(obs["throughputs"]), 1e-9)
+        return jnp.asarray(np.concatenate([
+            np.asarray(obs["threads"], float) / self.n_max,
+            np.asarray(obs["throughputs"], float) / bw,
+            [obs["sender_free"] / max(obs["sender_capacity"], 1e-9),
+             obs["receiver_free"] / max(obs["receiver_capacity"], 1e-9)],
+        ]), jnp.float32)
+
+    def step(self, obs: dict):
+        """obs dict -> next concurrency tuple (ints)."""
+        mean, std = self._apply(self.params, self._obs_vector(obs))
+        if self.deterministic:
+            a = mean
+        else:
+            self._key, k = jax.random.split(self._key)
+            a = mean + std * jax.random.normal(k, mean.shape)
+        n = np.clip(np.round(np.asarray(a)), 1, self.n_max).astype(int)
+        return tuple(n.tolist())
+
+    def run(self, engine, *, total_bytes=None, interval=1.0, max_steps=None,
+            on_step=None):
+        """Drive a live engine until ``total_bytes`` moved (or engine.done()).
+        Returns the trace [(t, threads, throughputs)]."""
+        import time
+        trace = []
+        t0 = time.time()
+        steps = 0
+        while True:
+            obs = engine.observe()
+            n = self.step(obs)
+            engine.set_concurrency(n)
+            engine.wait(interval)
+            obs2 = engine.observe()
+            trace.append((time.time() - t0, n, tuple(obs2["throughputs"])))
+            if on_step:
+                on_step(trace[-1])
+            steps += 1
+            if total_bytes is not None and engine.bytes_written() >= total_bytes:
+                break
+            if getattr(engine, "done", lambda: False)():
+                break
+            if max_steps is not None and steps >= max_steps:
+                break
+        return trace

@@ -1,0 +1,96 @@
+"""Policy and value networks, following §IV-D precisely.
+
+Policy: input -> Linear(256) -> tanh -> 3 residual blocks (two linears
+interleaved with LayerNorm + ReLU, plus skip) -> tanh -> Linear(mean), with a
+trainable log-std clamped to a reasonable range and exponentiated.
+
+Value: input -> Linear(256) -> tanh -> 2 residual blocks (Tanh activations)
+-> Linear -> scalar.
+
+Actions are thread counts DIRECTLY (continuous; the env rounds+clamps), so
+the mean head is scaled by ``action_scale`` (≈ n_max/4 at init) to put the
+initial policy in a sensible region of thread-space.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear, linear_init, layernorm, layernorm_init
+
+HIDDEN = 256
+LOG_STD_MIN, LOG_STD_MAX = -2.0, 3.0
+F32 = jnp.float32
+
+
+def _block_init(key, d, dtype=F32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "l1": linear_init(k1, d, d, use_bias=True, dtype=dtype),
+        "ln1": layernorm_init(d, dtype=dtype),
+        "l2": linear_init(k2, d, d, use_bias=True, dtype=dtype),
+        "ln2": layernorm_init(d, dtype=dtype),
+    }
+
+
+def _block_apply(p, x, act):
+    h = act(layernorm(p["ln1"], linear(p["l1"], x)))
+    h = act(layernorm(p["ln2"], linear(p["l2"], h)))
+    return x + h
+
+
+def policy_init(key, *, obs_dim=8, act_dim=3, hidden=HIDDEN,
+                action_scale=25.0, init_log_std=1.5):
+    ks = jax.random.split(key, 6)
+    return {
+        "embed": linear_init(ks[0], obs_dim, hidden, use_bias=True, dtype=F32),
+        "b0": _block_init(ks[1], hidden),
+        "b1": _block_init(ks[2], hidden),
+        "b2": _block_init(ks[3], hidden),
+        "mean": linear_init(ks[4], hidden, act_dim, use_bias=True, dtype=F32,
+                            stddev=0.01),
+        "mean_bias_units": jnp.ones((act_dim,), F32),  # ~1x action_scale
+        "log_std": jnp.full((act_dim,), init_log_std, F32),
+        "action_scale": jnp.asarray(action_scale, F32),
+    }
+
+
+def policy_apply(params, obs):
+    """obs: (..., obs_dim) -> (mean, std): thread-count units."""
+    h = jnp.tanh(linear(params["embed"], obs))
+    for b in ("b0", "b1", "b2"):
+        h = _block_apply(params[b], h, jax.nn.relu)
+    h = jnp.tanh(h)
+    raw = linear(params["mean"], h) + params["mean_bias_units"]
+    mean = raw * params["action_scale"]
+    log_std = jnp.clip(params["log_std"], LOG_STD_MIN, LOG_STD_MAX)
+    std = jnp.exp(log_std) * jnp.ones_like(mean)
+    return mean, std
+
+
+def value_init(key, *, obs_dim=8, hidden=HIDDEN):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": linear_init(ks[0], obs_dim, hidden, use_bias=True, dtype=F32),
+        "b0": _block_init(ks[1], hidden),
+        "b1": _block_init(ks[2], hidden),
+        "out": linear_init(ks[3], hidden, 1, use_bias=True, dtype=F32),
+    }
+
+
+def value_apply(params, obs):
+    h = jnp.tanh(linear(params["embed"], obs))
+    for b in ("b0", "b1"):
+        h = _block_apply(params[b], h, jnp.tanh)
+    return linear(params["out"], h)[..., 0]
+
+
+def gaussian_logp(mean, std, action):
+    var = std ** 2
+    return jnp.sum(-0.5 * ((action - mean) ** 2 / var)
+                   - jnp.log(std) - 0.5 * jnp.log(2 * jnp.pi), axis=-1)
+
+
+def gaussian_entropy(std):
+    return jnp.sum(0.5 * jnp.log(2 * jnp.pi * jnp.e) + jnp.log(std), axis=-1)

@@ -1,0 +1,199 @@
+"""Algorithm 2: PPO training for thread allocation.
+
+Faithful loop structure: N episodes, each = reset to random threads + M env
+steps + ONE batched update over the episode memory (clipped surrogate +
+0.5*MSE critic - 0.1*entropy, Adam), old policy refreshed after each episode,
+convergence when best episode reward reaches 0.9*R_max and then ``patience``
+episodes pass without improvement.
+
+Beyond-paper (train_ppo_vectorized): the rollout is vmapped over ``n_envs``
+parallel simulator environments and the whole episode+update is one jitted
+call — this is what makes offline training take seconds here vs the paper's
+45 minutes (their simulator is a Python heap; see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import networks as nets
+from repro.core.simulator import env_reset, env_step, observe, OBS_DIM, ACT_DIM
+from repro.optim import adamw_init, adamw_update
+
+
+@dataclass
+class PPOConfig:
+    max_steps: int = 10          # M — steps per episode
+    max_episodes: int = 30000    # N
+    lr: float = 3e-4
+    gamma: float = 0.99
+    clip_eps: float = 0.2
+    entropy_coef: float = 0.1
+    critic_coef: float = 0.5
+    ppo_epochs: int = 4
+    normalize_adv: bool = True
+    n_envs: int = 1              # 1 = paper-faithful sequential episodes
+    substeps: int = 50
+    patience: int = 1000
+    convergence_frac: float = 0.9
+    action_scale: float = 25.0
+    init_log_std: float = 1.5
+    max_grad_norm: float = 0.5
+    seed: int = 0
+    log_every: int = 0
+
+
+@dataclass
+class TrainResult:
+    params: dict
+    episodes: int
+    wall_s: float
+    history: list
+    converged_at: int | None
+    best_reward: float
+    r_max: float | None
+
+
+def init_agent(key, cfg: PPOConfig):
+    kp, kv = jax.random.split(key)
+    params = {
+        "policy": nets.policy_init(kp, obs_dim=OBS_DIM, act_dim=ACT_DIM,
+                                   action_scale=cfg.action_scale,
+                                   init_log_std=cfg.init_log_std),
+        "value": nets.value_init(kv, obs_dim=OBS_DIM),
+    }
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def _rollout(policy_params, env_params, key, *, M, substeps):
+    """One episode in one env. Returns per-step (obs, action, reward, logp)."""
+    k_reset, k_steps = jax.random.split(key)
+    state = env_reset(env_params, k_reset, substeps=substeps)
+    obs0 = observe(env_params, state)
+
+    def step(carry, k):
+        state, obs = carry
+        mean, std = nets.policy_apply(policy_params, obs)
+        action = mean + std * jax.random.normal(k, mean.shape)
+        logp = nets.gaussian_logp(mean, std, action)
+        state, obs_next, reward = env_step(env_params, state, action,
+                                           substeps=substeps)
+        return (state, obs_next), (obs, action, reward, logp)
+
+    keys = jax.random.split(k_steps, M)
+    (_, _), traj = jax.lax.scan(step, (state, obs0), keys)
+    return traj  # obs (M,8), act (M,3), rew (M,), logp (M,)
+
+
+def _returns(rew, gamma):
+    def back(g, r):
+        g = r + gamma * g
+        return g, g
+    _, gs = jax.lax.scan(back, jnp.zeros(()), rew, reverse=True)
+    return gs
+
+
+def _loss(params, batch, cfg: PPOConfig):
+    obs, act, ret, logp_old = batch
+    mean, std = nets.policy_apply(params["policy"], obs)
+    logp = nets.gaussian_logp(mean, std, act)
+    v = nets.value_apply(params["value"], obs)
+    adv = ret - jax.lax.stop_gradient(v)
+    if cfg.normalize_adv:
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    ratio = jnp.exp(logp - logp_old)
+    surr1 = ratio * adv
+    surr2 = jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps) * adv
+    actor = -jnp.minimum(surr1, surr2).mean()
+    critic = cfg.critic_coef * jnp.mean((ret - v) ** 2)
+    entropy = nets.gaussian_entropy(std).mean()
+    total = actor + critic - cfg.entropy_coef * entropy
+    return total, {"actor": actor, "critic": critic, "entropy": entropy}
+
+
+def _make_episode_fn(env_params, cfg: PPOConfig):
+    """One jitted call = n_envs episodes + ppo_epochs updates."""
+
+    def episode(train_state, key):
+        params, opt = train_state["params"], train_state["opt"]
+        k_roll, _ = jax.random.split(key)
+        roll_keys = jax.random.split(k_roll, cfg.n_envs)
+        obs, act, rew, logp = jax.vmap(
+            lambda k: _rollout(params["policy"], env_params, k,
+                               M=cfg.max_steps, substeps=cfg.substeps)
+        )(roll_keys)  # (E, M, ...)
+        ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
+        flat = (obs.reshape(-1, OBS_DIM), act.reshape(-1, ACT_DIM),
+                ret.reshape(-1), logp.reshape(-1))
+
+        def update(carry, _):
+            params, opt = carry
+            (l, aux), grads = jax.value_and_grad(_loss, has_aux=True)(
+                params, flat, cfg)
+            params, opt, _ = adamw_update(params, grads, opt, lr=cfg.lr,
+                                          weight_decay=0.0,
+                                          max_grad_norm=cfg.max_grad_norm)
+            return (params, opt), l
+
+        (params, opt), losses = jax.lax.scan(update, (params, opt), None,
+                                             length=cfg.ppo_epochs)
+        ep_rewards = rew.sum(axis=1)  # (E,)
+        return ({"params": params, "opt": opt}, ep_rewards, losses[-1])
+
+    return jax.jit(episode)
+
+
+def train_ppo(env_params, cfg: PPOConfig, *, r_max=None, key=None):
+    """Algorithm 2. Returns TrainResult with the BEST (not last) params."""
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    k_init, key = jax.random.split(key)
+    train_state = init_agent(k_init, cfg)
+    episode_fn = _make_episode_fn(env_params, cfg)
+
+    best_r = -jnp.inf
+    best_params = train_state["params"]
+    stagnant = 0
+    converged_at = None
+    history = []
+    t0 = time.time()
+    n_episodes = 0
+
+    while n_episodes < cfg.max_episodes:
+        key, k = jax.random.split(key)
+        train_state, ep_rewards, loss = episode_fn(train_state, k)
+        ep_rewards = jax.device_get(ep_rewards)
+        for r in ep_rewards:
+            n_episodes += 1
+            history.append(float(r))
+            if r > best_r:
+                best_r = float(r)
+                best_params = jax.device_get(train_state["params"])
+                stagnant = 0
+            else:
+                stagnant += 1
+        if cfg.log_every and n_episodes % cfg.log_every < cfg.n_envs:
+            print(f"[ppo] ep={n_episodes} best={best_r:.3f} loss={float(loss):.3f}",
+                  flush=True)
+        if r_max is not None:
+            if converged_at is None and best_r >= cfg.convergence_frac * r_max * cfg.max_steps:
+                converged_at = n_episodes
+            if converged_at is not None and stagnant >= cfg.patience:
+                break
+
+    return TrainResult(params=best_params, episodes=n_episodes,
+                       wall_s=time.time() - t0, history=history,
+                       converged_at=converged_at, best_reward=float(best_r),
+                       r_max=r_max)
+
+
+def train_ppo_vectorized(env_params, cfg: PPOConfig = None, *, r_max=None,
+                         key=None, n_envs=64, **kw):
+    """Beyond-paper fast path: identical algorithm, vmapped envs."""
+    cfg = cfg or PPOConfig()
+    cfg = PPOConfig(**{**cfg.__dict__, "n_envs": n_envs, **kw})
+    return train_ppo(env_params, cfg, r_max=r_max, key=key)

@@ -1,0 +1,33 @@
+"""The paper's utility function (§IV-B):
+
+    U(n, t) = U_read + U_network + U_write,   U_i = t_i / k^{n_i}
+
+Higher throughput raises utility; thread count is penalized exponentially so
+a global maximum exists. k balances resource usage vs throughput; the paper's
+sweep over 1-25 Gbps links found k = 1.02 and fixes it for all results.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+K_DEFAULT = 1.02
+
+
+def stage_utility(t, n, *, k=K_DEFAULT):
+    """t: throughput, n: thread count (arrays ok)."""
+    return t / jnp.power(k, n)
+
+
+def utility(throughputs, threads, *, k=K_DEFAULT):
+    """throughputs/threads: (..., 3) for (read, network, write)."""
+    throughputs = jnp.asarray(throughputs)
+    threads = jnp.asarray(threads)
+    return jnp.sum(throughputs / jnp.power(k, threads), axis=-1)
+
+
+def r_max(bottleneck, n_star, *, k=K_DEFAULT):
+    """Theoretical maximum reward (§IV-E):
+    R_max = b * (k^-n_r* + k^-n_n* + k^-n_w*)."""
+    n_star = jnp.asarray(n_star, dtype=jnp.float32)
+    return float(bottleneck * jnp.sum(jnp.power(k, -n_star)))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+  flash_attention/  blocked online-softmax attention (causal + sliding
+                    window + GQA), VMEM-tiled, MXU-aligned
+  ssd_scan/         Mamba2 SSD chunked scan (intra-chunk quadratic on the
+                    MXU + inter-chunk state recurrence in VMEM scratch)
+  sim_step/         AutoMDT dense-simulator sub-stepping across an env batch
+                    (the paper's own hot loop: offline PPO training)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper; interpret=True on non-TPU platforms) and ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the flash-attention kernel: materialized
+softmax(QK^T)V with the same (B,S,H,D) layout as the model code."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.nn.attention import sdpa_full
+
+
+def attention_reference(q, k, v, *, causal=True, window=None):
+    """q: (B,S,Hq,D); k/v: (B,Skv,Hkv,D) -> (B,S,Hq,D)."""
+    S, Skv = q.shape[1], k.shape[1]
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+    k_pos = jnp.arange(Skv, dtype=jnp.int32)
+    mode = ("sliding" if window else "causal") if causal else "full"
+    return sdpa_full(q, k, v, q_pos, k_pos, mode=mode, window=window)

@@ -1,0 +1,25 @@
+"""jit'd wrapper for the batched simulator-interval kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sim_step.kernel import sim_step_pallas
+
+
+@partial(jax.jit, static_argnames=("substeps", "duration", "interpret"))
+def sim_step_batch(bufs, rate, cap, *, substeps=50, duration=1.0,
+                   interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    E = bufs.shape[0]
+    blk = E
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if E % cand == 0:
+            blk = cand
+            break
+    return sim_step_pallas(bufs, rate, cap, substeps=substeps,
+                           duration=duration, blk=blk, interpret=interpret)

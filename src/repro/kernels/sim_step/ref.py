@@ -1,0 +1,23 @@
+"""Oracle: the vmapped pure-jnp simulator interval from repro.core.simulator."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.simulator import SimParams, sim_interval
+
+
+def sim_step_reference(bufs, rate, cap, *, substeps=50, duration=1.0):
+    """Same contract as sim_step_pallas, built on repro.core.simulator."""
+
+    def one(b, ra, ca):
+        # sim_interval consumes threads*tpt/bw; feed rate directly through a
+        # params struct with tpt=rate, bw=inf, threads=1
+        p = SimParams(tpt=ra, bw=jnp.full((3,), jnp.inf),
+                      cap=ca, n_max=jnp.float32(1),
+                      duration=jnp.float32(duration), k=jnp.float32(1.02))
+        bufs2, tps = sim_interval(p, b, jnp.ones((3,)), substeps=substeps)
+        return bufs2, tps * duration
+
+    return jax.vmap(one)(bufs, rate, cap)

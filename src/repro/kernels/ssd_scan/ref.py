@@ -1,0 +1,9 @@
+"""Oracle: the pure-jnp chunked SSD from repro.nn.ssd (also used by the
+models at smoke scale and by prefill, which needs the final state)."""
+
+from repro.nn.ssd import ssd_chunked
+
+
+def ssd_reference(x, dt, A, B, C, *, chunk=128):
+    y, _ = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    return y

@@ -1,0 +1,286 @@
+"""Roofline-term extraction from the compiled (post-SPMD-partitioning) HLO.
+
+Why not just ``compiled.cost_analysis()``: XLA's cost analysis counts each
+while-loop body ONCE, but a scanned L-layer model executes its body L times —
+flops/bytes/collectives would all be undercounted by ~L. We therefore parse
+the HLO text ourselves:
+
+  * every instruction's result type is recorded into a symbol table;
+  * ``while`` instructions carry ``backend_config={"known_trip_count"...}`` —
+    body/condition computations get that multiplier (nested loops compose);
+  * FLOPs  = sum over ``dot`` ops of 2 * prod(result dims) * prod(lhs
+    contracting dims), trip-weighted. (Elementwise flops are ignored: matmul
+    dominates every assigned architecture; the memory term covers the rest.)
+  * bytes  = 2 * sum of materialized result bytes (read+write approximation)
+    over non-fusion-internal computations, trip-weighted;
+  * collective bytes = result-type bytes per collective op (reduce-scatter
+    scaled by group size so it reflects operand/wire traffic), trip-weighted.
+
+All numbers are PER-DEVICE (the SPMD module is the per-device program); the
+dry-run scales by chip count where the spec formula wants global values.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"\b(" + "|".join(k for k in _DTYPE_BYTES if k not in ("token", "opaque"))
+                      + r")\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(.*)$")
+_OPNAME_RE = re.compile(r"^(?:\([^=]*?\)|\S+)\s+([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls=|to_apply=|branch_computations=\{)%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+# ops whose "result" is a view / aliases its inputs or body outputs —
+# no real memory traffic of its own. NOTE while/conditional/call results
+# alias their body's outputs: counting them would re-count the entire loop
+# carry (stacked params!) once per trip.
+_VIEW_OPS = {"parameter", "get-tuple-element", "bitcast", "tuple", "constant",
+             "iota", "after-all", "partition-id", "replica-id",
+             "while", "conditional", "call"}
+
+
+def _dims(dim_str):
+    return [int(d) for d in dim_str.split(",") if d] if dim_str else []
+
+
+def _type_bytes(segment):
+    total = 0
+    for dt, dims in _TYPE_RE.findall(segment):
+        n = 1
+        for d in _dims(dims):
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+    dot_count: int = 0
+    bytes_by_op: dict = field(default_factory=dict)     # op -> bytes (rw)
+    bytes_by_meta: dict = field(default_factory=dict)   # op_name tail -> bytes
+
+    def top_bytes(self, n=10):
+        return dict(sorted(self.bytes_by_meta.items(),
+                           key=lambda kv: -kv[1])[:n])
+
+
+def _split_computations(text):
+    comps, cur, name = {}, None, None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", s.strip())
+            name = m.group(1) if m else f"comp{len(comps)}"
+            comps[name] = []
+            cur = comps[name]
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.append(s.strip())
+    return comps
+
+
+def _multipliers(comps):
+    """computation name -> execution multiplier from known_trip_count."""
+    mult = {c: 1 for c in comps}
+    edges = []  # (parent, child, factor)
+    internal = set()  # fusion / reduce-apply bodies (no materialized buffers)
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln:
+                trip = 0
+                tm = _TRIP_RE.search(ln)
+                if tm:
+                    trip = int(tm.group(1))
+                cond = None
+                for m in _COND_RE.finditer(ln):
+                    cond = m.group(1)
+                if not trip and cond and cond in comps:
+                    # fallback: loop bound = largest integer constant in cond
+                    consts = [int(c) for cl in comps[cond]
+                              for c in re.findall(r"constant\((\d+)\)", cl)]
+                    trip = max(consts) if consts else 1
+                for m in _BODY_RE.finditer(ln):
+                    edges.append((cname, m.group(1), max(trip, 1)))
+                if cond:
+                    edges.append((cname, cond, max(trip, 1)))
+            opm = None
+            im = _INSTR_RE.match(ln)
+            if im:
+                opm = _OPNAME_RE.match(im.group(2))
+            opname = opm.group(1) if opm else ""
+            for m in re.finditer(r"(calls=|to_apply=|branch_computations=\{)%?([\w.\-]+)", ln):
+                prefix, callee = m.group(1), m.group(2)
+                edges.append((cname, callee, 1))
+                # fusion bodies / reduce apply-fns don't materialize buffers;
+                # plain `call` (e.g. remat closed_call) bodies do.
+                if opname == "fusion" or prefix == "to_apply=":
+                    internal.add(callee)
+    # conditionals list multiple branch computations after branch_computations={
+    for _ in range(6):  # propagate through nesting depth
+        changed = False
+        for parent, child, f in edges:
+            want = mult.get(parent, 1) * f
+            if child in mult and mult[child] < want:
+                mult[child] = want
+                changed = True
+        if not changed:
+            break
+    return mult, internal
+
+
+def _operand_names(segment, opname):
+    """Operand instruction names inside ``opname(...)`` in the segment."""
+    i = segment.find(opname + "(")
+    if i < 0:
+        return []
+    seg = segment[i + len(opname) + 1:]
+    j = seg.find(")")
+    return re.findall(r"%([\w.\-]+)", seg[:j if j >= 0 else len(seg)])
+
+
+def analyze_hlo(text):
+    comps = _split_computations(text)
+    mult, internal = _multipliers(comps)
+    st = HloStats()
+    # global symbol table: instruction name -> type segment string
+    sym = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if m:
+                rest = m.group(2)
+                op = _OPNAME_RE.match(rest)
+                cut = rest.find(op.group(1) + "(") if op else len(rest)
+                sym[m.group(1)] = rest[:cut]
+
+    # fusions rooted in dynamic-update-slice run IN PLACE: the result aliases
+    # the input buffer, so traffic is the update slice, not the whole carry.
+    dus_update_bytes = {}  # fusion computation name -> update-slice bytes
+    for cname, lines in comps.items():
+        for ln in lines:
+            if "ROOT" in ln and "dynamic-update-slice(" in ln:
+                seg = _operand_names(ln, "dynamic-update-slice")
+                if len(seg) > 1:
+                    b = _type_bytes(sym.get(seg[1], ""))
+                    if b:
+                        dus_update_bytes[cname] = b
+
+    for cname, lines in comps.items():
+        k = mult.get(cname, 1)
+        is_internal = cname in internal
+        for ln in lines:
+            m = _INSTR_RE.match(ln)
+            if not m:
+                continue
+            rest = m.group(2)
+            opm = _OPNAME_RE.match(rest)
+            if not opm:
+                continue
+            op = opm.group(1)
+            cut = rest.find(op + "(")
+            result_seg = rest[:cut]
+
+            if op == "dot":
+                cm = _CONTRACT_RE.search(rest)
+                # first operand name inside parens
+                oseg = rest[cut + len(op) + 1:]
+                onames = re.findall(r"%([\w.\-]+)", oseg[:oseg.find(")")])
+                contracted = 1
+                if cm and onames:
+                    lhs_seg = sym.get(onames[0], "")
+                    tm = _TYPE_RE.search(lhs_seg)
+                    if tm:
+                        lhs_dims = _dims(tm.group(2))
+                        for ci in _dims(cm.group(1)):
+                            if ci < len(lhs_dims):
+                                contracted *= lhs_dims[ci]
+                tm = _TYPE_RE.search(result_seg)
+                relems = 1
+                if tm:
+                    for d in _dims(tm.group(2)):
+                        relems *= d
+                st.flops += 2.0 * relems * contracted * k
+                st.dot_count += 1
+
+            if not is_internal and op not in _VIEW_OPS:
+                b = None
+                if op == "dynamic-update-slice":
+                    onames = _operand_names(rest[cut:], op)
+                    upd = sym.get(onames[1], "") if len(onames) > 1 else ""
+                    if _type_bytes(upd):
+                        b = 2.0 * _type_bytes(upd) * k
+                elif op == "fusion":
+                    cm = re.search(r"calls=%?([\w.\-]+)", rest)
+                    if cm and cm.group(1) in dus_update_bytes:
+                        b = 2.0 * dus_update_bytes[cm.group(1)] * k
+                if b is None:
+                    b = 2.0 * _type_bytes(result_seg) * k
+                st.bytes_accessed += b
+                if b:
+                    st.bytes_by_op[op] = st.bytes_by_op.get(op, 0) + b
+                    mm = re.search(r'op_name="([^"]*)"', rest)
+                    if mm:
+                        tail = "/".join(mm.group(1).split("/")[-2:])[:60]
+                        st.bytes_by_meta[tail] = st.bytes_by_meta.get(tail, 0) + b
+
+            for kind in _COLLECTIVES:
+                if op == kind or op == kind + "-start":
+                    b = _type_bytes(result_seg)
+                    if kind == "reduce-scatter":
+                        gm = _GROUPS_RE.search(rest)
+                        if gm:
+                            b *= int(gm.group(2))
+                    st.collective_bytes += b * k
+                    st.coll_by_kind[kind] = st.coll_by_kind.get(kind, 0) + b * k
+                    st.coll_counts[kind] = st.coll_counts.get(kind, 0) + 1
+                    break
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms — TPU v5e targets
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per ICI link
+
+
+def roofline_terms(*, hlo_flops, hlo_bytes, coll_bytes, chips):
+    """Terms in seconds. Inputs are GLOBAL (sum over chips) quantities."""
+    compute_s = hlo_flops / (chips * PEAK_FLOPS)
+    memory_s = hlo_bytes / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * LINK_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dom = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    return {**terms, "dominant": dom.replace("_s", ""),
+            "roofline_step_s": step_s}

@@ -1,0 +1,32 @@
+"""Production mesh construction. A FUNCTION (not module-level constant) so
+importing this module never touches jax device state."""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    try:
+        return jax.make_mesh(shape, axes)
+    except (ValueError, RuntimeError):
+        # jax.make_mesh wants exactly len(devices) == prod(shape); build from a
+        # prefix of the device list instead (single-pod mesh on a 512-device
+        # host platform).
+        from jax.sharding import Mesh
+        n = math.prod(shape)
+        devs = np.array(jax.devices()[:n]).reshape(shape)
+        return Mesh(devs, axes)
+
+
+def make_smoke_mesh():
+    """1-device mesh with production axis names — smoke tests on CPU."""
+    import jax
+    from jax.sharding import Mesh
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))

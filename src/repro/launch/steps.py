@@ -1,0 +1,81 @@
+"""jit-able train/serve step factories shared by the dry-run, the training
+driver, and the benchmarks."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.optim import adamw_init, adamw_update
+from repro.optim.schedules import cosine_schedule
+
+
+def make_train_step(cfg, *, peak_lr=3e-4, warmup_steps=100, total_steps=10000,
+                    weight_decay=0.1, max_grad_norm=1.0, compress_fn=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params": ..., "opt": {"m","v","step"}}. ``compress_fn`` is the
+    optional gradient-compression hook (repro.runtime.compress) applied to
+    grads before the optimizer (i.e. before the cross-pod reduction hop).
+    """
+    model = get_model(cfg)
+
+    def train_step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss_fn, has_aux=True)(state["params"], batch)
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+        lr = cosine_schedule(state["opt"]["step"], peak_lr=peak_lr,
+                             warmup_steps=warmup_steps, total_steps=total_steps)
+        params, opt, om = adamw_update(state["params"], grads, state["opt"],
+                                       lr=lr, weight_decay=weight_decay,
+                                       max_grad_norm=max_grad_norm)
+        out = {"loss": loss, "lr": lr}
+        out.update(metrics)
+        out.update(om)
+        return {"params": params, "opt": opt}, out
+
+    return train_step
+
+
+def init_state(cfg, key):
+    model = get_model(cfg)
+    params = model.init(key)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+def state_shape(cfg):
+    """ShapeDtypeStruct pytree of the train state (no allocation)."""
+    model = get_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt = jax.eval_shape(adamw_init, params)
+    return {"params": params, "opt": opt}
+
+
+def make_prefill_step(cfg):
+    model = get_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return prefill_step
+
+
+def make_serve_step(cfg, *, temperature=0.0):
+    """One decode iteration: greedy (or sampled) next token + cache update."""
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens):
+        logits, cache = model.decode_step(params, cache, tokens)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return next_tok, cache
+
+    return serve_step
+
+
+def cache_shape(cfg, batch, max_len):
+    model = get_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))

@@ -1,0 +1,50 @@
+"""Uniform model API: ``get_model(cfg)`` returns a ``Model`` whose methods are
+plain functions of (params, batch/cache) — ready for jax.jit / pjit.
+
+Model methods
+  init(key) -> params
+  loss_fn(params, batch) -> (loss, metrics)        # training objective
+  init_cache(batch_size, max_len) -> cache         # serving
+  prefill(params, batch, cache) -> (logits, cache)
+  decode_step(params, cache, tokens) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+from repro.models.config import ModelConfig
+from repro.models import decoder, ssm, hybrid, encdec
+
+_FAMILY_MODULES = {
+    "dense": decoder,
+    "moe": decoder,
+    "vlm": decoder,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss_fn: Callable[..., Any]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+    return Model(
+        cfg=cfg,
+        init=partial(mod.init, cfg),
+        loss_fn=partial(mod.loss_fn, cfg),
+        init_cache=partial(mod.init_cache, cfg),
+        prefill=partial(mod.prefill, cfg),
+        decode_step=partial(mod.decode_step, cfg),
+    )

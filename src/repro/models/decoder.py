@@ -1,0 +1,307 @@
+"""Generic transformer decoder: covers the dense (llama-style), MoE
+(mixtral / deepseek-v2) and VLM-backbone (qwen2-vl) families.
+
+Layers are scanned (params stacked on a leading L axis) so the compiled HLO
+contains the block body once regardless of depth. An optional small stack of
+leading dense-FFN layers supports deepseek-style "first layers dense" MoE.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import moe as nnmoe
+from repro.nn.rotary import apply_rope, apply_partial_rope, apply_mrope, text_mrope_positions
+from repro.models import mla
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Rope plumbing
+# ---------------------------------------------------------------------------
+
+def _rope_fn(cfg, positions):
+    """Returns rope closure for full-sequence attention. positions: (B,S) or
+    (3,B,S) for mrope."""
+    if cfg.rope == "none":
+        return None
+    if cfg.rope == "partial":
+        return lambda q, k: apply_partial_rope(q, k, positions,
+                                               fraction=cfg.rope_fraction,
+                                               theta=cfg.rope_theta)
+    if cfg.rope == "mrope":
+        return lambda q, k: apply_mrope(q, k, positions,
+                                        sections=cfg.mrope_sections,
+                                        theta=cfg.rope_theta)
+    return lambda q, k: apply_rope(q, k, positions, theta=cfg.rope_theta)
+
+
+def _rope_fn_decode(cfg):
+    """Returns rope closure for decode: (q, k, pos(B,1)) -> (q, k)."""
+    if cfg.rope == "none":
+        return None
+    if cfg.rope == "partial":
+        return lambda q, k, pos: apply_partial_rope(q, k, pos,
+                                                    fraction=cfg.rope_fraction,
+                                                    theta=cfg.rope_theta)
+    if cfg.rope == "mrope":
+        def fn(q, k, pos):
+            thw = jnp.broadcast_to(pos[None], (3,) + pos.shape)
+            return apply_mrope(q, k, thw, sections=cfg.mrope_sections,
+                               theta=cfg.rope_theta)
+        return fn
+    return lambda q, k, pos: apply_rope(q, k, pos, theta=cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg, key, *, moe_ffn):
+    k1, k2 = jax.random.split(key)
+    p = {"attn_norm": nnl.rmsnorm_init(cfg.d_model),
+         "ffn_norm": nnl.rmsnorm_init(cfg.d_model)}
+    if cfg.use_mla:
+        p["attn"] = mla.mla_init(cfg, k1)
+    else:
+        p["attn"] = attn.attention_init(k1, cfg.d_model, cfg.n_heads,
+                                        cfg.n_kv_heads, cfg.head_dim,
+                                        qkv_bias=cfg.qkv_bias)
+    if moe_ffn:
+        p["ffn"] = nnmoe.moe_init(k2, cfg.d_model, cfg.d_ff_expert, cfg.n_experts,
+                                  n_shared=cfg.n_shared_experts,
+                                  d_ff_shared=cfg.d_ff_expert)
+    elif cfg.mlp == "gelu":
+        p["ffn"] = nnl.gelu_mlp_init(k2, cfg.d_model, cfg.d_ff_dense or cfg.d_ff,
+                                     use_bias=False)
+    else:
+        p["ffn"] = nnl.swiglu_init(k2, cfg.d_model, cfg.d_ff_dense or cfg.d_ff)
+    return p
+
+
+def _dense_ffn(cfg, p, h):
+    return nnl.gelu_mlp(p, h) if cfg.mlp == "gelu" else nnl.swiglu(p, h)
+
+
+def _attn_kw(cfg):
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim,
+                mode="sliding" if cfg.window else "causal",
+                window=cfg.window or None, backend=cfg.attn_backend,
+                chunk=cfg.attn_chunk)
+
+
+def _block_apply(cfg, p, x, extra, *, moe_ffn):
+    positions, mask_pos = extra["positions"], extra["mask_positions"]
+    h = nnl.rmsnorm(p["attn_norm"], x, eps=cfg.norm_eps)
+    if cfg.use_mla:
+        a = mla.mla_apply(cfg, p["attn"], h, positions, backend=cfg.attn_backend,
+                          chunk=cfg.attn_chunk)
+    else:
+        a = attn.attention_apply(p["attn"], h, mask_pos,
+                                 rope_fn=_rope_fn(cfg, positions), **_attn_kw(cfg))
+    x = x + a
+    h = nnl.rmsnorm(p["ffn_norm"], x, eps=cfg.norm_eps)
+    if moe_ffn:
+        f, aux = nnmoe.moe_apply(p["ffn"], h, top_k=cfg.top_k,
+                                 capacity_factor=cfg.capacity_factor,
+                                 normalize_weights=cfg.moe_normalize)
+    else:
+        f, aux = _dense_ffn(cfg, p["ffn"], h), jnp.zeros((), jnp.float32)
+    return x + f, aux
+
+
+def _block_prefill(cfg, p, x, cache_l, extra, *, moe_ffn):
+    positions, mask_pos = extra["positions"], extra["mask_positions"]
+    h = nnl.rmsnorm(p["attn_norm"], x, eps=cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache_l = mla.mla_prefill(cfg, p["attn"], h, positions, cache_l,
+                                     backend=cfg.attn_backend, chunk=cfg.attn_chunk)
+    else:
+        a, cache_l = attn.attention_prefill(p["attn"], h, mask_pos, cache_l,
+                                            rope_fn=_rope_fn(cfg, positions),
+                                            **_attn_kw(cfg))
+    x = x + a
+    h = nnl.rmsnorm(p["ffn_norm"], x, eps=cfg.norm_eps)
+    if moe_ffn:
+        f, _ = nnmoe.moe_apply(p["ffn"], h, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               normalize_weights=cfg.moe_normalize)
+    else:
+        f = _dense_ffn(cfg, p["ffn"], h)
+    return x + f, cache_l
+
+
+def _block_decode(cfg, p, x, cache_l, *, moe_ffn):
+    h = nnl.rmsnorm(p["attn_norm"], x, eps=cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache_l = mla.mla_decode(cfg, p["attn"], h, cache_l)
+    else:
+        a, cache_l = attn.attention_decode(
+            p["attn"], h, cache_l, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            rope_fn=_rope_fn_decode(cfg), window=cfg.window or None)
+    x = x + a
+    h = nnl.rmsnorm(p["ffn_norm"], x, eps=cfg.norm_eps)
+    if moe_ffn:
+        f, _ = nnmoe.moe_apply(p["ffn"], h, top_k=cfg.top_k,
+                               capacity_factor=cfg.capacity_factor,
+                               normalize_weights=cfg.moe_normalize)
+    else:
+        f = _dense_ffn(cfg, p["ffn"], h)
+    return x + f, cache_l
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def _stacks(cfg):
+    """[(stack_name, n_layers, moe_ffn)] in execution order."""
+    if cfg.n_experts:
+        out = []
+        if cfg.n_dense_layers:
+            out.append(("dense_layers", cfg.n_dense_layers, False))
+        out.append(("layers", cfg.n_layers - cfg.n_dense_layers, True))
+        return out
+    return [("layers", cfg.n_layers, False)]
+
+
+def init(cfg, key):
+    keys = jax.random.split(key, 4)
+    params = {"embed": nnl.embedding_init(keys[0], cfg.vocab_padded, cfg.d_model),
+              "final_norm": nnl.rmsnorm_init(cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nnl.linear_init(keys[1], cfg.d_model, cfg.vocab_padded)
+    for i, (name, n, moe_ffn) in enumerate(_stacks(cfg)):
+        params[name] = nnl.stacked_init(
+            partial(_block_init, cfg, moe_ffn=moe_ffn), keys[2 + i], n)
+    return params
+
+
+def _embed(cfg, params, batch):
+    x = nnl.embedding(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+    return x
+
+
+def _positions(cfg, batch):
+    B, S = batch["tokens"].shape
+    mask_pos = jnp.arange(S, dtype=jnp.int32)
+    if cfg.rope == "mrope":
+        pos = batch.get("positions_thw")
+        if pos is None:
+            pos = text_mrope_positions(B, S)
+        return pos, mask_pos
+    return jnp.broadcast_to(mask_pos[None], (B, S)), mask_pos
+
+
+def _readout(cfg, params, x):
+    x = nnl.rmsnorm(params["final_norm"], x, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = nnl.embedding_logits(params["embed"], x)
+    else:
+        logits = (x @ params["lm_head"]["w"]).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:  # mask padding rows out of the softmax
+        pad = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = logits + jnp.where(pad, NEG_INF, 0.0)
+    return logits
+
+
+def _maybe_remat(fn, cfg):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward(cfg, params, batch):
+    """Token embeddings -> final hidden states. Returns (x, aux_loss)."""
+    x = _embed(cfg, params, batch)
+    positions, mask_pos = _positions(cfg, batch)
+    extra = {"positions": positions, "mask_positions": mask_pos}
+    aux_total = jnp.zeros((), jnp.float32)
+    for name, n, moe_ffn in _stacks(cfg):
+        fn = _maybe_remat(partial(_block_apply, cfg, moe_ffn=moe_ffn), cfg)
+
+        def body(carry, p_l, fn=fn, extra=extra):
+            x, aux = carry
+            x, a = fn(p_l, x, extra)
+            return (x, aux + a), None
+
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params[name])
+    return x, aux_total
+
+
+def loss_fn(cfg, params, batch):
+    x, aux = forward(cfg, params, batch)
+    logits = _readout(cfg, params, x)  # (B,S,Vp) fp32
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ((logz - ll) * mask).sum() / denom
+    z_loss = cfg.z_loss_coef * ((logz ** 2) * mask).sum() / denom
+    total = ce + z_loss + cfg.aux_loss_coef * aux
+    return total, {"ce": ce, "z_loss": z_loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch, max_len):
+    caches = {}
+    for name, n, _ in _stacks(cfg):
+        if cfg.use_mla:
+            one = mla.init_mla_cache(cfg, batch, max_len)
+        else:
+            one = attn.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+                                     window=cfg.window or None)
+        caches[name] = jax.tree.map(
+            lambda a: jnp.zeros((n,) + a.shape, a.dtype) + a[None], one)
+    return caches
+
+
+def prefill(cfg, params, batch, cache):
+    x = _embed(cfg, params, batch)
+    positions, mask_pos = _positions(cfg, batch)
+    extra = {"positions": positions, "mask_positions": mask_pos}
+    new_cache = {}
+    for name, n, moe_ffn in _stacks(cfg):
+        def body(x, inp, moe_ffn=moe_ffn):
+            p_l, c_l = inp
+            x, c_l = _block_prefill(cfg, p_l, x, c_l, extra, moe_ffn=moe_ffn)
+            return x, c_l
+
+        x, new_cache[name] = jax.lax.scan(body, x, (params[name], cache[name]))
+    logits = _readout(cfg, params, x[:, -1:, :])
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg, params, cache, tokens):
+    """tokens: (B, 1) -> (logits (B, Vp), cache)."""
+    x = nnl.embedding(params["embed"], tokens)
+    new_cache = {}
+    for name, n, moe_ffn in _stacks(cfg):
+        def body(x, inp, moe_ffn=moe_ffn):
+            p_l, c_l = inp
+            x, c_l = _block_decode(cfg, p_l, x, c_l, moe_ffn=moe_ffn)
+            return x, c_l
+
+        x, new_cache[name] = jax.lax.scan(body, x, (params[name], cache[name]))
+    logits = _readout(cfg, params, x)
+    return logits[:, 0], new_cache

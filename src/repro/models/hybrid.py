@@ -1,0 +1,201 @@
+"""Zamba2-style hybrid: groups of Mamba2 layers punctuated by a SHARED
+(weight-tied) attention block (arXiv:2411.15242). The shared block input is
+concat(hidden, original embedding) projected back to d_model.
+
+Structure: G groups x [attn_every mamba2 layers + shared attn invocation],
+then a tail of remaining mamba2 layers. Each shared-block *invocation* has its
+own KV cache (contents differ by depth), but the weights are tied — the
+weight-sharing is what makes this family's checkpoint small relative to its
+depth, and the scan-over-groups keeps the HLO body unique.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import ssd
+from repro.models.decoder import _readout, _rope_fn, _rope_fn_decode
+from repro.models import ssm as ssm_model
+
+
+def _group_shape(cfg):
+    G = cfg.n_layers // cfg.attn_every if cfg.attn_every else 0
+    tail = cfg.n_layers - G * cfg.attn_every
+    return G, tail
+
+
+def _mamba_block_init(cfg, key):
+    return ssm_model._block_init(cfg, key)
+
+
+def _shared_attn_init(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": nnl.linear_init(k1, 2 * cfg.d_model, cfg.d_model),
+        "attn_norm": nnl.rmsnorm_init(cfg.d_model),
+        "attn": attn.attention_init(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim, qkv_bias=cfg.qkv_bias),
+        "ffn_norm": nnl.rmsnorm_init(cfg.d_model),
+        "ffn": nnl.swiglu_init(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def init(cfg, key):
+    G, tail = _group_shape(cfg)
+    k = jax.random.split(key, 6)
+    params = {"embed": nnl.embedding_init(k[0], cfg.vocab_padded, cfg.d_model),
+              "final_norm": nnl.rmsnorm_init(cfg.d_model),
+              "shared": _shared_attn_init(cfg, k[1])}
+    if G:
+        def group_init(gk):
+            return nnl.stacked_init(partial(_mamba_block_init, cfg), gk, cfg.attn_every)
+        params["groups"] = jax.vmap(group_init)(jax.random.split(k[2], G))
+    if tail:
+        params["tail"] = nnl.stacked_init(partial(_mamba_block_init, cfg), k[3], tail)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nnl.linear_init(k[4], cfg.d_model, cfg.vocab_padded)
+    return params
+
+
+def _attn_kw(cfg):
+    return dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, mode="causal", window=None,
+                backend=cfg.attn_backend, chunk=cfg.attn_chunk)
+
+
+def _shared_apply(cfg, p, x, x0, positions, mask_pos):
+    h = nnl.linear(p["in_proj"], jnp.concatenate([x, x0], axis=-1))
+    a = attn.attention_apply(p["attn"], nnl.rmsnorm(p["attn_norm"], h),
+                             mask_pos, rope_fn=_rope_fn(cfg, positions),
+                             **_attn_kw(cfg))
+    h = h + a
+    h = h + nnl.swiglu(p["ffn"], nnl.rmsnorm(p["ffn_norm"], h))
+    return x + h
+
+
+def forward(cfg, params, batch):
+    G, tail = _group_shape(cfg)
+    x = nnl.embedding(params["embed"], batch["tokens"])
+    x0 = x
+    B, S = batch["tokens"].shape
+    mask_pos = jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.broadcast_to(mask_pos[None], (B, S))
+
+    mamba_fn = partial(ssm_model._block_apply, cfg)
+    if cfg.remat:
+        mamba_fn = jax.checkpoint(mamba_fn)
+
+    def inner(x, p_l):
+        return mamba_fn(p_l, x), None
+
+    if G:
+        shared_fn = partial(_shared_apply, cfg, params["shared"])
+        if cfg.remat:
+            shared_fn = jax.checkpoint(shared_fn)
+
+        def group_body(x, g_params):
+            x, _ = jax.lax.scan(inner, x, g_params)
+            x = shared_fn(x, x0, positions, mask_pos)
+            return x, None
+
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if tail:
+        x, _ = jax.lax.scan(inner, x, params["tail"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, params, batch):
+    return ssm_model._shared_loss(cfg, params, batch, forward)
+
+
+def init_cache(cfg, batch, max_len):
+    G, tail = _group_shape(cfg)
+    ssm_one = ssd.init_ssm_cache(batch, cfg.d_model, d_inner=cfg.d_inner,
+                                 headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                                 n_groups=cfg.ssm_ngroups)
+    kv_one = attn.init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"len": jnp.zeros((batch,), jnp.int32)}
+    if G:
+        cache["mamba_groups"] = jax.tree.map(
+            lambda a: jnp.zeros((G, cfg.attn_every) + a.shape, a.dtype), ssm_one)
+        cache["attn"] = jax.tree.map(
+            lambda a: jnp.zeros((G,) + a.shape, a.dtype) + a[None], kv_one)
+    if tail:
+        cache["tail"] = jax.tree.map(
+            lambda a: jnp.zeros((tail,) + a.shape, a.dtype), ssm_one)
+    return cache
+
+
+def prefill(cfg, params, batch, cache):
+    G, tail = _group_shape(cfg)
+    x = nnl.embedding(params["embed"], batch["tokens"])
+    x0 = x
+    B, S = batch["tokens"].shape
+    mask_pos = jnp.arange(S, dtype=jnp.int32)
+    positions = jnp.broadcast_to(mask_pos[None], (B, S))
+    extra = {"positions": positions, "mask_positions": mask_pos}
+    new_cache = {"len": cache["len"] + S}
+
+    def inner(x, inp):
+        p_l, c_l = inp
+        h = nnl.rmsnorm(p_l["norm"], x, eps=cfg.norm_eps)
+        y, c_l = ssm_model._mamba2_apply_with_state(cfg, p_l["mixer"], h, c_l)
+        return x + y, c_l
+
+    if G:
+        def group_body(x, inp):
+            g_params, g_ssm_cache, g_attn_cache = inp
+            x, new_ssm = jax.lax.scan(inner, x, (g_params, g_ssm_cache))
+            p = params["shared"]
+            h = nnl.linear(p["in_proj"], jnp.concatenate([x, x0], axis=-1))
+            a, g_attn_cache = attn.attention_prefill(
+                p["attn"], nnl.rmsnorm(p["attn_norm"], h), mask_pos, g_attn_cache,
+                rope_fn=_rope_fn(cfg, positions), **_attn_kw(cfg))
+            h = h + a
+            h = h + nnl.swiglu(p["ffn"], nnl.rmsnorm(p["ffn_norm"], h))
+            return x + h, (new_ssm, g_attn_cache)
+
+        x, (new_cache["mamba_groups"], new_cache["attn"]) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["mamba_groups"], cache["attn"]))
+    if tail:
+        x, new_cache["tail"] = jax.lax.scan(inner, x, (params["tail"], cache["tail"]))
+    logits = _readout(cfg, params, x[:, -1:, :])
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg, params, cache, tokens):
+    G, tail = _group_shape(cfg)
+    x = nnl.embedding(params["embed"], tokens)
+    x0 = x
+    new_cache = {"len": cache["len"] + 1}
+
+    def inner(x, inp):
+        p_l, c_l = inp
+        x, c_l = ssm_model._block_decode(cfg, p_l, x, c_l)
+        return x, c_l
+
+    if G:
+        def group_body(x, inp):
+            g_params, g_ssm_cache, g_attn_cache = inp
+            x, new_ssm = jax.lax.scan(inner, x, (g_params, g_ssm_cache))
+            p = params["shared"]
+            h = nnl.linear(p["in_proj"], jnp.concatenate([x, x0], axis=-1))
+            a, g_attn_cache = attn.attention_decode(
+                p["attn"], nnl.rmsnorm(p["attn_norm"], h), g_attn_cache,
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, rope_fn=_rope_fn_decode(cfg))
+            h = h + a
+            h = h + nnl.swiglu(p["ffn"], nnl.rmsnorm(p["ffn_norm"], h))
+            return x + h, (new_ssm, g_attn_cache)
+
+        x, (new_cache["mamba_groups"], new_cache["attn"]) = jax.lax.scan(
+            group_body, x, (params["groups"], cache["mamba_groups"], cache["attn"]))
+    if tail:
+        x, new_cache["tail"] = jax.lax.scan(inner, x, (params["tail"], cache["tail"]))
+    logits = _readout(cfg, params, x)
+    return logits[:, 0], new_cache

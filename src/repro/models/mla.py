@@ -1,0 +1,129 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Queries and keys/values are projected through low-rank bottlenecks
+(q_lora / kv_lora). The KV cache stores only the compressed latent c_kv plus
+the shared rotary key k_rope — the MLA memory win. Decode uses the *absorbed*
+formulation (q_nope absorbed through W_uk, output absorbed through W_uv), so
+the full K/V are never materialized at decode time.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import sdpa_chunked, sdpa_full, NEG_INF
+from repro.nn.layers import linear, linear_init, rmsnorm, rmsnorm_init, truncated_normal_init
+from repro.nn.rotary import apply_rope
+
+
+def mla_init(cfg, key, dtype=jnp.bfloat16):
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope_d, v_d = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": linear_init(ks[0], d, cfg.q_lora, dtype=dtype),
+        "q_norm": rmsnorm_init(cfg.q_lora, dtype=dtype),
+        "wuq": linear_init(ks[1], cfg.q_lora, H * (nope + rope_d), dtype=dtype),
+        "wdkv": linear_init(ks[2], d, cfg.kv_lora + rope_d, dtype=dtype),
+        "kv_norm": rmsnorm_init(cfg.kv_lora, dtype=dtype),
+        # stored (kv_lora, H, ·) so the absorbed decode einsums are direct
+        "wuk": truncated_normal_init(ks[3], (cfg.kv_lora, H, nope),
+                                     1.0 / math.sqrt(cfg.kv_lora), dtype),
+        "wuv": truncated_normal_init(ks[4], (cfg.kv_lora, H, v_d),
+                                     1.0 / math.sqrt(cfg.kv_lora), dtype),
+        "wo": linear_init(ks[5], H * v_d, d, dtype=dtype),
+    }
+
+
+def _project_q(cfg, params, x):
+    B, S = x.shape[:2]
+    H, nope, rope_d = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    cq = rmsnorm(params["q_norm"], linear(params["wdq"], x))
+    q = linear(params["wuq"], cq).reshape(B, S, H, nope + rope_d)
+    return q[..., :nope], q[..., nope:]
+
+
+def _project_kv_latent(cfg, params, x):
+    ckv_full = linear(params["wdkv"], x)
+    ckv = rmsnorm(params["kv_norm"], ckv_full[..., :cfg.kv_lora])
+    krope = ckv_full[..., cfg.kv_lora:]  # (B, S, rope_d), shared over heads
+    return ckv, krope
+
+
+def mla_apply(cfg, params, x, positions, *, backend="chunked", chunk=1024):
+    """Full-sequence causal MLA (training / prefill compute)."""
+    B, S = x.shape[:2]
+    H, nope, rope_d, v_d = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(cfg, params, x)
+    ckv, krope = _project_kv_latent(cfg, params, x)
+    k_nope = jnp.einsum("bsl,lhd->bshd", ckv, params["wuk"])
+    v = jnp.einsum("bsl,lhd->bshd", ckv, params["wuv"])
+    q_rope, krope_r = apply_rope(q_rope, krope[:, :, None, :], positions,
+                                 theta=cfg.rope_theta)
+    k_rope = jnp.broadcast_to(krope_r, (B, S, H, rope_d))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope], axis=-1)
+    pos = positions[0] if positions.ndim > 1 else positions
+    from repro.nn.attention import _sdpa
+    out = _sdpa(q, k, v, pos, pos, backend=backend, mode="causal",
+                window=None, chunk=chunk)
+    return linear(params["wo"], out.reshape(B, S, H * v_d))
+
+
+def init_mla_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        "len": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def mla_prefill(cfg, params, x, positions, cache, *, backend="chunked", chunk=1024):
+    out = mla_apply(cfg, params, x, positions, backend=backend, chunk=chunk)
+    ckv, krope = _project_kv_latent(cfg, params, x)
+    # rope the cached k_rope so decode never re-rotates history
+    _, krope_r = apply_rope(krope[:, :, None, :], krope[:, :, None, :], positions,
+                            theta=cfg.rope_theta)
+    S = x.shape[1]
+    cache = dict(cache)
+    cache["ckv"] = cache["ckv"].at[:, :S].set(ckv)
+    cache["krope"] = cache["krope"].at[:, :S].set(krope_r[:, :, 0, :])
+    cache["len"] = cache["len"] + S
+    return out, cache
+
+
+def mla_decode(cfg, params, x_t, cache):
+    """Absorbed one-token decode. x_t: (B, 1, d_model)."""
+    B = x_t.shape[0]
+    H, nope, rope_d, v_d = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _project_q(cfg, params, x_t)  # (B,1,H,·)
+    ckv_t, krope_t = _project_kv_latent(cfg, params, x_t)
+    pos = cache["len"]  # (B,)
+    q_rope, krope_r = apply_rope(q_rope, krope_t[:, :, None, :], pos[:, None],
+                                 theta=cfg.rope_theta)
+
+    slots = cache["ckv"].shape[1]
+    bidx = jnp.arange(B)
+    cache = dict(cache)
+    cache["ckv"] = cache["ckv"].at[bidx, pos].set(ckv_t[:, 0])
+    cache["krope"] = cache["krope"].at[bidx, pos].set(krope_r[:, 0, 0])
+    cache["len"] = pos + 1
+
+    # absorbed scores: q_nope -> latent space once, then dot with cached c_kv
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], params["wuk"])  # (B,H,kv_lora)
+    s_nope = jnp.einsum("bhl,bsl->bhs", q_abs.astype(jnp.float32),
+                        cache["ckv"].astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                        cache["krope"].astype(jnp.float32))
+    scale = 1.0 / math.sqrt(nope + rope_d)
+    s = (s_nope + s_rope) * scale
+    valid = jnp.arange(slots)[None, :] <= pos[:, None]  # (B, slots)
+    s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", p, cache["ckv"].astype(jnp.float32))  # (B,H,kv_lora)
+    out = jnp.einsum("bhl,lhd->bhd", ctx, params["wuv"].astype(jnp.float32))  # (B,H,v_d)
+    out = out.reshape(B, 1, H * v_d).astype(x_t.dtype)
+    return linear(params["wo"], out), cache

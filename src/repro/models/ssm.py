@@ -1,0 +1,150 @@
+"""Pure Mamba2 (SSD) language model — mamba2-1.3b family. Attention-free:
+decode state is O(1) in sequence length, so the long_500k cell runs here."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as nnl
+from repro.nn import ssd
+from repro.models.decoder import _readout  # shared readout/loss plumbing
+
+NEG_INF = -1e30
+
+
+def _ssm_kw(cfg):
+    return dict(headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                n_groups=cfg.ssm_ngroups)
+
+
+def _block_init(cfg, key):
+    return {"norm": nnl.rmsnorm_init(cfg.d_model),
+            "mixer": ssd.mamba2_init(key, cfg.d_model, d_inner=cfg.d_inner,
+                                     headdim=cfg.ssm_headdim,
+                                     d_state=cfg.ssm_state,
+                                     n_groups=cfg.ssm_ngroups)}
+
+
+def _block_apply(cfg, p, x):
+    h = nnl.rmsnorm(p["norm"], x, eps=cfg.norm_eps)
+    ssd_fn = partial(ssd.ssd_chunked, bf16=True) if cfg.ssd_bf16 else None
+    return x + ssd.mamba2_apply(p["mixer"], h, chunk=cfg.ssm_chunk,
+                                ssd_fn=ssd_fn, **_ssm_kw(cfg))
+
+
+def _block_decode(cfg, p, x, cache_l):
+    h = nnl.rmsnorm(p["norm"], x, eps=cfg.norm_eps)
+    y, cache_l = ssd.mamba2_decode(p["mixer"], h, cache_l, **_ssm_kw(cfg))
+    return x + y, cache_l
+
+
+def init(cfg, key):
+    k0, k1, k2 = jax.random.split(key, 3)
+    params = {"embed": nnl.embedding_init(k0, cfg.vocab_padded, cfg.d_model),
+              "final_norm": nnl.rmsnorm_init(cfg.d_model),
+              "layers": nnl.stacked_init(partial(_block_init, cfg), k1, cfg.n_layers)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nnl.linear_init(k2, cfg.d_model, cfg.vocab_padded)
+    return params
+
+
+def forward(cfg, params, batch):
+    x = nnl.embedding(params["embed"], batch["tokens"])
+    fn = partial(_block_apply, cfg)
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+
+    def body(x, p_l):
+        return fn(p_l, x), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return x, jnp.zeros((), jnp.float32)
+
+
+def loss_fn(cfg, params, batch):
+    from repro.models.decoder import loss_fn as _lf  # shared CE path
+    return _shared_loss(cfg, params, batch, forward)
+
+
+def _shared_loss(cfg, params, batch, fwd):
+    x, aux = fwd(cfg, params, batch)
+    logits = _readout(cfg, params, x)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ((logz - ll) * mask).sum() / denom
+    z_loss = cfg.z_loss_coef * ((logz ** 2) * mask).sum() / denom
+    return ce + z_loss + cfg.aux_loss_coef * aux, {"ce": ce, "z_loss": z_loss, "aux": aux}
+
+
+def init_cache(cfg, batch, max_len):
+    one = ssd.init_ssm_cache(batch, cfg.d_model, d_inner=cfg.d_inner,
+                             headdim=cfg.ssm_headdim, d_state=cfg.ssm_state,
+                             n_groups=cfg.ssm_ngroups)
+    return {"layers": jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one),
+        "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(cfg, params, batch, cache):
+    """SSM prefill = run the sequence through per-layer scans capturing final
+    states. We reuse the chunked forward and recompute final states from the
+    decode recurrence on the last tokens of each layer via mamba2_apply's
+    state output — for simplicity states are produced by a per-layer pass."""
+    x = nnl.embedding(params["embed"], batch["tokens"])
+
+    def body(x, inp):
+        p_l, c_l = inp
+        h = nnl.rmsnorm(p_l["norm"], x, eps=cfg.norm_eps)
+        y, new_c = _mamba2_apply_with_state(cfg, p_l["mixer"], h, c_l)
+        return x + y, new_c
+
+    x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    logits = _readout(cfg, params, x[:, -1:, :])
+    return logits[:, 0], {"layers": new_layer_cache,
+                          "len": cache["len"] + batch["tokens"].shape[1]}
+
+
+def _mamba2_apply_with_state(cfg, p, u, cache_l):
+    """mamba2_apply that also returns the final SSD + conv states."""
+    from repro.nn.ssd import _split_zxbcdt, _causal_conv, ssd_chunked
+    d_inner = cfg.d_inner
+    H = d_inner // cfg.ssm_headdim
+    zxbcdt = nnl.linear(p["in_proj"], u)
+    z, xBC, dt = _split_zxbcdt(zxbcdt, d_inner, cfg.ssm_ngroups, cfg.ssm_state, H)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    b, s = u.shape[:2]
+    x = xBC[..., :d_inner].reshape(b, s, H, cfg.ssm_headdim)
+    B = xBC[..., d_inner:d_inner + cfg.ssm_ngroups * cfg.ssm_state].reshape(
+        b, s, cfg.ssm_ngroups, cfg.ssm_state)
+    C = xBC[..., d_inner + cfg.ssm_ngroups * cfg.ssm_state:].reshape(
+        b, s, cfg.ssm_ngroups, cfg.ssm_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(x, dt, A, B, C, chunk=cfg.ssm_chunk,
+                                 bf16=cfg.ssd_bf16)
+    y = y + p["D"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(b, s, d_inner)
+    y = nnl.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = nnl.linear(p["out_proj"], y)
+    return out, {"conv": conv_state, "ssm": final_state}
+
+
+def decode_step(cfg, params, cache, tokens):
+    x = nnl.embedding(params["embed"], tokens)
+
+    def body(x, inp):
+        p_l, c_l = inp
+        x, c_l = _block_decode(cfg, p_l, x, c_l)
+        return x, c_l
+
+    x, new_layer_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    logits = _readout(cfg, params, x)
+    return logits[:, 0], {"layers": new_layer_cache, "len": cache["len"] + 1}

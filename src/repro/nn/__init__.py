@@ -1,0 +1,32 @@
+"""Pure-JAX neural-network substrate: params are pytrees (nested dicts), every
+layer is an (init, apply) pair of functions. No external NN library."""
+
+from repro.nn.layers import (
+    linear_init,
+    linear,
+    embedding_init,
+    embedding,
+    rmsnorm_init,
+    rmsnorm,
+    layernorm_init,
+    layernorm,
+    swiglu_init,
+    swiglu,
+    gelu_mlp_init,
+    gelu_mlp,
+)
+from repro.nn.rotary import (
+    rope_frequencies,
+    apply_rope,
+    apply_partial_rope,
+    apply_mrope,
+)
+from repro.nn.attention import (
+    attention_init,
+    attention_apply,
+    attention_prefill,
+    attention_decode,
+    init_kv_cache,
+)
+from repro.nn.moe import moe_init, moe_apply
+from repro.nn.ssd import mamba2_init, mamba2_apply, mamba2_decode, init_ssm_cache

@@ -1,0 +1,383 @@
+"""Grouped-query attention with pluggable rope, causal / sliding-window /
+full(cross) masking, three backends, and KV-cache prefill/decode paths.
+
+Backends
+  'full'    — materialize (B,H,S,S) scores. Fine for short seq / smoke tests.
+  'chunked' — flash-style online-softmax lax.scan over KV chunks: O(S·C)
+              live memory. This is the XLA-portable twin of the Pallas
+              kernel in repro.kernels.flash_attention and is the default for
+              long sequences (and for the multi-pod dry-run, where Pallas is
+              unavailable on the host platform).
+  'pallas'  — repro.kernels.flash_attention (TPU; interpret=True on CPU).
+
+Shapes: x (B, S, d_model); q (B, S, Hq, D); k/v (B, S, Hkv, D).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear, linear_init
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model, n_heads, n_kv_heads, head_dim, *, qkv_bias=False,
+                   dtype=jnp.bfloat16):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": linear_init(kq, d_model, n_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+        "wk": linear_init(kk, d_model, n_kv_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+        "wv": linear_init(kv, d_model, n_kv_heads * head_dim, use_bias=qkv_bias, dtype=dtype),
+        "wo": linear_init(ko, n_heads * head_dim, d_model, dtype=dtype),
+    }
+
+
+def _project_qkv(params, x, x_kv, n_heads, n_kv_heads, head_dim):
+    B, S = x.shape[:2]
+    Skv = x_kv.shape[1]
+    q = linear(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = linear(params["wk"], x_kv).reshape(B, Skv, n_kv_heads, head_dim)
+    v = linear(params["wv"], x_kv).reshape(B, Skv, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads):
+    """(B,S,Hkv,D) -> (B,S,Hq,D) by repeating each kv head over its group."""
+    B, S, Hkv, D = k.shape
+    rep = n_heads // Hkv
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _mask_bias(q_pos, k_pos, mode, window):
+    """(Sq, Sk) additive bias in fp32. q_pos/k_pos are int32 vectors."""
+    if mode == "full":
+        return None
+    diff = q_pos[:, None] - k_pos[None, :]
+    ok = diff >= 0
+    if mode == "sliding":
+        ok = ok & (diff < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def sdpa_full(q, k, v, q_pos, k_pos, *, mode="causal", window=None, k_len=None):
+    """Materialized softmax(QK^T)V with fp32 accumulation."""
+    n_heads = q.shape[2]
+    k = _repeat_kv(k, n_heads)
+    v = _repeat_kv(v, n_heads)
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32) * scale
+    bias = _mask_bias(q_pos, k_pos, mode, window)
+    if bias is not None:
+        scores = scores + bias[None, None]
+    if k_len is not None:  # decode: mask out unwritten cache slots
+        valid = (k_pos[None, :] < k_len[:, None]).astype(jnp.float32)  # (B, Sk)
+        scores = scores + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def sdpa_chunked(q, k, v, q_pos, k_pos, *, mode="causal", window=None, k_len=None,
+                 chunk=1024):
+    """Flash-style online softmax over KV chunks via lax.scan.
+
+    Keeps O(B·Sq·H·D + B·C·H·D) live memory instead of O(B·H·Sq·Sk).
+    """
+    B, Sq, Hq, D = q.shape
+    Dv = v.shape[-1]  # may differ from D (MLA: q/k 192, v 128)
+    Skv = k.shape[1]
+    chunk = min(chunk, Skv)
+    n_chunks = (Skv + chunk - 1) // chunk
+    pad = n_chunks * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+    k = _repeat_kv(k, Hq).reshape(B, n_chunks, chunk, Hq, k.shape[-1])
+    v = _repeat_kv(v, Hq).reshape(B, n_chunks, chunk, Hq, Dv)
+    k_pos = k_pos.reshape(n_chunks, chunk)
+    scale = 1.0 / math.sqrt(D)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, kp = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kc, preferred_element_type=jnp.float32) * scale
+        bias = _mask_bias(q_pos, kp, mode, window)
+        if bias is not None:
+            s = s + bias[None, None]
+        else:  # 'full' mode: still mask chunk-padding slots (pos == INT32_MAX)
+            padmask = jnp.where(kp == jnp.iinfo(jnp.int32).max, NEG_INF, 0.0)
+            s = s + padmask[None, None, None, :]
+        if k_len is not None:
+            valid = (kp[None, :] < k_len[:, None]).astype(jnp.float32)
+            s = s + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(q.dtype), vc, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, Hq, Sq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0), k_pos))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B,Sq,Hq,D)
+
+
+def _constrain_batch_dim0(x):
+    """Pin dim 0 (batch) to the data-parallel mesh axes. GSPMD's sharding
+    propagation loses the batch sharding through the tri-scan's dynamic block
+    gathers and replicates the whole attention computation (then all-reduces
+    it!) — an explicit constraint keeps it data-parallel. No-op outside a
+    mesh context or when batch doesn't divide the axes."""
+    try:
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.sharding.context import current_mesh
+        mesh = current_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        baxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if not baxes:
+            return x
+        size = 1
+        for a in baxes:
+            size *= mesh.shape[a]
+        if x.shape[0] % size:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(baxes, *([None] * (x.ndim - 1)))))
+    except Exception:
+        return x
+
+
+def sdpa_chunked_tri(q, k, v, q_pos, k_pos, *, mode="causal", window=None,
+                     chunk=1024, probs_dtype=jnp.bfloat16):
+    """Triangular block-chunked flash-style attention (§Perf optimization).
+
+    Both Q and KV are split into C-sized blocks; only block pairs (i, j) that
+    can contain unmasked entries are visited (j <= i for causal; additionally
+    i - j <= ceil(window/C) for sliding window). Compared to sdpa_chunked —
+    which scores the FULL rectangle for every kv chunk — this statically
+    removes ~half the score FLOPs and HBM bytes for causal training/prefill
+    (and ~all but the window band for SWA). The online-softmax update is
+    associative, so per-q-block (m, l, acc) states are carried for all blocks
+    and updated in any pair order via one lax.scan over the pair list.
+
+    Requires contiguous positions from 0 (training/prefill). Self-attention
+    only (Sq == Skv after padding).
+    """
+    B, Sq, Hq, D = q.shape
+    Dv = v.shape[-1]
+    Skv = k.shape[1]
+    C = min(chunk, Sq, Skv)
+    pad_q = (-Sq) % C
+    pad_k = (-Skv) % C
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq = (Sq + pad_q) // C
+    nk = (Skv + pad_k) // C
+    k = _repeat_kv(k, Hq)
+    v = _repeat_kv(v, Hq)
+    qb = _constrain_batch_dim0(q.reshape(B, nq, C, Hq, D))
+    kb = _constrain_batch_dim0(k.reshape(B, nk, C, Hq, D))
+    vb = _constrain_batch_dim0(v.reshape(B, nk, C, Hq, Dv))
+    scale = 1.0 / math.sqrt(D)
+
+    win_blocks = None if window is None else -(-int(window) // C)
+    diag_pairs, off_pairs = [], []
+    for i in range(nq):
+        for j in range(min(i, nk - 1) + 1):
+            if mode in ("causal", "sliding") and j > i:
+                continue
+            if mode == "sliding" and win_blocks is not None and i - j > win_blocks:
+                continue
+            # a pair needs in-block masking only on the diagonal, at the
+            # window boundary, or where kv padding intrudes
+            needs_mask = (i == j
+                          or (mode == "sliding" and window is not None
+                              and (i - j + 1) * C > window)
+                          or (pad_k and j == nk - 1))
+            (diag_pairs if needs_mask else off_pairs).append((i, j))
+
+    m0 = _constrain_batch_dim0(jnp.full((B, Hq, nq, C), NEG_INF, jnp.float32))
+    l0 = _constrain_batch_dim0(jnp.zeros((B, Hq, nq, C), jnp.float32))
+    a0 = _constrain_batch_dim0(jnp.zeros((B, Hq, nq, C, Dv), jnp.float32))
+
+    def make_body(masked):
+        def body(carry, pair):
+            m, l, acc = carry
+            i, j = pair[0], pair[1]
+            qi = _constrain_batch_dim0(
+                jax.lax.dynamic_index_in_dim(qb, i, axis=1, keepdims=False))
+            kj = _constrain_batch_dim0(
+                jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False))
+            vj = _constrain_batch_dim0(
+                jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False))
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kj,
+                           preferred_element_type=jnp.float32) * scale
+            if masked:
+                qpos = i * C + jnp.arange(C)
+                kpos = j * C + jnp.arange(C)
+                diff = qpos[:, None] - kpos[None, :]
+                ok = jnp.bool_(True)
+                if mode in ("causal", "sliding"):
+                    ok = diff >= 0
+                if mode == "sliding" and window is not None:
+                    ok = ok & (diff < window)
+                if pad_k:
+                    ok = ok & (kpos[None, :] < Skv)
+                s = jnp.where(ok[None, None], s, NEG_INF)
+
+            mi = jax.lax.dynamic_index_in_dim(m, i, axis=2, keepdims=False)
+            li = jax.lax.dynamic_index_in_dim(l, i, axis=2, keepdims=False)
+            ai = jax.lax.dynamic_index_in_dim(acc, i, axis=2, keepdims=False)
+            m_new = jnp.maximum(mi, s.max(axis=-1))
+            # probabilities default to bf16 (flash-standard): halves the
+            # O(C^2) HBM traffic; normalizer/accumulator stay fp32
+            p = jnp.exp((s - m_new[..., None]).astype(probs_dtype))
+            if masked:
+                p = jnp.where(m_new[..., None] <= NEG_INF / 2,
+                              jnp.asarray(0.0, probs_dtype), p)
+            corr = jnp.exp(mi - m_new)
+            l_new = li * corr + p.sum(axis=-1, dtype=jnp.float32)
+            a_new = ai * corr[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vj.astype(probs_dtype),
+                preferred_element_type=jnp.float32)
+            m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, axis=2)
+            l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, axis=2)
+            acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, axis=2)
+            return (m, l, acc), None
+        return body
+
+    carry = (m0, l0, a0)
+    if diag_pairs:
+        carry, _ = jax.lax.scan(make_body(True), carry,
+                                jnp.asarray(diag_pairs, jnp.int32))
+    if off_pairs:
+        carry, _ = jax.lax.scan(make_body(False), carry,
+                                jnp.asarray(off_pairs, jnp.int32))
+    (m, l, acc) = carry
+    out = acc / jnp.maximum(l, 1e-37)[..., None]          # (B,H,nq,C,Dv)
+    out = out.reshape(B, Hq, nq * C, Dv)[:, :, :Sq]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)        # (B,Sq,H,Dv)
+
+
+def _sdpa(q, k, v, q_pos, k_pos, *, backend, mode, window, k_len=None, chunk=1024):
+    if backend == "chunked_tri" and k_len is None and mode in ("causal", "sliding"):
+        return sdpa_chunked_tri(q, k, v, q_pos, k_pos, mode=mode,
+                                window=window, chunk=chunk)
+    if backend in ("chunked", "chunked_tri"):
+        return sdpa_chunked(q, k, v, q_pos, k_pos, mode=mode, window=window,
+                            k_len=k_len, chunk=chunk)
+    if backend == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        if k_len is None and mode in ("causal", "sliding"):
+            return fa_ops.flash_attention(q, k, v, q_pos, k_pos,
+                                          causal=True, window=window)
+        # fall through for cross/decode paths the kernel does not cover
+        return sdpa_full(q, k, v, q_pos, k_pos, mode=mode, window=window, k_len=k_len)
+    return sdpa_full(q, k, v, q_pos, k_pos, mode=mode, window=window, k_len=k_len)
+
+
+def attention_apply(params, x, positions, *, n_heads, n_kv_heads, head_dim,
+                    rope_fn=None, mode="causal", window=None, backend="full",
+                    x_kv=None, kv_positions=None, chunk=1024):
+    """Self- or cross-attention over a full sequence (training / encoding)."""
+    x_kv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(params, x, x_kv, n_heads, n_kv_heads, head_dim)
+    kv_positions = positions if kv_positions is None else kv_positions
+    if rope_fn is not None:
+        q, k = rope_fn(q, k)
+    q_pos = positions[0] if positions.ndim > 1 else positions
+    k_pos = kv_positions[0] if kv_positions.ndim > 1 else kv_positions
+    out = _sdpa(q, k, v, q_pos, k_pos, backend=backend, mode=mode, window=window,
+                chunk=chunk)
+    B, S = x.shape[:2]
+    return linear(params["wo"], out.reshape(B, S, n_heads * head_dim))
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode). For sliding-window attention the cache is a ring buffer
+# of ``window`` slots; otherwise it holds max_len slots.
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch, max_len, n_kv_heads, head_dim, *, window=None,
+                  dtype=jnp.bfloat16):
+    slots = min(max_len, window) if window else max_len
+    return {
+        "k": jnp.zeros((batch, slots, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, slots, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, slots), -1, jnp.int32),  # absolute position per slot
+        "len": jnp.zeros((batch,), jnp.int32),           # tokens seen so far
+    }
+
+
+def attention_prefill(params, x, positions, cache, **kw):
+    """Run full-sequence attention and populate the cache with the last
+    ``slots`` keys/values. Returns (output, cache)."""
+    n_heads, n_kv_heads, head_dim = kw["n_heads"], kw["n_kv_heads"], kw["head_dim"]
+    q, k, v = _project_qkv(params, x, x, n_heads, n_kv_heads, head_dim)
+    if kw.get("rope_fn") is not None:
+        q, k = kw["rope_fn"](q, k)
+    q_pos = positions[0] if positions.ndim > 1 else positions
+    out = _sdpa(q, k, v, q_pos, q_pos, backend=kw.get("backend", "chunked"),
+                mode=kw.get("mode", "causal"), window=kw.get("window"),
+                chunk=kw.get("chunk", 1024))
+    B, S = x.shape[:2]
+    slots = cache["k"].shape[1]
+    take = min(S, slots)
+    idx = (q_pos[-take:] % slots) if kw.get("window") else jnp.arange(take)
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, idx].set(k[:, -take:])
+    cache["v"] = cache["v"].at[:, idx].set(v[:, -take:])
+    cache["pos"] = cache["pos"].at[:, idx].set(q_pos[None, -take:])
+    cache["len"] = cache["len"] + S
+    return linear(params["wo"], out.reshape(B, S, n_heads * head_dim)), cache
+
+
+def attention_decode(params, x, cache, *, n_heads, n_kv_heads, head_dim,
+                     rope_fn=None, window=None, backend="full", chunk=1024):
+    """One-token decode step. x: (B, 1, d_model). Returns (out, cache)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, x, n_heads, n_kv_heads, head_dim)
+    pos = cache["len"]  # (B,) absolute position of the new token
+    if rope_fn is not None:
+        q, k = rope_fn(q, k, pos[:, None])
+    slots = cache["k"].shape[1]
+    slot = (pos % slots) if window else jnp.minimum(pos, slots - 1)
+    cache = dict(cache)
+    bidx = jnp.arange(B)
+    cache["k"] = cache["k"].at[bidx, slot].set(k[:, 0])
+    cache["v"] = cache["v"].at[bidx, slot].set(v[:, 0])
+    cache["pos"] = cache["pos"].at[bidx, slot].set(pos)
+    cache["len"] = pos + 1
+
+    kc, vc = cache["k"], cache["v"]
+    kc = _repeat_kv(kc, n_heads)
+    vc = _repeat_kv(vc, n_heads)
+    scale = 1.0 / math.sqrt(head_dim)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kc, preferred_element_type=jnp.float32) * scale
+    # validity: slot written (pos >= 0), within window if sliding
+    kpos = cache["pos"]  # (B, slots)
+    ok = kpos >= 0
+    ok = ok & (kpos <= pos[:, None])
+    if window:
+        ok = ok & (pos[:, None] - kpos < window)
+    s = s + jnp.where(ok, 0.0, NEG_INF)[:, None, None, :]
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vc)
+    return linear(params["wo"], out.reshape(B, 1, n_heads * head_dim)), cache

@@ -1,0 +1,146 @@
+"""Core layers. Convention: params are nested dicts of jnp arrays; weights are
+stored in ``param_dtype`` (bf16 by default), norms accumulate in fp32.
+
+Weight-name conventions matter: the sharding layer (repro.sharding.rules) maps
+parameter *names* to PartitionSpecs, so every matrix here uses a stable name:
+  'w'      generic (d_in, d_out)
+  'embed'  (vocab, d_model)
+  'scale'  norm scales (d,)
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_PARAM_DTYPE = jnp.bfloat16
+
+
+def truncated_normal_init(key, shape, stddev, dtype):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in, d_out, *, use_bias=False, dtype=DEFAULT_PARAM_DTYPE, stddev=None):
+    stddev = stddev if stddev is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": truncated_normal_init(key, (d_in, d_out), stddev, dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(params, x):
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab, d_model, *, dtype=DEFAULT_PARAM_DTYPE):
+    # 1/sqrt(d) keeps the tied readout's logits O(1) at init
+    return {"embed": truncated_normal_init(key, (vocab, d_model),
+                                           1.0 / math.sqrt(d_model), dtype)}
+
+
+def embedding(params, tokens):
+    return params["embed"][tokens]
+
+
+def embedding_logits(params, x):
+    """Tied read-out: x @ embed.T (accumulate in fp32 for the softmax)."""
+    return jnp.einsum("...d,vd->...v", x, params["embed"], preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Norms (fp32 accumulation)
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, *, dtype=DEFAULT_PARAM_DTYPE):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, *, dtype=DEFAULT_PARAM_DTYPE):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, *, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model, d_ff, *, dtype=DEFAULT_PARAM_DTYPE):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": linear_init(k1, d_model, d_ff, dtype=dtype),
+        "up": linear_init(k2, d_model, d_ff, dtype=dtype),
+        "down": linear_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(linear(params["gate"], x))
+    return linear(params["down"], g * linear(params["up"], x))
+
+
+def gelu_mlp_init(key, d_model, d_ff, *, use_bias=True, dtype=DEFAULT_PARAM_DTYPE):
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": linear_init(k1, d_model, d_ff, use_bias=use_bias, dtype=dtype),
+        "down": linear_init(k2, d_ff, d_model, use_bias=use_bias, dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    return linear(params["down"], jax.nn.gelu(linear(params["up"], x)))
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer helpers (scan over layers)
+# ---------------------------------------------------------------------------
+
+def stacked_init(init_fn, key, n_layers):
+    """vmap an init function over a leading layer axis so the whole stack can
+    be consumed by lax.scan (compiles the block body once)."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+def scan_layers(block_fn, x, stacked_params, *, remat=False, extra=None):
+    """Run ``x`` through a stack of identical blocks via lax.scan.
+
+    block_fn(params_l, x, extra) -> x. ``extra`` is closed-over loop-invariant
+    state (e.g. rope tables, masks).
+    """
+    fn = block_fn
+    if remat:
+        fn = jax.checkpoint(block_fn)
+
+    def body(carry, params_l):
+        return fn(params_l, carry, extra), None
+
+    y, _ = jax.lax.scan(body, x, stacked_params)
+    return y

@@ -1,0 +1,138 @@
+"""Capacity-based top-k Mixture-of-Experts with scatter dispatch.
+
+Design notes (why this formulation):
+  * FLOP-faithful: expert GEMMs run over (E, C, ·) buffers with
+    C = ceil(N·k/E · capacity_factor), so compiled FLOPs scale with the
+    *active* parameter count (times the capacity factor), matching how a real
+    MoE runs — a compute-all-experts formulation would inflate the roofline
+    compute term by E/k.
+  * Shardable: the expert buffer is (E, C, d). E shards over the 'model' axis
+    (expert parallelism, deepseek-v2 style 160 experts / 16) or stays
+    replicated with d_ff sharded over 'model' (tensor parallelism, mixtral
+    style 8 experts < 16 axis size). The token->buffer scatter becomes a
+    GSPMD all-to-all/gather — exactly the dispatch collective a real MoE pays.
+  * Tokens that overflow an expert's capacity are dropped (standard
+    Switch/GShard semantics); a garbage slot C catches them so shapes stay
+    static. ``capacity_factor`` >= E/k disables dropping (used by the oracle
+    tests).
+
+Returns the layer output plus the load-balancing auxiliary loss
+(Switch-style: E * sum_e f_e * P_e).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear_init, swiglu_init, swiglu, truncated_normal_init
+
+
+def moe_init(key, d_model, d_ff, n_experts, *, n_shared=0, d_ff_shared=None,
+             dtype=jnp.bfloat16):
+    kr, ke, ks = jax.random.split(key, 3)
+    kg, ku, kd = jax.random.split(ke, 3)
+    std_in = 1.0 / math.sqrt(d_model)
+    std_out = 1.0 / math.sqrt(d_ff)
+    params = {
+        # router in fp32 — routing logits are precision-sensitive
+        "router": {"w": truncated_normal_init(kr, (d_model, n_experts), std_in, jnp.float32)},
+        "experts": {
+            "gate": truncated_normal_init(kg, (n_experts, d_model, d_ff), std_in, dtype),
+            "up": truncated_normal_init(ku, (n_experts, d_model, d_ff), std_in, dtype),
+            "down": truncated_normal_init(kd, (n_experts, d_ff, d_model), std_out, dtype),
+        },
+    }
+    if n_shared:
+        params["shared"] = swiglu_init(ks, d_model, (d_ff_shared or d_ff) * n_shared, dtype=dtype)
+    return params
+
+
+def _expert_ffn(experts, buf):
+    """buf: (E, C, d) -> (E, C, d) through per-expert SwiGLU via grouped einsum."""
+    g = jnp.einsum("ecd,edf->ecf", buf, experts["gate"])
+    u = jnp.einsum("ecd,edf->ecf", buf, experts["up"])
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, experts["down"])
+
+
+def moe_apply(params, x, *, top_k, capacity_factor=1.25, normalize_weights=True,
+              router_noise=0.0, rng=None):
+    """x: (B, S, d). Returns (y, aux_loss)."""
+    B, S, d = x.shape
+    E = params["router"]["w"].shape[1]
+    N = B * S
+    xf = x.reshape(N, d)
+
+    logits = xf.astype(jnp.float32) @ params["router"]["w"]  # (N, E)
+    if router_noise and rng is not None:
+        logits = logits + router_noise * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)  # (N, k)
+    if normalize_weights:
+        top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    C = int(math.ceil(N * top_k / E * capacity_factor))
+    buf = jnp.zeros((E, C + 1, d), x.dtype)  # slot C = overflow garbage
+
+    counts = jnp.zeros((E,), jnp.int32)
+    slot_of = []
+    for j in range(top_k):
+        e = top_idx[:, j]  # (N,)
+        onehot = jax.nn.one_hot(e, E, dtype=jnp.int32)  # (N, E)
+        within = jnp.cumsum(onehot, axis=0) - onehot  # rank among this slot's tokens
+        pos = jnp.take_along_axis(within, e[:, None], axis=1)[:, 0] + counts[e]
+        counts = counts + onehot.sum(axis=0)
+        slot = jnp.where(pos < C, pos, C)
+        buf = buf.at[e, slot].add(xf)
+        slot_of.append((e, slot))
+
+    out_buf = _expert_ffn(params["experts"], buf[:, :C])
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((E, 1, d), out_buf.dtype)], axis=1)
+
+    y = jnp.zeros((N, d), jnp.float32)
+    for j in range(top_k):
+        e, slot = slot_of[j]
+        kept = (slot < C).astype(jnp.float32)
+        y = y + (top_vals[:, j] * kept)[:, None] * out_buf[e, slot].astype(jnp.float32)
+
+    if "shared" in params:
+        y = y + swiglu(params["shared"], xf).astype(jnp.float32)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.zeros((E,), jnp.float32)
+    for j in range(top_k):
+        frac_tokens = frac_tokens + jnp.bincount(top_idx[:, j], length=E).astype(jnp.float32)
+    frac_tokens = frac_tokens / (N * top_k)
+    mean_probs = probs.mean(axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_apply_dense_reference(params, x, *, top_k, normalize_weights=True):
+    """Oracle: run every expert on every token, mask by router choice.
+    O(E/k) more FLOPs — tests only."""
+    B, S, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ params["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, top_k)
+    if normalize_weights:
+        top_vals = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+    # (E, N, d) all-experts output
+    g = jnp.einsum("nd,edf->enf", xf, params["experts"]["gate"])
+    u = jnp.einsum("nd,edf->enf", xf, params["experts"]["up"])
+    h = jax.nn.silu(g) * u
+    all_out = jnp.einsum("enf,efd->end", h, params["experts"]["down"])
+    y = jnp.zeros_like(xf, dtype=jnp.float32)
+    for j in range(top_k):
+        sel = jnp.take_along_axis(
+            jnp.moveaxis(all_out, 0, 1), top_idx[:, j][:, None, None], axis=1
+        )[:, 0]  # (N, d)
+        y = y + top_vals[:, j][:, None] * sel.astype(jnp.float32)
+    if "shared" in params:
+        y = y + swiglu(params["shared"], xf).astype(jnp.float32)
+    return y.reshape(B, S, d).astype(x.dtype)

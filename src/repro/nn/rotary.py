@@ -1,0 +1,75 @@
+"""Rotary position embeddings: standard (llama), partial (chatglm3 applies
+rotary to half of the head dim), and M-RoPE (qwen2-vl: the head dim is split
+into temporal/height/width sections, each rotated by its own position id).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_frequencies(head_dim, *, theta=10000.0, dtype=jnp.float32):
+    """inv_freq over the (even) rotary dim."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=dtype) / head_dim))
+
+
+def _rotate(x, cos, sin):
+    # x: (..., d) with d even; rotate pairs (x1, x2) -> (x1 cos - x2 sin, x2 cos + x1 sin)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _cos_sin(positions, inv_freq, dtype):
+    # positions: (B, S) -> cos/sin: (B, S, 1, d/2)
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (B, S, d/2)
+    return jnp.cos(ang)[:, :, None, :].astype(dtype), jnp.sin(ang)[:, :, None, :].astype(dtype)
+
+
+def apply_rope(q, k, positions, *, theta=10000.0):
+    """Standard RoPE. q: (B,S,Hq,D), k: (B,S,Hk,D), positions: (B,S)."""
+    inv_freq = rope_frequencies(q.shape[-1], theta=theta)
+    cos, sin = _cos_sin(positions, inv_freq, q.dtype)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def apply_partial_rope(q, k, positions, *, fraction=0.5, theta=10000.0):
+    """ChatGLM3-style: rotary on the first ``fraction`` of the head dim only."""
+    d = q.shape[-1]
+    rot = int(d * fraction)
+    inv_freq = rope_frequencies(rot, theta=theta)
+    cos, sin = _cos_sin(positions, inv_freq, q.dtype)
+    q_rot, q_pass = q[..., :rot], q[..., rot:]
+    k_rot, k_pass = k[..., :rot], k[..., rot:]
+    return (
+        jnp.concatenate([_rotate(q_rot, cos, sin), q_pass], axis=-1),
+        jnp.concatenate([_rotate(k_rot, cos, sin), k_pass], axis=-1),
+    )
+
+
+def apply_mrope(q, k, positions_thw, *, sections=(16, 24, 24), theta=1000000.0):
+    """Qwen2-VL M-RoPE. ``positions_thw``: (3, B, S) temporal/height/width ids.
+
+    ``sections`` are half-dim section sizes (t, h, w); sum == head_dim // 2.
+    Each frequency band takes its position id from the section it falls in.
+    """
+    d = q.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    inv_freq = rope_frequencies(d, theta=theta)  # (d/2,)
+    # section id per frequency: 0 (t), 1 (h), 2 (w)
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=d // 2
+    )  # (d/2,)
+    # gather per-frequency positions: (B, S, d/2)
+    pos = jnp.take(positions_thw, sec_id, axis=0)  # (d/2 picks over axis0) -> (d/2, B, S)
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)  # (B, S, d/2)
+    ang = pos * inv_freq  # (B, S, d/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(q.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(q.dtype)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def text_mrope_positions(batch, seq, offset=0):
+    """For pure-text inputs all three M-RoPE sections share the token index."""
+    p = jnp.arange(offset, offset + seq, dtype=jnp.int32)[None, :].repeat(batch, 0)
+    return jnp.broadcast_to(p[None], (3, batch, seq))

@@ -1,0 +1,209 @@
+"""Mamba2 block built on SSD (state-space duality, arXiv:2405.21060).
+
+The chunked SSD computation here (``ssd_chunked``) is the pure-jnp oracle —
+repro.kernels.ssd_scan provides the Pallas TPU kernel with the same
+signature. Layout follows the minimal-SSD reference: sequences are split into
+chunks; within a chunk the computation is a masked attention-like quadratic
+form (MXU-friendly), across chunks a tiny state recurrence runs as lax.scan.
+
+Shapes: u (B, S, d_model); heads H with head dim P (d_inner = H*P); state dim
+N; G B/C groups (broadcast over heads).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import linear, linear_init, rmsnorm, rmsnorm_init, truncated_normal_init
+
+
+def segsum(x):
+    """Stable 'segment sum': out[..., i, j] = sum_{k=j+1..i} x[..., k] for
+    i >= j, -inf otherwise. x: (..., L) -> (..., L, L)."""
+    L = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    diff = xc[..., :, None] - xc[..., None, :]  # (..., L, L): sum (j, i]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk=128, bf16=False):
+    """SSD forward. x:(b,s,h,p) dt:(b,s,h) A:(h,) B,C:(b,s,g,n). Returns
+    (y:(b,s,h,p), final_state:(b,h,p,n)). State math stays fp32; with
+    ``bf16`` the O(S*chunk) intra-chunk tensors (scores, decay mask, xdt)
+    are bf16 — halves the dominant HBM traffic (§Perf lever)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    pad = (-s) % chunk
+    if pad:  # dt=0 padding is exact: zero state update, unit decay
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_pad = s + pad
+    nc = s_pad // chunk
+    rep = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = jnp.repeat(B.reshape(b, nc, chunk, g, n), rep, axis=3)  # (b,nc,l,h,n)
+    Cc = jnp.repeat(C.reshape(b, nc, chunk, g, n), rep, axis=3)
+
+    dA = dtc * A.astype(jnp.float32)  # (b,nc,l,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # 1) intra-chunk (diagonal blocks): attention-like masked quadratic form
+    cdt = jnp.bfloat16 if bf16 else jnp.float32
+    L = jnp.exp(segsum(jnp.moveaxis(dA, -1, -2))).astype(cdt)  # (b,nc,h,l,l)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cc.astype(cdt), Bc.astype(cdt),
+                        preferred_element_type=cdt)
+    gated = scores * L  # (b,nc,h,l,l), lower-triangular
+    xdt = (xc.astype(jnp.float32) * dtc[..., None]).astype(cdt)  # (b,nc,l,h,p)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", gated, xdt,
+                        preferred_element_type=jnp.float32)
+
+    # 2) per-chunk end states
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,l,h)
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Bc, decay_states * dtc, xc.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # (b,nc,h)
+
+    def body(hstate, inp):
+        st, dec = inp  # (b,h,p,n), (b,h)
+        h_out = hstate  # state entering the chunk
+        hstate = hstate * dec[..., None, None] + st
+        return hstate, h_out
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, h_prev = jax.lax.scan(
+        body, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)  # (b,nc,h,p,n) state entering each chunk
+
+    # 4) inter-chunk contribution to outputs
+    state_decay = jnp.exp(dA_cum)  # (b,nc,l,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc, h_prev, state_decay,
+                       preferred_element_type=jnp.float32)
+
+    y = (y_diag + y_off).reshape(b, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrence. state:(b,h,p,n), x_t:(b,h,p), dt_t:(b,h),
+    B_t/C_t:(b,g,n). Returns (y_t:(b,h,p), new_state)."""
+    h, g = x_t.shape[1], B_t.shape[1]
+    rep = h // g
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(jnp.float32)  # (b,h,n)
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(jnp.float32)
+    dtf = dt_t.astype(jnp.float32)
+    dA = jnp.exp(dtf * A.astype(jnp.float32))  # (b,h)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtf, x_t.astype(jnp.float32), Bh)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x_t.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, d_model, *, d_inner=None, headdim=64, d_state=128,
+                n_groups=1, d_conv=4, dtype=jnp.bfloat16):
+    d_inner = d_inner or 2 * d_model
+    H = d_inner // headdim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + H
+    return {
+        "in_proj": linear_init(k1, d_model, d_in_proj, dtype=dtype),
+        "conv_w": truncated_normal_init(k2, (d_conv, conv_ch), 1.0 / math.sqrt(d_conv), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((H,), 0.01))).astype(jnp.float32),
+        "norm": rmsnorm_init(d_inner, dtype=dtype),
+        "out_proj": linear_init(k3, d_inner, d_model, dtype=dtype),
+    }
+
+
+def _split_zxbcdt(z_xbc_dt, d_inner, n_groups, d_state, H):
+    z = z_xbc_dt[..., :d_inner]
+    xBC = z_xbc_dt[..., d_inner:2 * d_inner + 2 * n_groups * d_state]
+    dt = z_xbc_dt[..., -H:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, *, state=None):
+    """Depthwise causal conv1d. xBC: (B,S,ch); conv_w: (W,ch).
+    If ``state`` (B,W-1,ch) is given, prepend it (decode path)."""
+    W = conv_w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], W - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xBC], axis=1)  # (B, S+W-1, ch)
+    out = sum(xp[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):]
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def mamba2_apply(params, u, *, headdim=64, d_state=128, n_groups=1, chunk=128,
+                 ssd_fn=None):
+    """Full-sequence forward. u: (B,S,d_model) -> (B,S,d_model)."""
+    d_inner = params["out_proj"]["w"].shape[0]
+    H = d_inner // headdim
+    zxbcdt = linear(params["in_proj"], u)
+    z, xBC, dt = _split_zxbcdt(zxbcdt, d_inner, n_groups, d_state, H)
+    xBC, _ = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    x = xBC[..., :d_inner]
+    B = xBC[..., d_inner:d_inner + n_groups * d_state]
+    C = xBC[..., d_inner + n_groups * d_state:]
+    b, s = u.shape[:2]
+    x = x.reshape(b, s, H, headdim)
+    B = B.reshape(b, s, n_groups, d_state)
+    C = C.reshape(b, s, n_groups, d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    fn = ssd_fn or ssd_chunked
+    y, _ = fn(x, dt, A, B, C, chunk=chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * x
+    y = y.reshape(b, s, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return linear(params["out_proj"], y)
+
+
+def init_ssm_cache(batch, d_model, *, d_inner=None, headdim=64, d_state=128,
+                   n_groups=1, d_conv=4, dtype=jnp.bfloat16):
+    d_inner = d_inner or 2 * d_model
+    H = d_inner // headdim
+    conv_ch = d_inner + 2 * n_groups * d_state
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, H, headdim, d_state), jnp.float32),
+    }
+
+
+def mamba2_decode(params, u_t, cache, *, headdim=64, d_state=128, n_groups=1):
+    """One-token step. u_t: (B,1,d_model). Returns (y_t, cache)."""
+    d_inner = params["out_proj"]["w"].shape[0]
+    H = d_inner // headdim
+    zxbcdt = linear(params["in_proj"], u_t)
+    z, xBC, dt = _split_zxbcdt(zxbcdt, d_inner, n_groups, d_state, H)
+    xBC, conv_state = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                                   state=cache["conv"])
+    b = u_t.shape[0]
+    x = xBC[:, 0, :d_inner].reshape(b, H, headdim)
+    B = xBC[:, 0, d_inner:d_inner + n_groups * d_state].reshape(b, n_groups, d_state)
+    C = xBC[:, 0, d_inner + n_groups * d_state:].reshape(b, n_groups, d_state)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (b,H)
+    A = -jnp.exp(params["A_log"])
+    y, ssm_state = ssd_decode_step(cache["ssm"], x, dt, A, B, C)
+    y = y + params["D"].astype(y.dtype)[None, :, None] * x
+    y = y.reshape(b, 1, d_inner)
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return linear(params["out_proj"], y), {"conv": conv_state, "ssm": ssm_state}

@@ -1,0 +1,18 @@
+"""LR schedules as jnp-friendly callables of the (int32) step."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, *, peak_lr, warmup_steps):
+    s = step.astype(jnp.float32)
+    return peak_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, *, peak_lr, warmup_steps, total_steps, min_ratio=0.1):
+    s = step.astype(jnp.float32)
+    warm = (s + 1.0) / max(warmup_steps, 1)
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup_steps, warm, cos)

@@ -1,0 +1,8 @@
+from repro.runtime.ft import (
+    HeartbeatRegistry,
+    StragglerDetector,
+    FaultTolerantTrainer,
+    WorkerFailure,
+)
+from repro.runtime.elastic import reshard_state, elastic_mesh
+from repro.runtime.compress import make_int8_compressor, int8_roundtrip_error

@@ -1,0 +1,59 @@
+"""Gradient compression for the cross-pod reduction hop.
+
+int8 quantize->dequantize with per-leaf (per-tensor) symmetric scale. Applied
+to grads before the optimizer, it models the wire format of a compressed
+cross-pod all-reduce: on deployment the psum runs over the int8 payload +
+fp32 scale (4x fewer bytes over the pod interconnect — the §Perf lever for
+collective-bound cells); in-graph we verify the accuracy cost instead, since
+the dry-run's intra-program collectives are inserted by GSPMD.
+
+``error_feedback=True`` returns a stateful host-side wrapper that carries the
+quantization residual into the next step (EF-SGD), which empirically removes
+most of the convergence penalty.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _qdq(g):
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return (q.astype(jnp.float32) * scale).astype(g.dtype), scale
+
+
+def quantize_dequantize_int8(grads):
+    return jax.tree.map(lambda g: _qdq(g)[0], grads)
+
+
+def int8_roundtrip_error(grads):
+    """Relative L2 error of the int8 round trip (diagnostics/tests)."""
+    def err(g):
+        gf = g.astype(jnp.float32)
+        dq, _ = _qdq(g)
+        return jnp.sum((gf - dq.astype(jnp.float32)) ** 2), jnp.sum(gf ** 2)
+    pairs = [err(g) for g in jax.tree.leaves(grads)]
+    num = sum(p[0] for p in pairs)
+    den = sum(p[1] for p in pairs)
+    return jnp.sqrt(num / jnp.maximum(den, 1e-30))
+
+
+def make_int8_compressor(*, error_feedback=False):
+    """Returns compress_fn(grads)->grads. With error_feedback, a host-side
+    residual buffer is carried across calls (driver-loop usage)."""
+    if not error_feedback:
+        return quantize_dequantize_int8
+
+    state = {"residual": None}
+
+    def compress(grads):
+        if state["residual"] is not None:
+            grads = jax.tree.map(lambda g, r: g + r, grads, state["residual"])
+        out = jax.tree.map(lambda g: _qdq(g)[0], grads)
+        state["residual"] = jax.tree.map(lambda g, o: g - o, grads, out)
+        return out
+
+    return compress

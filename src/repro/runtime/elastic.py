@@ -1,0 +1,40 @@
+"""Elastic scaling: checkpoints are addressed by tree path, not device
+layout, so a state saved on one mesh restores onto another — grow/shrink the
+'data' axis (or drop a pod) and continue. What changes is only the
+NamedSharding each leaf is device_put with."""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def elastic_mesh(n_devices=None, *, model_axis=None):
+    """Largest (data, model) mesh for the currently-available devices.
+    model_axis defaults to min(16, n_devices)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    model = model_axis or min(16, n)
+    while n % model:
+        model -= 1
+    data = n // model
+    return Mesh(np.array(devs[:data * model]).reshape(data, model),
+                ("data", "model"))
+
+
+def reshard_state(state, cfg, new_mesh, *, fsdp_over_pod=False):
+    """Re-lay a (host or device) state pytree onto ``new_mesh`` using the
+    arch's sharding rules. This is the elastic re-mesh restore path."""
+    from repro.sharding import param_specs, to_shardings
+    from jax.sharding import PartitionSpec as P
+
+    pspecs = param_specs(cfg, state["params"], new_mesh,
+                         fsdp_over_pod=fsdp_over_pod)
+    spec = {"params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": P()}}
+    shardings = to_shardings(new_mesh, spec)
+    return jax.device_put(state, shardings)

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (
+    param_specs,
+    cache_specs,
+    batch_specs,
+    opt_specs,
+    to_shardings,
+    batch_axes_for,
+)

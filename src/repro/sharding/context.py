@@ -1,0 +1,23 @@
+"""Active-mesh context: lets mesh-agnostic nn code (e.g. the triangular
+attention's batch-sharding constraints) build NamedShardings during tracing.
+jax.sharding.get_mesh() is unavailable inside jit, so the launch layer sets
+this around lowering."""
+
+from __future__ import annotations
+
+import contextlib
+
+_ACTIVE = []
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh):
+    _ACTIVE.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.pop()
+
+
+def current_mesh():
+    return _ACTIVE[-1] if _ACTIVE else None

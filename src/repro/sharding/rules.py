@@ -1,0 +1,233 @@
+"""Logical sharding rules: parameter/cache/batch pytrees -> PartitionSpecs.
+
+Profiles
+  'dp'      — replicate params, shard batch only.
+  'fsdp'    — shard each parameter's largest divisible dim over 'data'
+              (ZeRO-3 style). Used when head counts don't divide the TP axis
+              (smollm's 9 heads).
+  'fsdp_tp' — name-based table: d_model dims shard over 'data' (FSDP),
+              head/ffn/vocab dims over 'model' (TP); MoE experts shard over
+              'model' when the expert count divides it (EP), otherwise the
+              per-expert d_ff shards (TP inside each expert).
+
+Every rule is guarded by divisibility: a dim that doesn't divide its mesh
+axis falls back to None (replicated) rather than failing — GSPMD correctness
+is preserved, efficiency is a hillclimb knob.
+
+The 'pod' axis (multi-pod mesh) carries pure data parallelism at baseline:
+params/opt replicate across pods, batch shards over ('pod', 'data').
+``fsdp_over_pod=True`` additionally folds 'pod' into the FSDP axis for
+params+optimizer (a §Perf lever for memory-bound cells).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# top-level param/cache keys that carry stacked leading dims
+_STACK1 = {"layers", "dense_layers", "tail", "enc_layers", "dec_layers",
+           "self", "attn", "mamba_groups", "cross_k", "cross_v"}
+_STACK2 = {"groups"}  # (G, attn_every, ...)
+
+
+def _nstack(path):
+    head = path[0]
+    if head in _STACK2:
+        return 2
+    if head == "mamba_groups":
+        return 2
+    if head in _STACK1:
+        return 1
+    return 0
+
+
+def _key_names(path):
+    out = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            out.append(p.name)
+        else:
+            out.append(str(p))
+    return out
+
+
+def batch_axes_for(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _div(n, mesh, axis):
+    if axis is None:
+        return True
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def _guard(spec_dims, shape, mesh):
+    out = []
+    for dim, ax in zip(shape, spec_dims):
+        out.append(ax if (ax is not None and _div(dim, mesh, ax)) else None)
+    return tuple(out)
+
+
+def _fsdp_spec(shape, mesh, fsdp_axis):
+    """Shard the largest divisible dim over the FSDP axis."""
+    if not shape:
+        return ()
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if shape[i] >= 2 and _div(shape[i], mesh, fsdp_axis):
+            return tuple(fsdp_axis if j == i else None for j in range(len(shape)))
+    return (None,) * len(shape)
+
+
+def _tp_table(cfg, names, shape, mesh, fsdp_axis):
+    """fsdp_tp rules. ``names`` = path key names; match on parent/leaf."""
+    leaf = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    d, m = fsdp_axis, "model"
+
+    if leaf == "embed":
+        return (m, d)
+    if parent == "lm_head":
+        return (d, m)
+    # attention projections
+    if parent in ("wq", "wuq"):
+        return (d, m) if leaf == "w" else (m,)
+    if parent in ("wk", "wv"):
+        want = (d, m) if cfg.n_kv_heads and cfg.n_kv_heads % mesh.shape["model"] == 0 else (d, None)
+        return want if leaf == "w" else (None,)
+    if parent == "wo":
+        return (m, d) if leaf == "w" else (None,)
+    if parent in ("wdq", "wdkv"):
+        return (d, None) if leaf == "w" else (None,)
+    if leaf in ("wuk", "wuv"):
+        return (None, m, None)
+    # FFN
+    if parent in ("gate", "up", "in_proj"):
+        return (d, m) if leaf == "w" else (m,)
+    if parent == "down":
+        return (m, d) if leaf == "w" else (None,)
+    if parent == "out_proj":
+        return (m, d) if leaf == "w" else (None,)
+    # MoE experts: (E, d_model, d_ff) / (E, d_ff, d_model)
+    if parent == "experts":
+        mode = getattr(cfg, "moe_expert_sharding", "auto")
+        ep = cfg.n_experts % mesh.shape["model"] == 0 and mode != "tp"
+        if mode == "ep" and cfg.n_experts % mesh.shape["model"] != 0:
+            ep = False  # can't honor: fall back to tp
+        if leaf in ("gate", "up"):
+            return (m, d, None) if ep else (None, d, m)
+        if leaf == "down":
+            return (m, None, d) if ep else (None, m, d)
+    if parent == "router":
+        return (None, None)
+    if leaf in ("conv_w", "conv_b"):
+        return (None, m) if leaf == "conv_w" else (m,)
+    return None  # fall through to fsdp heuristic
+
+
+def param_specs(cfg, params_tree, mesh, *, fsdp_over_pod=False):
+    """PartitionSpec pytree for params (or same-structured grads / opt m,v)."""
+    fsdp_axis = ("pod", "data") if (fsdp_over_pod and "pod" in mesh.axis_names) else "data"
+
+    def spec(path, leaf):
+        names = _key_names(path)
+        ns = _nstack(names)
+        base = leaf.shape[ns:]
+        dims = None
+        if cfg.sharding_profile == "dp":
+            dims = (None,) * len(base)
+        elif cfg.sharding_profile == "fsdp_tp":
+            dims = _tp_table(cfg, names, base, mesh, fsdp_axis)
+        elif cfg.sharding_profile == "tp":
+            # TP only: replicate over 'data' (small models where FSDP's
+            # data-sharded contractions cost more collectives than they save
+            # memory — §Perf lever)
+            dims = _tp_table(cfg, names, base, mesh, None)
+        elif cfg.sharding_profile == "fsdp":
+            # vocab dims still shard over the (otherwise idle) model axis —
+            # batch-sharded activations x data-sharded vocab would force a
+            # windowed-einsum resharding loop on the logits matmul
+            if names[-1] == "embed":
+                dims = ("model", None)
+            elif len(names) >= 2 and names[-2] == "lm_head":
+                dims = (None, "model") if names[-1] == "w" else ("model",)
+        if dims is None:  # 'fsdp' profile or table fall-through
+            dims = _fsdp_spec(base, mesh, fsdp_axis)
+        if len(dims) != len(base):  # defensive: table/shape mismatch
+            dims = _fsdp_spec(base, mesh, fsdp_axis)
+        dims = _guard(dims, base, mesh)
+        return P(*((None,) * ns + dims))
+
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def opt_specs(cfg, opt_tree, params_spec, mesh):
+    """Adam m/v follow the param sharding; step is replicated."""
+    return {"m": params_spec, "v": params_spec, "step": P()}
+
+
+def batch_specs(cfg, batch_tree, mesh):
+    baxes = P(batch_axes_for(mesh))
+
+    def spec(path, leaf):
+        names = _key_names(path)
+        name = names[-1]
+        if name == "positions_thw":  # (3, B, S)
+            return P(None, batch_axes_for(mesh), None)
+        dims = [batch_axes_for(mesh)] + [None] * (leaf.ndim - 1)
+        if leaf.shape[0] % _axis_size(mesh, batch_axes_for(mesh)) != 0:
+            dims[0] = None
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+def _axis_size(mesh, axes):
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return size
+
+
+def cache_specs(cfg, cache_tree, mesh):
+    """KV / SSM cache sharding: batch dim over (pod, data); kv-head or
+    state-head dims over 'model' when divisible."""
+    baxes = batch_axes_for(mesh)
+
+    def spec(path, leaf):
+        names = _key_names(path)
+        ns = _nstack(names)
+        base = leaf.shape[ns:]
+        leafname = names[-1]
+        dims = [None] * len(base)
+        # batch is dim 0 of the base shape for every cache leaf
+        if base and base[0] % _axis_size(mesh, baxes) == 0:
+            dims[0] = baxes
+        if leafname in ("k", "v", "cross_k", "cross_v") and len(base) == 4:
+            if base[2] % mesh.shape["model"] == 0:
+                dims[2] = "model"
+            elif dims[0] is None and base[1] % mesh.shape["model"] == 0:
+                dims[1] = "model"  # long-context batch-1: shard cache length
+        if leafname == "ssm" and len(base) == 4:  # (B, H, P, N)
+            if base[1] % mesh.shape["model"] == 0:
+                dims[1] = "model"
+        if leafname == "conv" and len(base) == 3:  # (B, W-1, ch)
+            if base[2] % mesh.shape["model"] == 0:
+                dims[2] = "model"
+        if leafname == "ckv" and len(base) == 3 and dims[0] is None:
+            if base[1] % mesh.shape["model"] == 0:
+                dims[1] = "model"  # MLA long-context batch-1
+        return P(*((None,) * ns + tuple(dims)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,9 @@
+from repro.transfer.engine import (
+    TransferEngine,
+    SyntheticSource,
+    FileSource,
+    NullSink,
+    ChecksumSink,
+    FileSink,
+    StageThrottle,
+)

@@ -1,0 +1,375 @@
+"""The modular transfer engine: a REAL 3-stage threaded pipeline.
+
+    source --[read pool]--> sender buffer --[network pool]--> receiver
+    buffer --[write pool]--> sink
+
+Each stage has its own independently-resizable thread pool (the paper's
+modular architecture) and two bounded staging buffers couple them (the
+"application-level staging directory" — /dev/shm on a DTN; an in-memory byte
+ledger here). Per-thread rate caps (TPT) and per-stage aggregate caps (B)
+reproduce the paper's throttled bottleneck scenarios; with throttles disabled
+the engine moves bytes as fast as the host allows (this is the engine the
+data pipeline and checkpointer use).
+
+Controllers drive it through two methods, matching §IV-F:
+    observe()            -> thread counts, per-stage throughputs, free space
+    set_concurrency(n3)  -> resize the three pools
+
+Thread pools resize cooperatively: each worker checks its (stage, epoch)
+ticket; stale workers exit at the next chunk boundary, so a resize never
+drops bytes.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import io
+import os
+import threading
+import time
+from dataclasses import dataclass
+
+
+class StageThrottle:
+    """Token bucket for aggregate stage bandwidth + per-thread rate cap."""
+
+    def __init__(self, aggregate_bps=None, per_thread_bps=None):
+        self.aggregate_bps = aggregate_bps
+        self.per_thread_bps = per_thread_bps
+        self._lock = threading.Lock()
+        self._tokens = float(aggregate_bps) if aggregate_bps else 0.0
+        self._t = time.monotonic()
+
+    def acquire(self, nbytes):
+        """Blocks to enforce the aggregate cap. Returns per-thread sleep that
+        the caller must additionally honor for its own chunk."""
+        if self.aggregate_bps:
+            while True:
+                with self._lock:
+                    now = time.monotonic()
+                    self._tokens = min(
+                        self._tokens + (now - self._t) * self.aggregate_bps,
+                        float(self.aggregate_bps))  # burst = 1 second
+                    self._t = now
+                    if self._tokens >= nbytes:
+                        self._tokens -= nbytes
+                        break
+                    need = (nbytes - self._tokens) / self.aggregate_bps
+                time.sleep(min(max(need, 1e-4), 0.05))
+        if self.per_thread_bps:
+            return nbytes / self.per_thread_bps
+        return 0.0
+
+
+class BoundedBuffer:
+    """Bounded FIFO of (chunk_id, payload) with byte-level capacity."""
+
+    def __init__(self, capacity_bytes):
+        self.capacity = capacity_bytes
+        self.used = 0
+        self._q = []
+        self._lock = threading.Lock()
+        self._not_full = threading.Condition(self._lock)
+        self._not_empty = threading.Condition(self._lock)
+
+    def put(self, item, nbytes, *, timeout=0.05):
+        with self._not_full:
+            if self.used + nbytes > self.capacity:
+                self._not_full.wait(timeout)
+                if self.used + nbytes > self.capacity:
+                    return False
+            self._q.append((item, nbytes))
+            self.used += nbytes
+            self._not_empty.notify()
+            return True
+
+    def get(self, *, timeout=0.05):
+        with self._not_empty:
+            if not self._q:
+                self._not_empty.wait(timeout)
+                if not self._q:
+                    return None
+            item, nbytes = self._q.pop(0)
+            self.used -= nbytes
+            self._not_full.notify()
+            return item, nbytes
+
+    @property
+    def free(self):
+        return self.capacity - self.used
+
+
+# ---------------------------------------------------------------------------
+# Sources / sinks
+# ---------------------------------------------------------------------------
+
+class SyntheticSource:
+    """total_bytes of deterministic pseudo-data in chunk_bytes chunks."""
+
+    def __init__(self, total_bytes, chunk_bytes=1 << 20, seed=0):
+        self.total = int(total_bytes)
+        self.chunk = int(chunk_bytes)
+        self._next = 0
+        self._lock = threading.Lock()
+        self._payload = bytes((seed + i) % 251 for i in range(self.chunk))
+
+    def next_chunk(self):
+        with self._lock:
+            if self._next >= self.total:
+                return None
+            cid = self._next
+            n = min(self.chunk, self.total - self._next)
+            self._next += n
+        return cid, self._payload[:n]
+
+    def exhausted(self):
+        with self._lock:
+            return self._next >= self.total
+
+
+class FileSource:
+    """Reads real files from a directory (mixed-size datasets)."""
+
+    def __init__(self, paths, chunk_bytes=1 << 20):
+        self.paths = list(paths)
+        self.chunk = chunk_bytes
+        self._lock = threading.Lock()
+        self._fidx = 0
+        self._off = 0
+        self.total = sum(os.path.getsize(p) for p in self.paths)
+
+    def next_chunk(self):
+        with self._lock:
+            while self._fidx < len(self.paths):
+                p = self.paths[self._fidx]
+                size = os.path.getsize(p)
+                if self._off >= size:
+                    self._fidx += 1
+                    self._off = 0
+                    continue
+                off = self._off
+                n = min(self.chunk, size - off)
+                self._off += n
+                fidx = self._fidx
+                break
+            else:
+                return None
+        with open(self.paths[fidx], "rb") as f:
+            f.seek(off)
+            return (fidx, off), f.read(n)
+
+    def exhausted(self):
+        with self._lock:
+            return self._fidx >= len(self.paths)
+
+
+class NullSink:
+    def write_chunk(self, cid, payload):
+        pass
+
+
+class ChecksumSink:
+    """Order-independent checksum so tests can verify byte integrity."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.digest = 0
+        self.nbytes = 0
+
+    def write_chunk(self, cid, payload):
+        h = int.from_bytes(
+            hashlib.blake2b(payload, digest_size=8,
+                            key=repr(cid).encode()[:16]).digest(), "big")
+        with self._lock:
+            self.digest ^= h
+            self.nbytes += len(payload)
+
+    @staticmethod
+    def reference(chunks):
+        d = 0
+        for cid, payload in chunks:
+            d ^= int.from_bytes(
+                hashlib.blake2b(payload, digest_size=8,
+                                key=repr(cid).encode()[:16]).digest(), "big")
+        return d
+
+
+class FileSink:
+    def __init__(self, path):
+        self.path = path
+        self._lock = threading.Lock()
+        self._f = open(path, "wb")
+
+    def write_chunk(self, cid, payload):
+        off = cid if isinstance(cid, int) else None
+        with self._lock:
+            if off is not None:
+                self._f.seek(off)
+            self._f.write(payload)
+
+    def close(self):
+        self._f.close()
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _StageStats:
+    moved: int = 0
+
+
+class TransferEngine:
+    READ, NET, WRITE = 0, 1, 2
+
+    def __init__(self, source, sink, *,
+                 sender_buf=64 << 20, receiver_buf=64 << 20,
+                 throttles=(None, None, None),
+                 initial_concurrency=(1, 1, 1), n_max=64,
+                 metric_interval=1.0):
+        self.source = source
+        self.sink = sink
+        self.buffers = (BoundedBuffer(sender_buf), BoundedBuffer(receiver_buf))
+        self.throttles = [t or StageThrottle() for t in throttles]
+        self.n_max = n_max
+        self.metric_interval = metric_interval
+        self._stats = [_StageStats(), _StageStats(), _StageStats()]
+        self._stats_lock = threading.Lock()
+        self._inflight = 0  # chunks held by workers (not in any buffer)
+        self._alive = True
+        self._epoch = [0, 0, 0]
+        self._pools = [[], [], []]
+        self._pool_lock = threading.Lock()
+        self._last_obs_t = time.monotonic()
+        self._last_moved = [0, 0, 0]
+        self._last_tps = [0.0, 0.0, 0.0]
+        self.set_concurrency(initial_concurrency)
+
+    # -- worker loops -----------------------------------------------------
+    def _worker(self, stage, epoch):
+        while self._alive and self._epoch[stage] == epoch:
+            if stage == self.READ:
+                item = self.source.next_chunk()
+                if item is None:
+                    time.sleep(0.002)
+                    continue
+                self._track(+1)
+                cid, payload = item
+                sleep = self.throttles[0].acquire(len(payload))
+                if sleep:
+                    time.sleep(sleep)
+                while self._alive and not self.buffers[0].put(
+                        (cid, payload), len(payload)):
+                    pass  # blocked on full sender buffer (paper: retry +eps)
+                self._track(-1)
+                self._count(0, len(payload))
+            elif stage == self.NET:
+                got = self.buffers[0].get()
+                if got is None:
+                    continue
+                self._track(+1)
+                (cid, payload), n = got
+                sleep = self.throttles[1].acquire(n)
+                if sleep:
+                    time.sleep(sleep)
+                while self._alive and not self.buffers[1].put(
+                        (cid, payload), n):
+                    pass
+                self._track(-1)
+                self._count(1, n)
+            else:
+                got = self.buffers[1].get()
+                if got is None:
+                    continue
+                self._track(+1)
+                (cid, payload), n = got
+                sleep = self.throttles[2].acquire(n)
+                if sleep:
+                    time.sleep(sleep)
+                self.sink.write_chunk(cid, payload)
+                self._track(-1)
+                self._count(2, n)
+
+    def _track(self, d):
+        with self._stats_lock:
+            self._inflight += d
+
+    def _count(self, stage, n):
+        with self._stats_lock:
+            self._stats[stage].moved += n
+
+    # -- control & observation (the §IV-F interface) ----------------------
+    def set_concurrency(self, n3):
+        with self._pool_lock:
+            for stage, n in enumerate(n3):
+                n = max(1, min(int(n), self.n_max))
+                cur = [t for t in self._pools[stage] if t.is_alive()]
+                if n == len(cur):
+                    continue
+                # bump epoch: old threads retire; spawn the new size
+                self._epoch[stage] += 1
+                epoch = self._epoch[stage]
+                pool = []
+                for _ in range(n):
+                    t = threading.Thread(target=self._worker,
+                                         args=(stage, epoch), daemon=True)
+                    t.start()
+                    pool.append(t)
+                self._pools[stage] = pool
+
+    def concurrency(self):
+        return tuple(len([t for t in p if t.is_alive()]) for p in self._pools)
+
+    def observe(self):
+        now = time.monotonic()
+        dt = max(now - self._last_obs_t, 1e-6)
+        with self._stats_lock:
+            moved = [s.moved for s in self._stats]
+        if dt >= self.metric_interval * 0.5:
+            tps = [(m - lm) / dt for m, lm in zip(moved, self._last_moved)]
+            self._last_moved = moved
+            self._last_obs_t = now
+            self._last_tps = tps
+        else:
+            tps = self._last_tps
+        return {
+            "threads": list(self.concurrency()),
+            "throughputs": tps,
+            "sender_free": self.buffers[0].free,
+            "receiver_free": self.buffers[1].free,
+            "sender_capacity": self.buffers[0].capacity,
+            "receiver_capacity": self.buffers[1].capacity,
+        }
+
+    def probe(self, threads):
+        """Exploration-phase interface: set threads, wait one interval,
+        return per-stage throughputs."""
+        self.set_concurrency([int(x) for x in threads])
+        before = self._snapshot()
+        time.sleep(self.metric_interval)
+        after = self._snapshot()
+        return [(a - b) / self.metric_interval for a, b in zip(after, before)]
+
+    def _snapshot(self):
+        with self._stats_lock:
+            return [s.moved for s in self._stats]
+
+    def wait(self, interval):
+        time.sleep(interval)
+
+    def bytes_written(self):
+        with self._stats_lock:
+            return self._stats[2].moved
+
+    def done(self):
+        with self._stats_lock:
+            inflight = self._inflight
+        return (self.source.exhausted() and self.buffers[0].used == 0
+                and self.buffers[1].used == 0 and inflight == 0)
+
+    def close(self):
+        self._alive = False
+        for p in self._pools:
+            for t in p:
+                t.join(timeout=0.5)

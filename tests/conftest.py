@@ -1,0 +1,8 @@
+import os
+
+# Tests run on the single real CPU device (the 512-device fake platform is
+# ONLY for the dry-run, set inside repro.launch.dryrun before jax init).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+# 8 host devices let the sharding/elastic tests build small real meshes while
+# staying cheap; model smoke tests ignore the extra devices.

@@ -1,0 +1,125 @@
+"""Deeper correctness invariants: MLA absorbed-decode equivalence, MoE
+scatter-vs-dense oracle, RoPE relative-position property, SWA ring-buffer
+wraparound, and the R_max bound."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_smoke_config
+
+
+def test_mla_absorbed_decode_matches_full_attention():
+    """DeepSeek-V2 decode uses the ABSORBED formulation (scores via the
+    latent c_kv); it must match the non-absorbed full-sequence attention's
+    last position exactly."""
+    from repro.models import mla
+    cfg = get_smoke_config("deepseek-v2-236b")
+    key = jax.random.PRNGKey(0)
+    params = mla.mla_init(cfg, key, dtype=jnp.float32)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                          jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full = mla.mla_apply(cfg, params, x, pos, backend="full")
+
+    cache = mla.init_mla_cache(cfg, B, S + 2, dtype=jnp.float32)
+    _, cache = mla.mla_prefill(cfg, params, x[:, :S - 1],
+                               pos[:, :S - 1], cache, backend="full")
+    step_out, _ = mla.mla_decode(cfg, params, x[:, S - 1:S], cache)
+    np.testing.assert_allclose(np.asarray(step_out[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-4, rtol=2e-4)
+
+
+def test_moe_scatter_matches_dense_oracle_when_no_drops():
+    from repro.nn.moe import moe_init, moe_apply, moe_apply_dense_reference
+    key = jax.random.PRNGKey(0)
+    E, k = 4, 2
+    params = moe_init(key, 32, 64, E, n_shared=1, dtype=jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32), jnp.float32)
+    y, aux = moe_apply(params, x, top_k=k, capacity_factor=float(E) / k)
+    ref = moe_apply_dense_reference(params, x, top_k=k)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+    assert float(aux) > 0
+
+
+@given(offset=st.integers(0, 512))
+@settings(max_examples=10, deadline=None)
+def test_rope_relative_position_property(offset):
+    """RoPE scores depend only on relative positions: shifting q and k
+    positions by the same offset leaves q·k unchanged."""
+    from repro.nn.rotary import apply_rope
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (1, 6, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 6, 2, 32)), jnp.float32)
+    p0 = jnp.arange(6, dtype=jnp.int32)[None]
+    q0, k0 = apply_rope(q, k, p0)
+    q1, k1 = apply_rope(q, k, p0 + offset)
+    s0 = jnp.einsum("bqhd,bkhd->bhqk", q0, k0)
+    s1 = jnp.einsum("bqhd,bkhd->bhqk", q1, k1)
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_swa_ring_buffer_wraparound_matches_full_cache():
+    """Sliding-window decode with a ring buffer of `window` slots must equal
+    decode with a full-length cache once the window has wrapped."""
+    from repro.nn import attention as attn
+    rng = np.random.default_rng(0)
+    B, H, D, W, T = 1, 2, 16, 8, 20
+    key = jax.random.PRNGKey(0)
+    params = attn.attention_init(key, 32, H, H, D, dtype=jnp.float32)
+    xs = jnp.asarray(rng.normal(0, 1, (B, T, 32)), jnp.float32)
+
+    ring = attn.init_kv_cache(B, T, H, D, window=W, dtype=jnp.float32)
+    full = attn.init_kv_cache(B, T, H, D, dtype=jnp.float32)
+    for t in range(T):
+        out_r, ring = attn.attention_decode(params, xs[:, t:t + 1], ring,
+                                            n_heads=H, n_kv_heads=H,
+                                            head_dim=D, window=W)
+        out_f, full = attn.attention_decode(params, xs[:, t:t + 1], full,
+                                            n_heads=H, n_kv_heads=H,
+                                            head_dim=D, window=W)
+        np.testing.assert_allclose(np.asarray(out_r), np.asarray(out_f),
+                                   atol=2e-5, rtol=2e-5), t
+
+
+@given(tpt=st.tuples(*[st.floats(0.05, 0.4)] * 3),
+       threads=st.tuples(*[st.integers(1, 30)] * 3))
+@settings(max_examples=15, deadline=None)
+def test_rmax_upper_bounds_observed_rewards(tpt, threads):
+    """R_max from the exploration phase must upper-bound any achievable
+    per-step reward in the same environment (+small slack for the n* round
+    and normalization)."""
+    from repro.core.simulator import make_env_params, sim_interval
+    from repro.core.utility import utility, r_max
+    import numpy as np
+    bw = [1.0, 1.0, 1.0]
+    p = make_env_params(tpt=list(tpt), bw=bw, cap=[2.0, 2.0])
+    b = min(min(n * t, w) for n, t, w in zip(threads, tpt, bw))
+    bstar = min(bw)  # exploration-phase bottleneck with enough threads
+    n_star = [bstar / t for t in tpt]
+    rmax = r_max(bstar, n_star)
+    bufs = jnp.zeros(2)
+    for _ in range(4):
+        bufs, tps = sim_interval(p, bufs, jnp.asarray(threads, jnp.float32))
+        r = float(utility(tps, jnp.asarray(threads, jnp.float32)))
+        assert r <= rmax * 1.05, (r, rmax, threads)
+
+
+def test_checkpoint_through_throttled_engine(tmp_path):
+    """The engine-based checkpoint path (device->staging->store) with real
+    throttles still produces a byte-identical restore."""
+    from repro.checkpoint import save_checkpoint, load_checkpoint
+    state = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 256)),
+             "step": jnp.asarray(5, jnp.int32)}
+    save_checkpoint(str(tmp_path), state, 3, use_engine=True,
+                    chunk_bytes=16 * 1024)
+    restored, step = load_checkpoint(str(tmp_path),
+                                     jax.tree.map(jnp.zeros_like, state))
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.asarray(restored["w"]))

@@ -1,0 +1,138 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret=True
+executes the kernel body on CPU)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_reference
+from repro.kernels.sim_step.ops import sim_step_batch
+from repro.kernels.sim_step.ref import sim_step_reference
+
+
+FA_CASES = [
+    # B, S, Hq, Hkv, D, window, blk_q, blk_k
+    (2, 128, 4, 2, 32, None, 32, 32),
+    (1, 96, 3, 1, 16, None, 32, 32),
+    (2, 128, 4, 4, 32, 48, 32, 32),    # sliding window
+    (1, 130, 2, 2, 16, None, 64, 32),  # non-divisible seq (padding path)
+    (1, 64, 8, 8, 64, None, 64, 64),   # single kv block
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,win,bq,bk", FA_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_reference(B, S, Hq, Hkv, D, win, bq, bk,
+                                           dtype):
+    rng = np.random.default_rng(hash((B, S, Hq, D)) % 2 ** 31)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, D)), dtype)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), dtype)
+    out = flash_attention(q, k, v, causal=True, window=win, blk_q=bq, blk_k=bk)
+    ref = attention_reference(q, k, v, causal=True, window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+SSD_CASES = [
+    # b, s, h, p, g, n, chunk
+    (2, 64, 4, 16, 1, 32, 16),
+    (1, 128, 8, 8, 2, 16, 32),
+    (2, 96, 2, 32, 1, 8, 48),
+    (1, 64, 4, 64, 4, 64, 64),  # one chunk (no recurrence)
+]
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,Q", SSD_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_scan_matches_reference(b, s, h, p, g, n, Q, dtype):
+    rng = np.random.default_rng(hash((b, s, h, p, Q)) % 2 ** 31)
+    x = jnp.asarray(rng.normal(0, 1, (b, s, h, p)), dtype)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, h)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, (h,)), jnp.float32)
+    B = jnp.asarray(rng.normal(0, 1, (b, s, g, n)), dtype)
+    C = jnp.asarray(rng.normal(0, 1, (b, s, g, n)), dtype)
+    y, _ = ssd_scan(x, dt, A, B, C, chunk=Q)
+    ref = ssd_reference(x, dt, A, B, C, chunk=Q)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("E,substeps", [(8, 10), (64, 50), (96, 25)])
+def test_sim_step_matches_reference(E, substeps):
+    rng = np.random.default_rng(E)
+    bufs = jnp.asarray(rng.uniform(0, 1, (E, 2)), jnp.float32)
+    rate = jnp.asarray(rng.uniform(0.1, 3, (E, 3)), jnp.float32)
+    cap = jnp.asarray(rng.uniform(1, 4, (E, 2)), jnp.float32)
+    b2, mv = sim_step_batch(bufs, rate, cap, substeps=substeps)
+    rb, rm = sim_step_reference(bufs, rate, cap, substeps=substeps)
+    np.testing.assert_allclose(np.asarray(b2), np.asarray(rb), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(mv), np.asarray(rm), atol=1e-4)
+
+
+def test_flash_attention_is_jit_compatible_inside_model_path():
+    """The 'pallas' attn backend wires through nn.attention._sdpa."""
+    from repro.nn.attention import _sdpa
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (1, 64, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (1, 64, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (1, 64, 2, 32)), jnp.float32)
+    pos = jnp.arange(64, dtype=jnp.int32)
+    out_p = _sdpa(q, k, v, pos, pos, backend="pallas", mode="causal",
+                  window=None)
+    out_f = _sdpa(q, k, v, pos, pos, backend="full", mode="causal",
+                  window=None)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_f),
+                               atol=2e-5, rtol=2e-5)
+
+
+TRI_CASES = [
+    (2, 128, 4, 2, 32, "causal", None, 32),
+    (1, 96, 3, 1, 16, "causal", None, 32),
+    (2, 128, 4, 4, 32, "sliding", 40, 32),
+    (1, 130, 2, 2, 16, "causal", None, 64),  # padding path
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,mode,win,C", TRI_CASES)
+def test_triangular_chunked_attention_matches_full(B, S, Hq, Hkv, D, mode,
+                                                   win, C):
+    """The §Perf triangular-chunked attention (statically skips masked block
+    pairs) must be numerically identical to the materialized reference."""
+    from repro.nn.attention import sdpa_chunked_tri, sdpa_full
+    rng = np.random.default_rng(hash((B, S, C)) % 2 ** 31)
+    q = jnp.asarray(rng.normal(0, 1, (B, S, Hq, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (B, S, Hkv, D)), jnp.float32)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    out = sdpa_chunked_tri(q, k, v, pos, pos, mode=mode, window=win, chunk=C,
+                           probs_dtype=jnp.float32)
+    ref = sdpa_full(q, k, v, pos, pos, mode=mode, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+    # production default (bf16 probabilities, flash-standard) stays close
+    out16 = sdpa_chunked_tri(q, k, v, pos, pos, mode=mode, window=win, chunk=C)
+    np.testing.assert_allclose(np.asarray(out16, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_ssd_bf16_variant_close_to_fp32():
+    from repro.nn.ssd import ssd_chunked
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, (2, 64, 4, 16)), jnp.bfloat16)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (2, 64, 4)), jnp.float32)
+    A = jnp.asarray(-rng.uniform(0.5, 2, (4,)), jnp.float32)
+    B = jnp.asarray(rng.normal(0, 1, (2, 64, 1, 32)), jnp.bfloat16)
+    C = jnp.asarray(rng.normal(0, 1, (2, 64, 1, 32)), jnp.bfloat16)
+    y32, _ = ssd_chunked(x, dt, A, B, C, chunk=16)
+    y16, _ = ssd_chunked(x, dt, A, B, C, chunk=16, bf16=True)
+    rel = float(jnp.max(jnp.abs(y32.astype(jnp.float32) - y16.astype(jnp.float32)))
+                / jnp.max(jnp.abs(y32.astype(jnp.float32))))
+    assert rel < 0.02, rel

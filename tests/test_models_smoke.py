@@ -1,0 +1,143 @@
+"""Per-assigned-architecture smoke tests on REDUCED configs (same structural
+family, CPU-sized): one forward/train step asserting output shapes + no NaNs,
+plus prefill/decode consistency (decode-step logits must match a longer
+prefill's logits — catches cache bugs across every family)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_smoke_config, list_archs
+from repro.configs.shapes import concrete_inputs
+from repro.launch.steps import make_train_step, init_state
+from repro.models import get_model
+
+ARCHS = list_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    state = init_state(cfg, jax.random.PRNGKey(0))
+    batch = concrete_inputs(cfg, "train_4k", scale=256)  # B=1, S=16
+    step = jax.jit(make_train_step(cfg))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert float(metrics["loss"]) > 0
+    # params changed and stayed finite
+    moved = 0
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(state2["params"])):
+        assert b.shape == a.shape and b.dtype == a.dtype
+        assert bool(jnp.all(jnp.isfinite(b.astype(jnp.float32)))), arch
+        moved += int(not np.array_equal(np.asarray(a, np.float32),
+                                        np.asarray(b, np.float32)))
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_decreases_over_few_steps(arch):
+    cfg = get_smoke_config(arch)
+    state = init_state(cfg, jax.random.PRNGKey(1))
+    batch = concrete_inputs(cfg, "train_4k", scale=256, seed=3)
+    step = jax.jit(make_train_step(cfg, peak_lr=5e-3, warmup_steps=1))
+    losses = []
+    for _ in range(8):  # overfit one tiny batch
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], (arch, losses)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """prefill(S tokens) logits == prefill(S-1) + decode(token S-1) logits."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    S = 16
+    batch = concrete_inputs(cfg, "train_4k", scale=4096 // S, seed=5)
+    tokens = batch["tokens"][:1, :S]
+    extras = {k: v[:1] if k != "positions_thw" else v[:, :1]
+              for k, v in batch.items() if k not in ("tokens", "labels")}
+
+    V_fixed = min(cfg.n_vision_tokens, (S - 1) // 2)  # same embeds both runs
+
+    def prefix_batch(upto):
+        b = {"tokens": tokens[:, :upto]}
+        for k, v in extras.items():
+            if k == "frames":
+                b[k] = v[:, :max(S // cfg.src_ratio, 8)]  # same enc input
+            elif k == "vision_embeds":
+                b[k] = v[:, :V_fixed]
+            elif k == "positions_thw":
+                b[k] = v[:, :, :upto]
+        return b
+
+    cache = model.init_cache(1, S + 4)
+    logits_full, _ = model.prefill(params, prefix_batch(S), cache)
+
+    cache = model.init_cache(1, S + 4)
+    _, cache = model.prefill(params, prefix_batch(S - 1), cache)
+    logits_step, _ = model.decode_step(params, cache, tokens[:, S - 1:S])
+
+    a = np.asarray(logits_full, np.float32)
+    b = np.asarray(logits_step, np.float32)
+    # compare top-logit agreement + numeric closeness (bf16 params)
+    np.testing.assert_allclose(a, b, atol=0.15, rtol=0.15)
+    assert int(a.argmax()) == int(b.argmax()), arch
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x22b", "zamba2-1.2b",
+                                  "mamba2-1.3b"])
+def test_long_context_families_decode_past_window(arch):
+    """The sub-quadratic archs must decode with bounded state: run decode for
+    more steps than the window/chunk and stay finite."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    B = 2
+    cache = model.init_cache(B, 64)
+    rng = np.random.default_rng(0)
+    prompts = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (B, 8), dtype=np.int32))}
+    logits, cache = model.prefill(params, prompts, cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    step = jax.jit(model.decode_step)
+    for _ in range(24):  # > smoke window (16)
+        logits, cache = step(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_vocab_padding_masked_out():
+    """Padded vocab rows must never win the argmax."""
+    cfg = get_smoke_config("seamless-m4t-large-v2")  # vocab 518 -> padded 528
+    assert cfg.vocab_padded > cfg.vocab
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = concrete_inputs(cfg, "train_4k", scale=256, seed=1)
+    cache = model.init_cache(1, 24)
+    pf = {k: v[:1] for k, v in batch.items() if k != "labels"}
+    logits, _ = model.prefill(params, pf, cache)
+    assert logits.shape[-1] == cfg.vocab_padded
+    assert np.asarray(logits)[:, cfg.vocab:].max() < -1e20
+
+
+def test_param_counts_match_published_sizes():
+    """Full configs must land near their published parameter counts."""
+    from repro.configs.registry import get_config
+    expected = {
+        "smollm-135m": (0.135e9, 0.25),
+        "granite-34b": (34e9, 0.25),
+        "deepseek-7b": (7e9, 0.25),
+        "chatglm3-6b": (6.2e9, 0.3),
+        "mixtral-8x22b": (141e9, 0.25),
+        "deepseek-v2-236b": (236e9, 0.25),
+        "mamba2-1.3b": (1.3e9, 0.35),
+        "zamba2-1.2b": (1.2e9, 0.4),
+        "qwen2-vl-72b": (72e9, 0.25),
+    }
+    for arch, (want, tol) in expected.items():
+        total, _ = get_config(arch).param_counts()
+        assert abs(total - want) / want < tol, (arch, total, want)

@@ -1,0 +1,99 @@
+"""PPO agent (Algorithm 2) + exploration phase (§IV-A)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import networks as nets
+from repro.core.exploration import explore
+from repro.core.ppo import PPOConfig, train_ppo, init_agent
+from repro.core.simulator import (make_env_params, SimEnv, env_reset,
+                                  env_step, observe)
+
+SCENARIOS = {
+    # name: (tpt per thread, expected n* ceil)
+    "read": ([0.08, 0.16, 0.2], [13, 7, 5]),
+    "network": ([0.205, 0.075, 0.195], [5, 14, 6]),
+    "write": ([0.2, 0.15, 0.07], [5, 7, 15]),
+}
+
+
+def test_network_shapes():
+    kp = jax.random.PRNGKey(0)
+    p = nets.policy_init(kp)
+    mean, std = nets.policy_apply(p, jnp.zeros((8,)))
+    assert mean.shape == (3,) and std.shape == (3,)
+    mean, std = nets.policy_apply(p, jnp.zeros((5, 8)))
+    assert mean.shape == (5, 3)
+    v = nets.value_init(kp)
+    out = nets.value_apply(v, jnp.zeros((5, 8)))
+    assert out.shape == (5,)
+
+
+def test_gaussian_logp_matches_closed_form():
+    mean = jnp.asarray([1.0, 2.0, 3.0])
+    std = jnp.asarray([0.5, 1.0, 2.0])
+    a = jnp.asarray([1.5, 1.0, 0.0])
+    lp = float(nets.gaussian_logp(mean, std, a))
+    expect = sum(-0.5 * ((x - m) / s) ** 2 - np.log(s) - 0.5 * np.log(2 * np.pi)
+                 for x, m, s in zip(a, mean, std))
+    assert lp == pytest.approx(float(expect), rel=1e-5)
+
+
+@pytest.mark.parametrize("name", list(SCENARIOS))
+def test_exploration_recovers_paper_optima(name):
+    """§V-B1: the three bottleneck scenarios' optimal stream counts."""
+    tpt, expected = SCENARIOS[name]
+    p = make_env_params(tpt=tpt, bw=[1.0, 1.0, 1.0], cap=[2.0, 2.0])
+    env = SimEnv(p, seed=0)
+    env.reset()
+    ex = explore(env.probe, n_samples=250, n_max=40, seed=1)
+    assert np.all(np.abs(ex.n_star_int() - np.asarray(expected)) <= 1), (
+        ex.n_star_int(), expected)
+    assert ex.bottleneck == pytest.approx(1.0, rel=0.1)
+    assert ex.r_max > 0
+
+
+def test_ppo_converges_on_read_bottleneck():
+    """The agent reaches >=85% of R_max·M and identifies the bottleneck's
+    thread ordering (n_r > n_n > n_w for a read bottleneck)."""
+    tpt, _ = SCENARIOS["read"]
+    p = make_env_params(tpt=tpt, bw=[1.0, 1.0, 1.0], cap=[2.0, 2.0], n_max=50)
+    env = SimEnv(p, seed=0)
+    env.reset()
+    ex = explore(env.probe, n_samples=150, n_max=50, seed=1)
+    cfg = PPOConfig(max_episodes=1200, n_envs=32, action_scale=12.0, seed=0)
+    res = train_ppo(p, cfg, r_max=ex.r_max)
+    assert res.best_reward >= 0.85 * ex.r_max * cfg.max_steps
+    assert res.converged_at is not None
+    # deterministic policy eval: full utilization + sensible ordering
+    st = env_reset(p, jax.random.PRNGKey(5))
+    obs = observe(p, st)
+    for _ in range(8):
+        mean, _ = nets.policy_apply(res.params["policy"], obs)
+        st, obs, r = env_step(p, st, mean)
+    tps = np.asarray(st.throughputs)
+    assert tps[2] >= 0.9, tps  # delivered ~ bottleneck (1 Gbps)
+
+
+def test_ppo_single_env_faithful_path_runs():
+    p = make_env_params(tpt=[0.1, 0.2, 0.2], bw=[1, 1, 1], cap=[2, 2])
+    cfg = PPOConfig(max_episodes=8, n_envs=1, seed=0)
+    res = train_ppo(p, cfg)
+    assert res.episodes == 8
+    assert len(res.history) == 8
+
+
+def test_convergence_criterion_early_stop():
+    """With patience tiny, training stops soon after hitting 0.9 R_max."""
+    p = make_env_params(tpt=[0.1, 0.2, 0.2], bw=[1, 1, 1], cap=[2, 2],
+                        n_max=40)
+    env = SimEnv(p, seed=0)
+    env.reset()
+    ex = explore(env.probe, n_samples=120, n_max=40, seed=1)
+    cfg = PPOConfig(max_episodes=4000, n_envs=32, patience=64,
+                    action_scale=10.0, seed=1)
+    res = train_ppo(p, cfg, r_max=ex.r_max)
+    assert res.converged_at is not None
+    assert res.episodes < cfg.max_episodes

@@ -1,0 +1,139 @@
+"""Simulator fidelity: the dense vectorized JAX sim must agree with the
+paper-faithful event-driven oracle (Algorithm 1) on steady-state throughputs,
+and both must respect conservation and capacity invariants."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.simref import EventSimulator
+from repro.core.simulator import (make_env_params, sim_interval, env_reset,
+                                  env_step, observe, SimEnv)
+
+
+def _steady(tpt, bw, cap, threads, seconds=6):
+    # fine chunks: the oracle's quantization artifact shrinks with chunk size,
+    # isolating the MODEL agreement from event-granularity noise. Throughputs
+    # are CUMULATIVE averages over the run — at exactly-balanced stage rates
+    # the event system starves stochastically within a second while the fluid
+    # model doesn't; the time-average is the physically meaningful quantity.
+    ev = EventSimulator(tpt=tpt, bandwidth=bw, buffer_capacity=cap,
+                        chunk=min(tpt) / 32)
+    warmup = 6  # buffer fill transients differ between the two models
+    acc_ev = np.zeros(3)
+    wall = 0.0
+    for i in range(warmup + seconds):
+        _, info = ev.get_utility(threads)
+        if i >= warmup:
+            # physical rate: raw bytes over the call's TRUE elapsed event
+            # time (tasks overrun t_end by up to one d_task, so a "1 s" call
+            # advances the clock by max(finish) seconds). The paper's
+            # per-stage finish normalization is an agent-reward convention.
+            acc_ev += np.asarray(info["moved"])
+            wall += max(info["finish"])
+    p = make_env_params(tpt=tpt, bw=bw, cap=cap)
+    bufs = jnp.zeros(2)
+    acc_d = np.zeros(3)
+    for i in range(warmup + seconds):
+        bufs, tps = sim_interval(p, bufs, jnp.asarray(threads, jnp.float32))
+        if i >= warmup:
+            acc_d += np.asarray(tps)
+    return acc_ev / max(wall, 1e-9), acc_d / seconds
+
+
+@given(
+    tpt=st.tuples(*[st.floats(0.02, 0.5)] * 3),
+    bw=st.tuples(*[st.floats(0.5, 4.0)] * 3),
+    threads=st.tuples(*[st.integers(1, 30)] * 3),
+)
+@settings(max_examples=25, deadline=None)
+def test_dense_sim_matches_event_oracle(tpt, bw, threads):
+    from hypothesis import assume
+    cap = [2.0, 2.0]
+    rates = sorted(min(n * t, b) for n, t, b in zip(threads, tpt, bw))
+    # require a DISTINCT bottleneck (the paper's setting): at (near-)ties the
+    # event system starves on handoff latency while the fluid model doesn't —
+    # a known modeling difference, excluded from the domain.
+    assume(rates[0] < 0.8 * rates[1])
+    oracle, dense = _steady(list(tpt), list(bw), cap, list(threads))
+    bottleneck = rates[0]
+    # fidelity envelope: chunk-granularity duty-cycle gaps vs the fluid model
+    tol = max(0.15 * bottleneck, 0.03)
+    # steady-state end-to-end rate agrees (write stage = delivered bytes)
+    assert abs(oracle[2] - dense[2]) <= tol, (oracle, dense)
+
+
+@given(
+    tpt=st.tuples(*[st.floats(0.02, 0.5)] * 3),
+    threads=st.tuples(*[st.integers(1, 40)] * 3),
+)
+@settings(max_examples=25, deadline=None)
+def test_dense_sim_invariants(tpt, threads):
+    """No stage exceeds its cap; buffers stay within capacity; bytes conserve:
+    read - net = sender delta, net - write = receiver delta."""
+    bw = [1.0, 1.0, 1.0]
+    cap = [1.5, 1.0]
+    p = make_env_params(tpt=list(tpt), bw=bw, cap=cap)
+    bufs = jnp.zeros(2)
+    t = jnp.asarray(threads, jnp.float32)
+    for _ in range(4):
+        new_bufs, tps = sim_interval(p, bufs, t)
+        tps = np.asarray(tps)
+        for i in range(3):
+            assert tps[i] <= min(threads[i] * tpt[i], bw[i]) + 1e-5
+        nb = np.asarray(new_bufs)
+        assert -1e-5 <= nb[0] <= cap[0] + 1e-5
+        assert -1e-5 <= nb[1] <= cap[1] + 1e-5
+        ob = np.asarray(bufs)
+        assert nb[0] - ob[0] == pytest.approx(tps[0] - tps[1], abs=1e-4)
+        assert nb[1] - ob[1] == pytest.approx(tps[1] - tps[2], abs=1e-4)
+        bufs = new_bufs
+
+
+def test_buffer_dynamics_motivation():
+    """The paper's Fig.1 coupling: raising read concurrency alone stops
+    helping once the sender buffer fills."""
+    p = make_env_params(tpt=[0.2, 0.05, 0.2], bw=[2.0, 2.0, 2.0],
+                        cap=[0.5, 0.5])
+    bufs = jnp.zeros(2)
+    t_small = jnp.asarray([2.0, 2.0, 2.0])
+    t_big = jnp.asarray([30.0, 2.0, 2.0])
+    for _ in range(8):  # converge to steady state
+        bufs, tps_small = sim_interval(p, bufs, t_small)
+    bufs2 = jnp.zeros(2)
+    for _ in range(8):
+        bufs2, tps_big = sim_interval(p, bufs2, t_big)
+    # network is the bottleneck (0.1): read throughput pinned to it either way
+    assert abs(float(tps_big[0]) - float(tps_small[0])) < 0.05
+
+
+def test_env_obs_shape_and_reward():
+    p = make_env_params(tpt=[0.1, 0.2, 0.2], bw=[1, 1, 1], cap=[2, 2])
+    st_ = env_reset(p, jax.random.PRNGKey(0))
+    obs = observe(p, st_)
+    assert obs.shape == (8,)
+    st2, obs2, r = env_step(p, st_, jnp.asarray([5.0, 5.0, 5.0]))
+    assert obs2.shape == (8,)
+    assert float(r) > 0
+    assert np.all(np.asarray(st2.threads) == 5)
+
+
+def test_env_action_clamping():
+    p = make_env_params(tpt=[0.1, 0.2, 0.2], bw=[1, 1, 1], cap=[2, 2],
+                        n_max=10)
+    st_ = env_reset(p, jax.random.PRNGKey(0))
+    st2, _, _ = env_step(p, st_, jnp.asarray([-5.0, 500.0, 3.4]))
+    assert np.asarray(st2.threads).tolist() == [1.0, 10.0, 3.0]
+
+
+def test_event_oracle_bottleneck_identification():
+    """Read-throttled scenario: steady state pins all stages to the
+    bottleneck."""
+    ev = EventSimulator(tpt=[0.08, 0.16, 0.2], bandwidth=[1, 1, 1],
+                        buffer_capacity=[2, 2])
+    for _ in range(6):
+        _, info = ev.get_utility([13, 7, 5])
+    tps = info["throughputs"]
+    assert tps[2] == pytest.approx(1.0, rel=0.1)

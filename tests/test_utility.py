@@ -1,0 +1,51 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.utility import utility, stage_utility, r_max, K_DEFAULT
+
+
+def test_k_default_matches_paper():
+    assert K_DEFAULT == 1.02
+
+
+def test_utility_basic():
+    u = utility([1.0, 1.0, 1.0], [0.0, 0.0, 0.0])
+    assert float(u) == pytest.approx(3.0)
+    # threads penalize exponentially
+    u2 = utility([1.0, 1.0, 1.0], [10.0, 10.0, 10.0])
+    assert float(u2) == pytest.approx(3.0 / 1.02 ** 10, rel=1e-5)
+
+
+@given(t=st.floats(0.01, 100), n=st.integers(1, 200))
+@settings(max_examples=50, deadline=None)
+def test_stage_utility_positive_and_monotone_in_t(t, n):
+    u = float(stage_utility(jnp.float32(t), jnp.float32(n)))
+    assert u > 0
+    assert float(stage_utility(jnp.float32(2 * t), jnp.float32(n))) > u
+
+
+@given(tpt=st.floats(0.01, 0.2), bw=st.floats(0.5, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_utility_has_interior_maximum(tpt, bw):
+    """With t(n) = min(n*tpt, bw) the utility rises then falls: the global
+    maximum the paper relies on exists at finite n. Note k=1.02 caps the
+    profitable thread count at ~1/ln(k) ≈ 50 even before the bandwidth knee
+    (the paper's over-subscription penalty in action)."""
+    ns = np.arange(1, 400)
+    t = np.minimum(ns * tpt, bw)
+    u = t / (K_DEFAULT ** ns)
+    i = int(np.argmax(u))
+    assert i < len(ns) - 1
+    knee = int(np.ceil(bw / tpt))
+    cap = 1.0 / np.log(K_DEFAULT)  # ~50.5: where n/k^n itself peaks
+    expect = min(knee, int(np.floor(cap)))
+    assert abs(ns[i] - expect) <= 1, (ns[i], knee, expect)
+
+
+def test_r_max_formula():
+    b = 2.0
+    n_star = [10.0, 5.0, 2.0]
+    expect = b * sum(K_DEFAULT ** -n for n in n_star)
+    assert r_max(b, n_star) == pytest.approx(expect, rel=1e-6)
