@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows.
   Table I -> bench_end_to_end      (Globus/Marlin/AutoMDT, live engine)
   §V-A    -> bench_training_time   (offline training wall time)
   (g)     -> roofline              (dry-run roofline aggregates)
+  beyond  -> bench_scenarios       (dynamic conditions: domain-randomized
+                                    agent vs static/exploration-only)
 """
 
 from __future__ import annotations
@@ -19,7 +21,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_training_time, bench_convergence,
                             bench_bottleneck, bench_action_space,
-                            bench_end_to_end, bench_finetune, roofline)
+                            bench_end_to_end, bench_finetune, roofline,
+                            bench_scenarios)
     suites = [
         ("training_time", bench_training_time.main),
         ("convergence", bench_convergence.main),
@@ -28,6 +31,7 @@ def main() -> None:
         ("end_to_end", bench_end_to_end.main),
         ("finetune", bench_finetune.main),
         ("roofline", roofline.main),
+        ("scenarios", bench_scenarios.main),
     ]
     print("name,us_per_call,derived")
     failures = 0

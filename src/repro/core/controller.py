@@ -30,9 +30,17 @@ class AutoMDTController:
         self.deterministic = deterministic
         self._key = jax.random.PRNGKey(seed)
         self._apply = jax.jit(nets.policy_apply)
+        self._bw_seen = 1e-9  # running max when bw_ref is not provided
 
     def _obs_vector(self, obs: dict):
-        bw = self.bw_ref or max(max(obs["throughputs"]), 1e-9)
+        if self.bw_ref:
+            bw = self.bw_ref
+        else:
+            # running max, not the instantaneous max: under time-varying
+            # conditions the observation scale must not shrink with every
+            # bandwidth dip (training normalizes by the schedule's PEAK)
+            self._bw_seen = max(self._bw_seen, max(obs["throughputs"]), 1e-9)
+            bw = self._bw_seen
         return jnp.asarray(np.concatenate([
             np.asarray(obs["threads"], float) / self.n_max,
             np.asarray(obs["throughputs"], float) / bw,

@@ -22,7 +22,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks as nets
-from repro.core.simulator import env_reset, env_step, observe, OBS_DIM, ACT_DIM
+from repro.core.simulator import (env_reset, env_step, observe, OBS_DIM,
+                                  ACT_DIM, dyn_env_reset, dyn_env_step,
+                                  observe_sched)
 from repro.optim import adamw_init, adamw_update
 
 
@@ -90,6 +92,31 @@ def _rollout(policy_params, env_params, key, *, M, substeps):
     return traj  # obs (M,8), act (M,3), rew (M,), logp (M,)
 
 
+def _rollout_sched(policy_params, env_params, table, key, *, M, substeps):
+    """Schedule-aware episode in one env: same structure as _rollout, but
+    conditions follow ``table`` and the episode start time is drawn uniformly
+    over the schedule horizon so M-step episodes see every phase."""
+    k_reset, k_t0, k_steps = jax.random.split(key, 3)
+    horizon = table.tpt.shape[0] * table.bin_seconds
+    span = jnp.maximum(horizon - (M + 1) * env_params.duration, 0.0)
+    t0 = jax.random.uniform(k_t0, ()) * span
+    state = dyn_env_reset(env_params, table, k_reset, t0, substeps=substeps)
+    obs0 = observe_sched(env_params, table, state)
+
+    def step(carry, k):
+        state, obs = carry
+        mean, std = nets.policy_apply(policy_params, obs)
+        action = mean + std * jax.random.normal(k, mean.shape)
+        logp = nets.gaussian_logp(mean, std, action)
+        state, obs_next, reward = dyn_env_step(env_params, table, state,
+                                               action, substeps=substeps)
+        return (state, obs_next), (obs, action, reward, logp)
+
+    keys = jax.random.split(k_steps, M)
+    (_, _), traj = jax.lax.scan(step, (state, obs0), keys)
+    return traj
+
+
 def _returns(rew, gamma):
     def back(g, r):
         g = r + gamma * g
@@ -146,6 +173,97 @@ def _make_episode_fn(env_params, cfg: PPOConfig):
         return ({"params": params, "opt": opt}, ep_rewards, losses[-1])
 
     return jax.jit(episode)
+
+
+def _make_episode_fn_sched(env_params, cfg: PPOConfig):
+    """Scenario-distribution twin of _make_episode_fn: the batched schedule
+    tables are a TRACED argument, so resampling scenarios between episodes
+    (domain randomization) reuses the one compiled program — no per-schedule
+    retrace."""
+
+    def episode(train_state, tables, key):
+        params, opt = train_state["params"], train_state["opt"]
+        k_roll, _ = jax.random.split(key)
+        roll_keys = jax.random.split(k_roll, cfg.n_envs)
+        obs, act, rew, logp = jax.vmap(
+            lambda tab, k: _rollout_sched(params["policy"], env_params, tab,
+                                          k, M=cfg.max_steps,
+                                          substeps=cfg.substeps)
+        )(tables, roll_keys)  # (E, M, ...)
+        ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
+        flat = (obs.reshape(-1, OBS_DIM), act.reshape(-1, ACT_DIM),
+                ret.reshape(-1), logp.reshape(-1))
+
+        def update(carry, _):
+            params, opt = carry
+            (l, aux), grads = jax.value_and_grad(_loss, has_aux=True)(
+                params, flat, cfg)
+            params, opt, _ = adamw_update(params, grads, opt, lr=cfg.lr,
+                                          weight_decay=0.0,
+                                          max_grad_norm=cfg.max_grad_norm)
+            return (params, opt), l
+
+        (params, opt), losses = jax.lax.scan(update, (params, opt), None,
+                                             length=cfg.ppo_epochs)
+        ep_rewards = rew.sum(axis=1)  # (E,)
+        return ({"params": params, "opt": opt}, ep_rewards, losses[-1])
+
+    return jax.jit(episode)
+
+
+def train_ppo_scenarios(env_params, tables, cfg: PPOConfig, *, r_max=None,
+                        key=None, resample=None):
+    """Domain-randomized PPO over a distribution of dynamic scenarios.
+
+    ``tables``: batched ScheduleTable with leading axis cfg.n_envs — each env
+    rolls out under its own time-varying conditions. ``resample``: optional
+    ``fn(round_index) -> batched tables`` called before every episode batch
+    to redraw the scenario distribution (same shapes => no retrace).
+    Returns TrainResult (best-params convention, like train_ppo)."""
+    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
+    k_init, key = jax.random.split(key)
+    train_state = init_agent(k_init, cfg)
+    episode_fn = _make_episode_fn_sched(env_params, cfg)
+
+    best_r = -jnp.inf
+    best_params = train_state["params"]
+    stagnant = 0
+    converged_at = None
+    history = []
+    t0 = time.time()
+    n_episodes = 0
+    rnd = 0
+
+    while n_episodes < cfg.max_episodes:
+        if resample is not None:
+            tables = resample(rnd)
+        rnd += 1
+        key, k = jax.random.split(key)
+        train_state, ep_rewards, loss = episode_fn(train_state, tables, k)
+        ep_rewards = jax.device_get(ep_rewards)
+        for r in ep_rewards:
+            n_episodes += 1
+            history.append(float(r))
+            if r > best_r:
+                best_r = float(r)
+                best_params = jax.device_get(train_state["params"])
+                stagnant = 0
+            else:
+                stagnant += 1
+        if cfg.log_every and n_episodes % cfg.log_every < cfg.n_envs:
+            print(f"[ppo-sc] ep={n_episodes} best={best_r:.3f} "
+                  f"loss={float(loss):.3f}", flush=True)
+        if r_max is not None:
+            if (converged_at is None
+                    and best_r >= cfg.convergence_frac * r_max * cfg.max_steps):
+                converged_at = n_episodes
+            if converged_at is not None and stagnant >= cfg.patience:
+                break
+
+    return TrainResult(params=best_params, episodes=n_episodes,
+                       wall_s=time.time() - t0, history=history,
+                       converged_at=converged_at, best_reward=float(best_r),
+                       r_max=r_max)
 
 
 def train_ppo(env_params, cfg: PPOConfig, *, r_max=None, key=None):

@@ -32,10 +32,18 @@ class EventSimState:
 
 class EventSimulator:
     def __init__(self, *, tpt, bandwidth, buffer_capacity, chunk=None,
-                 eps=1e-3, duration=1.0):
+                 eps=1e-3, duration=1.0, schedule=None):
         """tpt/bandwidth: per-stage (read, network, write); buffer_capacity:
         (sender, receiver). chunk defaults to min(tpt)*duration/8 so a thread
-        completes several chunks per simulated second."""
+        completes several chunks per simulated second.
+
+        ``schedule``: optional ``(tpt_table[T,3], bw_table[T,3], bin_seconds)``
+        of piecewise-constant conditions (repro.scenarios format). When set,
+        tpt/bandwidth are looked up at each task's ABSOLUTE start time — the
+        clock accumulates ``duration`` per get_utility() call — making this
+        the oracle for the schedule-aware dense simulator. A task straddling
+        a bin boundary keeps its start-bin rate (chunk-granularity artifact,
+        shrinking with chunk size like every other event-model artifact)."""
         self.tpt = [float(x) for x in tpt]
         self.bw = [float(x) for x in bandwidth]
         self.cap = [float(x) for x in buffer_capacity]
@@ -43,11 +51,28 @@ class EventSimulator:
         self.eps = eps
         self.duration = duration
         self.state = EventSimState()
+        self.t_global = 0.0
+        self.schedule = None
+        if schedule is not None:
+            tpt_tab, bw_tab, bin_s = schedule
+            self.schedule = ([[float(x) for x in row] for row in tpt_tab],
+                             [[float(x) for x in row] for row in bw_tab],
+                             float(bin_s))
+
+    def _conditions(self, stage, t_abs):
+        """(tpt_i, bw_i) at absolute sim time t_abs."""
+        if self.schedule is None:
+            return self.tpt[stage], self.bw[stage]
+        tpt_tab, bw_tab, bin_s = self.schedule
+        idx = min(max(int(t_abs / bin_s), 0), len(tpt_tab) - 1)
+        return tpt_tab[idx][stage], bw_tab[idx][stage]
 
     # -- Algorithm 1, TASK ------------------------------------------------
     def _task(self, t, stage, n_threads, moved, retries):
         d_task = 0.0
-        rate = min(self.tpt[stage], self.bw[stage] / max(n_threads[stage], 1))
+        tpt_i, bw_i = self._conditions(stage, self.t_global + t)
+        rate = min(tpt_i, bw_i / max(n_threads[stage], 1))
+        rate = max(rate, 1e-12)
         ch = self.chunk
         s = self.state
         if stage == R:
@@ -117,7 +142,9 @@ class EventSimulator:
             "receiver_buf": self.state.receiver_buf,
             "retries": retries,
         }
+        self.t_global += self.duration  # schedule clock: one call = duration s
         return reward, info
 
     def reset(self):
         self.state = EventSimState()
+        self.t_global = 0.0

@@ -118,6 +118,95 @@ def env_step(params: SimParams, state: EnvState, action, *, substeps=50):
     return new_state, observe(params, new_state), reward
 
 
+# ---------------------------------------------------------------------------
+# Schedule-aware (dynamic-scenario) path
+# ---------------------------------------------------------------------------
+#
+# Same buffer dynamics, but tpt/bw are FUNCTIONS OF SIMULATED TIME, supplied
+# as piecewise-constant ScheduleTable arrays (repro.scenarios.schedule). The
+# lookup is a gather indexed by the carried sim clock, so the whole thing
+# stays one trace under jit and vmaps over a batch of per-env tables — that
+# is what keeps domain-randomized PPO training batched on-accelerator.
+
+class DynEnvState(NamedTuple):
+    buffers: jnp.ndarray      # (2,) sender/receiver occupancy
+    threads: jnp.ndarray      # (3,) current concurrency
+    throughputs: jnp.ndarray  # (3,) last measured per-stage throughput
+    t: jnp.ndarray            # scalar, simulated seconds elapsed
+
+
+def sim_interval_sched(params: SimParams, table, buffers, threads, t0, *,
+                       substeps=50):
+    """Simulate ``duration`` seconds starting at sim time ``t0`` under the
+    schedule ``table``. Returns (buffers', throughputs (3,)). Conditions are
+    re-looked-up every sub-interval, so intra-interval changes (a brown-out
+    shorter than one env step) are honored."""
+    dt = params.duration / substeps
+    T = table.tpt.shape[0]
+
+    def sub(carry, _):
+        bufs, t = carry
+        idx = jnp.clip(jnp.floor(t / table.bin_seconds), 0, T - 1)
+        idx = idx.astype(jnp.int32)
+        rate = jnp.minimum(threads * table.tpt[idx], table.bw[idx])
+        s_buf, r_buf = bufs[0], bufs[1]
+        read = jnp.minimum(rate[0] * dt, params.cap[0] - s_buf)
+        read = jnp.maximum(read, 0.0)
+        s_mid = s_buf + read
+        net = jnp.minimum(jnp.minimum(rate[1] * dt, s_mid),
+                          params.cap[1] - r_buf)
+        net = jnp.maximum(net, 0.0)
+        r_mid = r_buf + net
+        wr = jnp.maximum(jnp.minimum(rate[2] * dt, r_mid), 0.0)
+        new = jnp.stack([s_mid - net, r_mid - wr])
+        return (new, t + dt), jnp.stack([read, net, wr])
+
+    (buffers, _), moved = jax.lax.scan(sub, (buffers, t0), None,
+                                       length=substeps)
+    throughputs = moved.sum(axis=0) / params.duration
+    return buffers, throughputs
+
+
+def observe_sched(params: SimParams, table, state: DynEnvState):
+    """Same 8-dim observation, normalized by the schedule's PEAK bandwidth so
+    the scale is stable while conditions move underneath the agent."""
+    bw_ref = jnp.maximum(jnp.max(table.bw), 1e-9)
+    free = (params.cap - state.buffers) / jnp.maximum(params.cap, 1e-9)
+    return jnp.concatenate([
+        state.threads / params.n_max,
+        state.throughputs / bw_ref,
+        free,
+    ])  # (8,)
+
+
+@partial(jax.jit, static_argnames=("substeps",))
+def dyn_env_reset(params: SimParams, table, key, t0=0.0, *, substeps=50):
+    """``t0``: sim-time at which the episode starts — domain-randomized
+    training draws it uniformly so short episodes cover every phase of a
+    long schedule."""
+    threads = jax.random.randint(key, (3,), 1, 16).astype(jnp.float32)
+    buffers = jnp.zeros((2,), jnp.float32)
+    t0 = jnp.asarray(t0, jnp.float32)
+    buffers, tps = sim_interval_sched(params, table, buffers, threads, t0,
+                                      substeps=substeps)
+    return DynEnvState(buffers=buffers, threads=threads, throughputs=tps,
+                       t=t0 + params.duration)
+
+
+@partial(jax.jit, static_argnames=("substeps",))
+def dyn_env_step(params: SimParams, table, state: DynEnvState, action, *,
+                 substeps=50):
+    """Schedule-aware env_step: same action semantics, the sim clock advances
+    by ``duration`` each call. Returns (state', obs, reward)."""
+    threads = jnp.clip(jnp.round(action), 1.0, params.n_max)
+    buffers, tps = sim_interval_sched(params, table, state.buffers, threads,
+                                      state.t, substeps=substeps)
+    new_state = DynEnvState(buffers=buffers, threads=threads,
+                            throughputs=tps, t=state.t + params.duration)
+    reward = utility(tps, threads, k=params.k)
+    return new_state, observe_sched(params, table, new_state), reward
+
+
 class SimEnv:
     """Convenience OO wrapper (host-side users: controller, benchmarks).
     The PPO trainer uses the functional API directly."""
@@ -148,4 +237,39 @@ class SimEnv:
         self.state, obs, _ = env_step(self.params, self.state,
                                       jnp.asarray(threads, jnp.float32),
                                       substeps=self.substeps)
+        return [float(x) for x in self.state.throughputs]
+
+
+class DynSimEnv:
+    """OO wrapper over the schedule-aware path — the simulator-side twin of
+    driving a real TransferEngine under a ScenarioDriver. The clock keeps
+    advancing across reset() (a reset re-randomizes threads, not the world)."""
+
+    def __init__(self, params: SimParams, table, *, substeps=50, seed=0):
+        self.params = params
+        self.table = table
+        self.substeps = substeps
+        self._key = jax.random.PRNGKey(seed)
+        self.state = None
+
+    def _split(self):
+        self._key, k = jax.random.split(self._key)
+        return k
+
+    def reset(self):
+        t0 = self.state.t if self.state is not None else 0.0
+        self.state = dyn_env_reset(self.params, self.table, self._split(),
+                                   t0, substeps=self.substeps)
+        return observe_sched(self.params, self.table, self.state)
+
+    def step(self, action):
+        self.state, obs, reward = dyn_env_step(
+            self.params, self.table, self.state,
+            jnp.asarray(action, jnp.float32), substeps=self.substeps)
+        return obs, float(reward)
+
+    def probe(self, threads):
+        self.state, _, _ = dyn_env_step(self.params, self.table, self.state,
+                                        jnp.asarray(threads, jnp.float32),
+                                        substeps=self.substeps)
         return [float(x) for x in self.state.throughputs]

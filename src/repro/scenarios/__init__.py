@@ -1,0 +1,26 @@
+"""Dynamic scenario subsystem: composable, time-varying network/system
+conditions, driven from ONE definition into all three layers —
+
+  schedule.py   ScheduleTable (piecewise-constant jnp tables) + lookup
+  families.py   the generators: static, step, diurnal, bursty, square_wave,
+                brownout, random_walk
+  spec.py       ScenarioSpec (JSON scenario files) + domain-randomized
+                batch sampling
+  driver.py     ScenarioDriver: replay against the live TransferEngine
+  evaluate.py   scoring harness vs static / exploration-only baselines
+
+Sim side: repro.core.simulator.dyn_env_step / sim_interval_sched;
+training side: repro.core.ppo.train_ppo_scenarios.
+"""
+
+from repro.scenarios.schedule import (ScheduleTable, make_table, schedule_at,
+                                      stack_tables, table_to_numpy, peak_bw,
+                                      bottleneck_trace, horizon_seconds)
+from repro.scenarios.families import FAMILIES
+from repro.scenarios.spec import (ScenarioSpec, default_specs,
+                                  sample_scenario_batch)
+from repro.scenarios.driver import ScenarioDriver
+from repro.scenarios.evaluate import (StaticController, exploration_baseline,
+                                      static_baseline, run_in_dynamic_sim,
+                                      evaluate_scenario, default_params,
+                                      EvalResult)

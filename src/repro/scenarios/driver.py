@@ -1,0 +1,97 @@
+"""ScenarioDriver — replay a scenario against the REAL transfer pipeline.
+
+The same ScheduleTable that trains the agent in simulation retunes the live
+``TransferEngine``'s StageThrottles on a background ticker: at each tick the
+driver looks up the current bin (wall-clock, optionally time-scaled so a
+60-simulated-second scenario replays in 6 real seconds) and calls the
+thread-safe ``StageThrottle.set_rates``. Sim units (Gbit/s in the bundled
+scenarios) map to engine bytes/s through ``bytes_per_unit``.
+
+    spec = ScenarioSpec(family="step", seed=3)
+    eng = TransferEngine(src, sink, throttles=(StageThrottle(), ...))
+    with ScenarioDriver(eng, spec, bytes_per_unit=4 << 20, time_scale=10):
+        controller.run(eng, ...)
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.scenarios.schedule import ScheduleTable, table_to_numpy
+
+
+class ScenarioDriver:
+    def __init__(self, engine, scenario, *, bytes_per_unit=1 << 20,
+                 tick=0.05, time_scale=1.0, loop=False):
+        """``scenario``: a ScenarioSpec, a ScheduleTable, or raw
+        ``(tpt[T,3], bw[T,3], bin_seconds)``. ``time_scale``: simulated
+        seconds per wall second. ``loop``: wrap past the horizon instead of
+        holding the last bin."""
+        self.engine = engine
+        if hasattr(scenario, "table"):        # ScenarioSpec
+            scenario = scenario.table()
+        if isinstance(scenario, ScheduleTable):
+            scenario = table_to_numpy(scenario)
+        tpt, bw, bin_s = scenario
+        self.tpt = np.asarray(tpt, float)
+        self.bw = np.asarray(bw, float)
+        self.bin_seconds = float(bin_s)
+        self.bytes_per_unit = float(bytes_per_unit)
+        self.tick = tick
+        self.time_scale = float(time_scale)
+        self.loop = loop
+        self._stop = threading.Event()
+        self._thread = None
+        self._t0 = None
+        self._applied_idx = -1
+
+    # -- lifecycle --------------------------------------------------------
+    def start(self):
+        if self._thread is not None:
+            raise RuntimeError("driver already started")
+        self._t0 = time.monotonic()
+        self._apply(0)
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)
+            self._thread = None
+
+    def __enter__(self):
+        return self.start()
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- ticker -----------------------------------------------------------
+    def sim_time(self):
+        """Current position on the scenario clock, in simulated seconds."""
+        if self._t0 is None:
+            return 0.0
+        return (time.monotonic() - self._t0) * self.time_scale
+
+    def _index_at(self, sim_t):
+        idx = int(sim_t / self.bin_seconds)
+        T = len(self.tpt)
+        return idx % T if self.loop else min(max(idx, 0), T - 1)
+
+    def _apply(self, idx):
+        scale = self.bytes_per_unit
+        for stage, throttle in enumerate(self.engine.throttles):
+            throttle.set_rates(
+                aggregate_bps=float(self.bw[idx, stage]) * scale,
+                per_thread_bps=float(self.tpt[idx, stage]) * scale)
+        self._applied_idx = idx
+
+    def _run(self):
+        while not self._stop.wait(self.tick):
+            idx = self._index_at(self.sim_time())
+            if idx != self._applied_idx:
+                self._apply(idx)

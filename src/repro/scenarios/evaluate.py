@@ -1,0 +1,159 @@
+"""Evaluation harness: score controllers on dynamic scenarios.
+
+Runs any controller (AutoMDTController, MarlinOptimizer, GlobusController,
+or the exploration-only StaticController) through the schedule-aware dense
+simulator and scores, per scenario:
+
+  convergence_steps   first step at >= ``frac`` of the instantaneous
+                      achievable bottleneck (None if never reached)
+  utilization         mean delivered / achievable over the run — the metric
+                      that penalizes slow re-convergence after every change
+  mean_utility        mean per-step utility reward (the PPO objective)
+  completion_s        steps to deliver ``total_gbit`` (None if unfinished)
+
+The baselines the ISSUE asks for: ``static_baseline`` (Globus-style frozen
+config) and ``exploration_baseline`` (probe once under the schedule's t=0
+conditions, then hold n* forever — perfect for a frozen world, blind to
+change)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import GlobusController, explore
+from repro.core.controller import AutoMDTController
+from repro.core.simulator import (SimParams, make_env_params, dyn_env_reset,
+                                  dyn_env_step, DynSimEnv)
+from repro.core.utility import utility as utility_fn, K_DEFAULT
+from repro.scenarios.schedule import (ScheduleTable, bottleneck_trace,
+                                      peak_bw)
+
+
+class StaticController:
+    """Exploration-only baseline: holds one fixed allocation forever."""
+
+    def __init__(self, n3):
+        self.n = np.asarray(n3, dtype=int)
+
+    def update(self, throughputs):
+        return self.n.copy()
+
+
+def default_params(spec, *, n_max=50, cap=2.0) -> SimParams:
+    """SimParams for a spec: static tpt/bw fields hold the BASE conditions
+    (only cap/n_max/duration/k matter on the scheduled path)."""
+    return make_env_params(tpt=list(spec.base_tpt), bw=list(spec.base_bw),
+                           cap=[cap, cap], n_max=n_max)
+
+
+def exploration_baseline(spec, params, *, n_samples=120, seed=0):
+    """Probe the scenario's OPENING conditions (the frozen-world workflow:
+    explore once before the transfer, trust the numbers forever), then never
+    adapt. The probe world is the schedule's first bin held constant —
+    probing must not leak knowledge of later conditions."""
+    table = spec.table()
+    opening = ScheduleTable(tpt=table.tpt[:1], bw=table.bw[:1],
+                            bin_seconds=table.bin_seconds)
+    env = DynSimEnv(params, opening, seed=seed)
+    env.reset()
+    ex = explore(env.probe, n_samples=n_samples,
+                 n_max=int(params.n_max), seed=seed)
+    return StaticController(ex.n_star_int()), ex
+
+
+def static_baseline(**kw):
+    return GlobusController(**kw)
+
+
+@dataclass
+class EvalResult:
+    scenario: str
+    controller: str
+    convergence_steps: int | None
+    utilization: float
+    mean_utility: float
+    delivered: float          # Gbit
+    completion_s: float | None  # simulated seconds
+    threads: np.ndarray = field(repr=False)
+    tput: np.ndarray = field(repr=False)
+
+
+def _obs_dict(params, table, st):
+    return {"threads": list(np.asarray(st.threads)),
+            "throughputs": list(np.asarray(st.throughputs)),
+            "sender_free": float(params.cap[0] - st.buffers[0]),
+            "receiver_free": float(params.cap[1] - st.buffers[1]),
+            "sender_capacity": float(params.cap[0]),
+            "receiver_capacity": float(params.cap[1])}
+
+
+def run_in_dynamic_sim(spec, params, controller, *, steps=None, seed=7,
+                       total_gbit=None, frac=0.95, label=None):
+    """One controller through one scenario (1 env step = ``params.duration``
+    simulated seconds). ``steps`` defaults to the scenario horizon;
+    delivered/completion are in Gbit and simulated seconds respectively."""
+    table = spec.table()
+    duration = float(params.duration)
+    steps = steps or int(round(spec.horizon / duration))
+    achievable = np.asarray(bottleneck_trace(table, float(params.n_max)))
+    bin_s = float(np.asarray(table.bin_seconds))
+
+    st = dyn_env_reset(params, table, jax.random.PRNGKey(seed))
+    threads_hist, tput_hist, util_hist, ach_hist = [], [], [], []
+    delivered = 0.0
+    completion = None
+    for i in range(steps):
+        o = _obs_dict(params, table, st)
+        if isinstance(controller, AutoMDTController):
+            n = controller.step(o)
+        else:
+            n = controller.update(o["throughputs"])
+        st, _, r = dyn_env_step(params, table, st,
+                                jnp.asarray(n, jnp.float32))
+        t_mid = float(st.t) - 0.5 * duration
+        idx = min(max(int(t_mid / bin_s), 0), len(achievable) - 1)
+        threads_hist.append(np.asarray(st.threads).tolist())
+        tput_hist.append(float(st.throughputs[2]))
+        util_hist.append(float(r))
+        ach_hist.append(float(achievable[idx]))
+        delivered += tput_hist[-1] * duration  # Gbit/s over duration seconds
+        if (total_gbit is not None and completion is None
+                and delivered >= total_gbit):
+            completion = (i + 1) * duration  # sim seconds; keep running —
+            # utilization/convergence are scored over the full horizon,
+            # not the lucky early window
+    tput = np.asarray(tput_hist)
+    ach = np.maximum(np.asarray(ach_hist), 1e-9)
+    hits = np.nonzero(tput >= frac * ach)[0]
+    return EvalResult(
+        scenario=spec.name,
+        controller=label or type(controller).__name__,
+        convergence_steps=int(hits[0]) + 1 if len(hits) else None,
+        utilization=float(np.mean(np.minimum(tput / ach, 1.0))),
+        mean_utility=float(np.mean(util_hist)),
+        delivered=delivered,
+        completion_s=completion,
+        threads=np.asarray(threads_hist),
+        tput=tput,
+    )
+
+
+def evaluate_scenario(spec, agent_controller, *, params=None, steps=None,
+                      seed=7, total_gbit=None):
+    """Agent vs the two ISSUE baselines on one scenario. Returns
+    {label: EvalResult}."""
+    params = params or default_params(spec)
+    expl_ctrl, _ = exploration_baseline(spec, params, seed=seed)
+    runs = {
+        "automdt": agent_controller,
+        "static": static_baseline(),
+        "exploration_only": expl_ctrl,
+    }
+    return {label: run_in_dynamic_sim(spec, params, ctrl, steps=steps,
+                                      seed=seed, total_gbit=total_gbit,
+                                      label=label)
+            for label, ctrl in runs.items()}

@@ -1,0 +1,154 @@
+"""The scenario families: generators of time-varying condition tables.
+
+Every family is a pure function of ``(ScenarioSpec-level knobs, seed)`` built
+host-side with numpy (a schedule is built once, then replayed many times on
+accelerator or against the live engine), returning ``(tpt[T,3], bw[T,3])``.
+Determinism contract: the same arguments — including ``seed`` — produce
+bit-identical tables (tested in tests/test_scenarios.py).
+
+Families (ISSUE tentpole set):
+
+  static        frozen conditions (the seed repo's world; control group)
+  step          one step change of a stage's bandwidth at a chosen time
+  diurnal       smooth day/night ramp of the network share, sampled into bins
+  bursty        seeded on/off competing background traffic on the network
+  square_wave   the bottleneck migrates read -> network -> write cyclically
+  brownout      transient near-zero brown-outs of a random stage
+  random_walk   seeded multiplicative random walk of every stage's bandwidth
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+R, N, W = 0, 1, 2
+
+
+def _base(horizon, bin_seconds, base_tpt, base_bw):
+    T = max(int(round(horizon / bin_seconds)), 1)
+    tpt = np.tile(np.asarray(base_tpt, np.float32), (T, 1))
+    bw = np.tile(np.asarray(base_bw, np.float32), (T, 1))
+    return T, tpt, bw
+
+
+def _scale(tpt, bw, rows, stage, factor, mode):
+    """Degrade (or boost) a stage over ``rows``. ``mode`` picks WHAT moves:
+
+      "tpt"   per-thread rate only (competing flows shrink each stream's
+              share; the aggregate cap stands) — the optimal thread count
+              n* = bw/tpt RISES, so a frozen allocation underutilizes and
+              adaptation actually pays. The default for most families.
+      "bw"    aggregate cap only (admin cap / link reroute) — n* falls;
+              holding stale extra threads burns the k^-n utility penalty.
+      "both"  capacity collapse (brown-out, dead disk): both move together.
+    """
+    if mode in ("tpt", "both"):
+        tpt[rows, stage] *= factor
+    if mode in ("bw", "both"):
+        bw[rows, stage] *= factor
+
+
+def static(horizon, bin_seconds, base_tpt, base_bw, seed=0):
+    _, tpt, bw = _base(horizon, bin_seconds, base_tpt, base_bw)
+    return tpt, bw
+
+
+def step(horizon, bin_seconds, base_tpt, base_bw, seed=0, *,
+         stage=N, at_frac=0.5, factor=0.4, mode="tpt"):
+    """Stage ``stage`` degrades (or recovers) by ``factor`` at ``at_frac`` of
+    the horizon and stays there. Default mode="tpt": a competing transfer
+    lands on the shared resource and per-stream share collapses — the agent
+    must RAISE that stage's concurrency to win its share back."""
+    T, tpt, bw = _base(horizon, bin_seconds, base_tpt, base_bw)
+    cut = min(int(round(at_frac * T)), T - 1)
+    _scale(tpt, bw, slice(cut, T), stage, factor, mode)
+    return tpt, bw
+
+
+def diurnal(horizon, bin_seconds, base_tpt, base_bw, seed=0, *,
+            period_frac=1.0, depth=0.5, phase=0.0, mode="tpt"):
+    """Per-stream network share ramps down and back up once per ``period``
+    (a scaled-down day of background load): share = base * (1 - depth *
+    (1 - cos)/2)."""
+    T, tpt, bw = _base(horizon, bin_seconds, base_tpt, base_bw)
+    period = max(period_frac * horizon, bin_seconds)
+    t = (np.arange(T) + 0.5) * bin_seconds
+    dip = depth * 0.5 * (1.0 - np.cos(2 * np.pi * t / period + phase))
+    scale = (1.0 - dip).astype(np.float32)
+    for i in range(T):
+        _scale(tpt, bw, i, N, scale[i], mode)
+    return tpt, bw
+
+
+def bursty(horizon, bin_seconds, base_tpt, base_bw, seed=0, *,
+           burst_prob=0.25, load=0.6, mean_len=3, mode="tpt"):
+    """Competing background traffic: seeded on/off bursts steal ``load`` of
+    each stream's network share; burst lengths are geometric with
+    ``mean_len`` bins. More parallel streams reclaim share during a burst —
+    exactly why these tools use parallelism."""
+    T, tpt, bw = _base(horizon, bin_seconds, base_tpt, base_bw)
+    rng = np.random.default_rng(seed)
+    on = False
+    for i in range(T):
+        if on:
+            on = rng.random() >= 1.0 / max(mean_len, 1)
+        else:
+            on = rng.random() < burst_prob
+        if on:
+            _scale(tpt, bw, i, N, 1.0 - load, mode)
+    return tpt, bw
+
+
+def square_wave(horizon, bin_seconds, base_tpt, base_bw, seed=0, *,
+                period_bins=10, factor=0.35, mode="tpt"):
+    """Bottleneck migration: the degraded stage cycles read -> network ->
+    write every ``period_bins`` bins (the paper's three Fig. 5 scenarios,
+    concatenated in time — each phase wants a different allocation)."""
+    T, tpt, bw = _base(horizon, bin_seconds, base_tpt, base_bw)
+    for i in range(T):
+        stage = (i // max(period_bins, 1)) % 3
+        _scale(tpt, bw, i, stage, factor, mode)
+    return tpt, bw
+
+
+def brownout(horizon, bin_seconds, base_tpt, base_bw, seed=0, *,
+             n_events=2, duration_bins=2, floor=0.08, mode="both"):
+    """Transient stage brown-outs: ``n_events`` seeded windows where one
+    random stage collapses to ``floor`` of its capacity (storage contention,
+    failing NIC, GC pause ... pick your outage). Capacity collapse hits both
+    the per-thread rate and the aggregate cap."""
+    T, tpt, bw = _base(horizon, bin_seconds, base_tpt, base_bw)
+    rng = np.random.default_rng(seed)
+    for _ in range(n_events):
+        stage = int(rng.integers(0, 3))
+        start = int(rng.integers(0, max(T - duration_bins, 1)))
+        _scale(tpt, bw, slice(start, start + duration_bins), stage, floor,
+               mode)
+    return tpt, bw
+
+
+def random_walk(horizon, bin_seconds, base_tpt, base_bw, seed=0, *,
+                sigma=0.12, lo=0.25, hi=1.0, mode="tpt"):
+    """Seeded multiplicative random walk of every stage's per-thread share,
+    clipped to [lo, hi] x base — the 'weather' family for domain
+    randomization."""
+    T, tpt, bw = _base(horizon, bin_seconds, base_tpt, base_bw)
+    rng = np.random.default_rng(seed)
+    scale = np.ones(3, np.float32)
+    for i in range(T):
+        scale = np.clip(scale * np.exp(rng.normal(0.0, sigma, size=3)),
+                        lo, hi).astype(np.float32)
+        for stage in range(3):
+            _scale(tpt, bw, i, stage, scale[stage], mode)
+    return tpt, bw
+
+
+FAMILIES = {
+    "static": static,
+    "step": step,
+    "diurnal": diurnal,
+    "bursty": bursty,
+    "square_wave": square_wave,
+    "brownout": brownout,
+    "random_walk": random_walk,
+}

@@ -1,0 +1,119 @@
+"""ScenarioSpec — ONE definition, THREE consumers.
+
+A spec is a small, JSON-serializable description (family + knobs + seed)
+that compiles to a ScheduleTable. The same spec drives
+
+  * the dense JAX simulator (domain-randomized PPO training, evaluation),
+  * the event-driven oracle (property tests), and
+  * the real TransferEngine via ScenarioDriver (live replay).
+
+File format (``.scenario.json``)::
+
+    {"name": "evening-burst", "family": "bursty", "seed": 7,
+     "horizon": 60.0, "bin_seconds": 1.0,
+     "base_tpt": [0.2, 0.15, 0.2], "base_bw": [1.0, 1.0, 1.0],
+     "params": {"burst_prob": 0.3, "load": 0.7}}
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field, asdict
+
+import numpy as np
+
+from repro.scenarios.families import FAMILIES
+from repro.scenarios.schedule import ScheduleTable, make_table, stack_tables
+
+DEFAULT_TPT = (0.2, 0.15, 0.2)   # per-thread Gbit/s (benchmarks/common.py
+DEFAULT_BW = (1.0, 1.0, 1.0)     # scaling convention: ratios are what matter)
+
+
+@dataclass
+class ScenarioSpec:
+    family: str
+    name: str = ""
+    seed: int = 0
+    horizon: float = 60.0          # simulated seconds covered by the table
+    bin_seconds: float = 1.0
+    base_tpt: tuple = DEFAULT_TPT
+    base_bw: tuple = DEFAULT_BW
+    params: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown scenario family {self.family!r}; "
+                             f"have {sorted(FAMILIES)}")
+        if not self.name:
+            self.name = f"{self.family}-{self.seed}"
+
+    def tables(self):
+        """Raw numpy (tpt[T,3], bw[T,3]) — oracle & ScenarioDriver side."""
+        fn = FAMILIES[self.family]
+        return fn(self.horizon, self.bin_seconds,
+                  list(self.base_tpt), list(self.base_bw),
+                  seed=self.seed, **self.params)
+
+    def table(self) -> ScheduleTable:
+        tpt, bw = self.tables()
+        return make_table(tpt, bw, self.bin_seconds)
+
+    # -- scenario files ---------------------------------------------------
+    def to_dict(self):
+        d = asdict(self)
+        d["base_tpt"] = list(self.base_tpt)
+        d["base_bw"] = list(self.base_bw)
+        return d
+
+    def to_json(self, path=None):
+        s = json.dumps(self.to_dict(), indent=2, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s
+
+    @classmethod
+    def from_dict(cls, d):
+        d = dict(d)
+        d["base_tpt"] = tuple(d.get("base_tpt", DEFAULT_TPT))
+        d["base_bw"] = tuple(d.get("base_bw", DEFAULT_BW))
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s_or_path):
+        s = s_or_path
+        if not s.lstrip().startswith("{"):
+            with open(s_or_path) as f:
+                s = f.read()
+        return cls.from_dict(json.loads(s))
+
+
+def default_specs(*, horizon=60.0, bin_seconds=1.0, seed=0,
+                  base_tpt=DEFAULT_TPT, base_bw=DEFAULT_BW):
+    """One representative spec per family — the benchmark/evaluation suite."""
+    return [ScenarioSpec(family=f, seed=seed, horizon=horizon,
+                         bin_seconds=bin_seconds, base_tpt=base_tpt,
+                         base_bw=base_bw)
+            for f in FAMILIES]
+
+
+def sample_scenario_batch(n, *, families=None, seed=0, horizon=60.0,
+                          bin_seconds=1.0, base_tpt=DEFAULT_TPT,
+                          base_bw=DEFAULT_BW, jitter=0.25):
+    """Domain randomization: ``n`` specs drawn over ``families`` with
+    randomized seeds and base rates jittered by up to ``jitter`` (relative).
+    Returns (specs, batched ScheduleTable) — the batched table has a leading
+    env axis and a SINGLE shape for any n, so the training step never
+    retraces. Deterministic in ``seed``."""
+    families = list(families or FAMILIES)
+    rng = np.random.default_rng(seed)
+    specs = []
+    for i in range(n):
+        fam = families[int(rng.integers(0, len(families)))]
+        scale = 1.0 + jitter * rng.uniform(-1.0, 1.0, size=3)
+        specs.append(ScenarioSpec(
+            family=fam, seed=int(rng.integers(0, 2 ** 31 - 1)),
+            name=f"{fam}-dr{i}", horizon=horizon, bin_seconds=bin_seconds,
+            base_tpt=tuple(float(t * s) for t, s in zip(base_tpt, scale)),
+            base_bw=tuple(base_bw)))
+    return specs, stack_tables([s.table() for s in specs])

@@ -30,8 +30,15 @@ import time
 from dataclasses import dataclass
 
 
+_UNSET = object()
+
+
 class StageThrottle:
-    """Token bucket for aggregate stage bandwidth + per-thread rate cap."""
+    """Token bucket for aggregate stage bandwidth + per-thread rate cap.
+
+    Rates are mutable at runtime via set_rates() (thread-safe) — this is what
+    lets a ScenarioDriver replay a time-varying scenario against the live
+    pipeline while workers are mid-acquire."""
 
     def __init__(self, aggregate_bps=None, per_thread_bps=None):
         self.aggregate_bps = aggregate_bps
@@ -40,24 +47,58 @@ class StageThrottle:
         self._tokens = float(aggregate_bps) if aggregate_bps else 0.0
         self._t = time.monotonic()
 
+    def set_rates(self, aggregate_bps=_UNSET, per_thread_bps=_UNSET):
+        """Retune either cap live. None disables a cap; ZERO means fully
+        blocked (an outage bin) — acquire() parks until a retune, matching
+        the simulator where rate = min(n*tpt, 0) moves nothing. Tokens are
+        clamped to the new burst so a cap cut takes effect within one
+        chunk."""
+        with self._lock:
+            if aggregate_bps is not _UNSET:
+                enabling = aggregate_bps and not self.aggregate_bps
+                self.aggregate_bps = aggregate_bps
+                if aggregate_bps:
+                    cap = float(aggregate_bps)
+                    self._tokens = cap if enabling else min(self._tokens, cap)
+                    self._t = time.monotonic()
+                else:
+                    self._tokens = 0.0
+            if per_thread_bps is not _UNSET:
+                self.per_thread_bps = per_thread_bps
+
+    def rates(self):
+        with self._lock:
+            return self.aggregate_bps, self.per_thread_bps
+
     def acquire(self, nbytes):
         """Blocks to enforce the aggregate cap. Returns per-thread sleep that
-        the caller must additionally honor for its own chunk."""
-        if self.aggregate_bps:
-            while True:
-                with self._lock:
+        the caller must additionally honor for its own chunk. Rates are
+        re-read every iteration so a live retune is honored mid-wait — a
+        zero rate (outage) parks here instead of sleeping nbytes/0 forever
+        in the caller."""
+        while True:
+            with self._lock:
+                agg = self.aggregate_bps
+                per_thread = self.per_thread_bps
+                blocked = agg == 0 or per_thread == 0  # 0, not None: outage
+                if not blocked:
+                    if agg is None:
+                        break
                     now = time.monotonic()
-                    self._tokens = min(
-                        self._tokens + (now - self._t) * self.aggregate_bps,
-                        float(self.aggregate_bps))  # burst = 1 second
+                    self._tokens = min(self._tokens + (now - self._t) * agg,
+                                       float(agg))  # burst = 1 second
                     self._t = now
                     if self._tokens >= nbytes:
                         self._tokens -= nbytes
                         break
-                    need = (nbytes - self._tokens) / self.aggregate_bps
-                time.sleep(min(max(need, 1e-4), 0.05))
-        if self.per_thread_bps:
-            return nbytes / self.per_thread_bps
+                    need = (nbytes - self._tokens) / agg
+                else:
+                    need = 0.05  # wait for a retune to lift the outage
+            time.sleep(min(max(need, 1e-4), 0.05))
+        with self._lock:
+            per_thread = self.per_thread_bps
+        if per_thread:
+            return nbytes / per_thread
         return 0.0
 
 
@@ -73,22 +114,29 @@ class BoundedBuffer:
         self._not_empty = threading.Condition(self._lock)
 
     def put(self, item, nbytes, *, timeout=0.05):
+        """Waits under the condition in a loop until space frees or the
+        deadline passes — a spurious wakeup (or a near-miss notify) re-checks
+        and keeps waiting instead of reporting failure early."""
+        deadline = time.monotonic() + timeout
         with self._not_full:
-            if self.used + nbytes > self.capacity:
-                self._not_full.wait(timeout)
-                if self.used + nbytes > self.capacity:
+            while self.used + nbytes > self.capacity:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
                     return False
+                self._not_full.wait(remaining)
             self._q.append((item, nbytes))
             self.used += nbytes
             self._not_empty.notify()
             return True
 
     def get(self, *, timeout=0.05):
+        deadline = time.monotonic() + timeout
         with self._not_empty:
-            if not self._q:
-                self._not_empty.wait(timeout)
-                if not self._q:
+            while not self._q:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
                     return None
+                self._not_empty.wait(remaining)
             item, nbytes = self._q.pop(0)
             self.used -= nbytes
             self._not_full.notify()
@@ -195,20 +243,53 @@ class ChecksumSink:
 
 
 class FileSink:
-    def __init__(self, path):
+    """Offset-addressed sink. Int chunk ids (SyntheticSource) are byte
+    offsets into the single output at ``path``. Tuple ids ``(fidx, off)``
+    (FileSource) are per-file offsets: file ``fidx`` goes to ``paths[fidx]``
+    when given, else ``<path>.<fidx>`` — chunks land at their true offsets
+    even when write workers race out of order."""
+
+    def __init__(self, path, *, paths=None):
         self.path = path
+        self.paths = list(paths) if paths is not None else None
         self._lock = threading.Lock()
-        self._f = open(path, "wb")
+        self._files = {}  # fidx (or None for the single output) -> handle
+        self._closed = False
+
+    def _handle(self, fidx):
+        if self._closed:
+            # a straggler worker past close() must fail loudly, not reopen
+            # "wb" and truncate data already on disk
+            raise ValueError("write to closed FileSink")
+        f = self._files.get(fidx)
+        if f is None:
+            if fidx is None:
+                p = self.path
+            elif self.paths is not None:
+                p = self.paths[fidx]
+            else:
+                p = f"{self.path}.{fidx}"
+            f = open(p, "wb")
+            self._files[fidx] = f
+        return f
 
     def write_chunk(self, cid, payload):
-        off = cid if isinstance(cid, int) else None
+        if isinstance(cid, tuple):
+            fidx, off = cid
+        else:
+            fidx, off = None, (cid if isinstance(cid, int) else None)
         with self._lock:
+            f = self._handle(fidx)
             if off is not None:
-                self._f.seek(off)
-            self._f.write(payload)
+                f.seek(off)
+            f.write(payload)
 
     def close(self):
-        self._f.close()
+        with self._lock:
+            self._closed = True
+            for f in self._files.values():
+                f.close()
+            self._files.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +342,8 @@ class TransferEngine:
                     time.sleep(sleep)
                 while self._alive and not self.buffers[0].put(
                         (cid, payload), len(payload)):
-                    pass  # blocked on full sender buffer (paper: retry +eps)
+                    pass  # put() parks on the condition until space frees or
+                    # its deadline lapses; retry only re-arms the deadline
                 self._track(-1)
                 self._count(0, len(payload))
             elif stage == self.NET:

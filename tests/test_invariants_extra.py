@@ -6,6 +6,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # not baked into every CI image
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.registry import get_smoke_config

@@ -1,0 +1,315 @@
+"""Dynamic scenario subsystem: determinism, schedule lookup, dense-vs-oracle
+agreement on every family, compile-once batching, PPO domain randomization,
+and live-engine replay from the same scenario definition."""
+
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.simref import EventSimulator
+from repro.core.simulator import (make_env_params, sim_interval, env_step,
+                                  EnvState, sim_interval_sched, dyn_env_reset,
+                                  dyn_env_step, observe_sched, DynSimEnv)
+from repro.scenarios import (FAMILIES, ScenarioSpec, ScheduleTable,
+                             make_table, schedule_at, stack_tables,
+                             sample_scenario_batch, run_in_dynamic_sim,
+                             evaluate_scenario, default_params,
+                             ScenarioDriver)
+
+SEEDED = ["bursty", "brownout", "random_walk"]  # families that draw from rng
+
+
+# -- determinism & the scenario-file format ---------------------------------
+
+@pytest.mark.parametrize("family", list(FAMILIES))
+def test_same_seed_identical_tables(family):
+    a = ScenarioSpec(family=family, seed=13).table()
+    b = ScenarioSpec(family=family, seed=13).table()
+    assert np.array_equal(np.asarray(a.tpt), np.asarray(b.tpt))
+    assert np.array_equal(np.asarray(a.bw), np.asarray(b.bw))
+
+
+@pytest.mark.parametrize("family", SEEDED)
+def test_different_seed_different_tables(family):
+    a = ScenarioSpec(family=family, seed=1).table()
+    b = ScenarioSpec(family=family, seed=2).table()
+    assert (not np.array_equal(np.asarray(a.tpt), np.asarray(b.tpt))
+            or not np.array_equal(np.asarray(a.bw), np.asarray(b.bw)))
+
+
+def test_spec_json_round_trip(tmp_path):
+    spec = ScenarioSpec(family="bursty", seed=7, horizon=30.0,
+                        params={"load": 0.7})
+    path = tmp_path / "s.scenario.json"
+    spec.to_json(str(path))
+    back = ScenarioSpec.from_json(str(path))
+    assert back == spec
+    assert np.array_equal(np.asarray(back.table().bw),
+                          np.asarray(spec.table().bw))
+
+
+def test_schedule_lookup_bins_and_clipping():
+    tpt = np.tile([[0.1, 0.1, 0.1]], (4, 1)) * np.arange(1, 5)[:, None]
+    tab = make_table(tpt, tpt * 10, bin_seconds=2.0)
+    for t, expect in [(0.0, 0.1), (1.9, 0.1), (2.0, 0.2), (7.9, 0.4),
+                      (99.0, 0.4), (-1.0, 0.1)]:
+        got, _ = schedule_at(tab, jnp.asarray(t))
+        assert float(got[0]) == pytest.approx(expect), t
+
+
+def test_sample_batch_deterministic_and_stackable():
+    s1, b1 = sample_scenario_batch(6, seed=3)
+    s2, b2 = sample_scenario_batch(6, seed=3)
+    assert [s.name for s in s1] == [s.name for s in s2]
+    assert np.array_equal(np.asarray(b1.bw), np.asarray(b2.bw))
+    assert b1.tpt.shape == (6, 60, 3)
+
+
+# -- schedule-aware dense sim ------------------------------------------------
+
+def test_static_schedule_matches_frozen_sim():
+    """A constant schedule must reproduce the pinned static path exactly —
+    ties the new code to the property-tested frozen simulator."""
+    p = make_env_params(tpt=[0.08, 0.16, 0.2], bw=[1, 1, 1], cap=[2, 2])
+    tab = ScenarioSpec(family="static", base_tpt=(0.08, 0.16, 0.2)).table()
+    bufs = jnp.zeros(2)
+    threads = jnp.asarray([13.0, 7.0, 5.0])
+    t = jnp.zeros(())
+    for _ in range(5):
+        b_static, tps_static = sim_interval(p, bufs, threads)
+        b_sched, tps_sched = sim_interval_sched(p, tab, bufs, threads, t)
+        np.testing.assert_allclose(np.asarray(tps_static),
+                                   np.asarray(tps_sched), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(b_static),
+                                   np.asarray(b_sched), atol=1e-6)
+        bufs, t = b_sched, t + p.duration
+
+
+@pytest.mark.parametrize("family", list(FAMILIES))
+def test_dense_sim_matches_schedule_oracle(family):
+    """Property pin: the schedule-aware dense simulator agrees with the
+    schedule-extended event oracle on time-averaged delivered throughput,
+    for every scenario family (several seeds)."""
+    for seed in (0, 4):
+        spec = ScenarioSpec(family=family, seed=seed, horizon=16.0)
+        tab = spec.table()
+        tpt_tab, bw_tab = spec.tables()
+        p = make_env_params(tpt=list(spec.base_tpt), bw=list(spec.base_bw),
+                            cap=[2, 2])
+        ev = EventSimulator(tpt=list(spec.base_tpt),
+                            bandwidth=list(spec.base_bw),
+                            buffer_capacity=[2, 2],
+                            chunk=min(spec.base_tpt) / 32,
+                            schedule=(tpt_tab, bw_tab, spec.bin_seconds))
+        threads = [10, 10, 10]
+        bufs = jnp.zeros(2)
+        t = jnp.zeros(())
+        acc_d = np.zeros(3)
+        acc_ev = np.zeros(3)
+        wall = 0.0
+        for _ in range(16):
+            bufs, tps = sim_interval_sched(
+                p, tab, bufs, jnp.asarray(threads, jnp.float32), t)
+            t = t + p.duration
+            _, info = ev.get_utility(threads)
+            acc_d += np.asarray(tps)
+            acc_ev += np.asarray(info["moved"])
+            wall += max(info["finish"])
+        dense = acc_d[2] / 16
+        oracle = acc_ev[2] / max(wall, 1e-9)
+        # chunk-granularity + bin-straddling envelope (measured <= 0.02)
+        assert abs(dense - oracle) <= 0.06, (family, seed, dense, oracle)
+
+
+def test_dyn_env_step_clock_and_reward():
+    spec = ScenarioSpec(family="step", seed=1,
+                        params={"at_frac": 0.5, "factor": 0.3, "stage": 1})
+    tab = spec.table()
+    p = make_env_params(tpt=list(spec.base_tpt), bw=list(spec.base_bw),
+                        cap=[2, 2], n_max=50)
+    st = dyn_env_reset(p, tab, jax.random.PRNGKey(0))
+    assert float(st.t) == pytest.approx(1.0)
+    pre = post = None
+    for _ in range(58):
+        st, obs, r = dyn_env_step(p, tab, st, jnp.asarray([10., 10., 10.]))
+        assert obs.shape == (8,)
+        if abs(float(st.t) - 25.0) < 0.5:
+            pre = float(st.throughputs[1])
+        if abs(float(st.t) - 55.0) < 0.5:
+            post = float(st.throughputs[1])
+    # the step change bit: network rate drops to ~30%
+    assert post < 0.5 * pre, (pre, post)
+
+
+def test_vmap_env_step_compiles_once_across_schedules():
+    """Acceptance bit: vmapped stepping over a batch of randomized scenarios
+    traces exactly once — new schedule VALUES never retrace."""
+    p = make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1], cap=[2, 2])
+    traces = []
+
+    def raw_step(tab, st, a):
+        traces.append(1)
+        return dyn_env_step(p, tab, st, a)
+
+    batch_step = jax.jit(jax.vmap(raw_step))
+    _, b1 = sample_scenario_batch(4, seed=0)
+    _, b2 = sample_scenario_batch(4, seed=99)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    states = jax.vmap(lambda tab, k: dyn_env_reset(p, tab, k))(b1, keys)
+    acts = jnp.full((4, 3), 8.0)
+    batch_step(b1, states, acts)
+    n_first = len(traces)
+    assert n_first >= 1
+    batch_step(b2, states, acts)  # different scenario batch, same shapes
+    assert len(traces) == n_first
+
+
+def test_ppo_scenario_training_smoke():
+    from repro.core.ppo import PPOConfig, train_ppo_scenarios
+    p = make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1], cap=[2, 2],
+                        n_max=50)
+    _, tables = sample_scenario_batch(4, seed=0, horizon=30.0)
+    cfg = PPOConfig(max_episodes=8, n_envs=4, max_steps=5, seed=0)
+    res = train_ppo_scenarios(p, tables, cfg,
+                              resample=lambda i: sample_scenario_batch(
+                                  4, seed=i, horizon=30.0)[1])
+    assert res.episodes == 8
+    assert np.isfinite(res.history).all()
+
+
+# -- evaluation harness ------------------------------------------------------
+
+def test_evaluation_harness_scores_baselines():
+    spec = ScenarioSpec(family="step", seed=3, horizon=24.0,
+                        params={"at_frac": 0.5, "factor": 0.4, "stage": 1})
+    params = default_params(spec)
+    from repro.scenarios import StaticController
+    res = run_in_dynamic_sim(spec, params, StaticController([10, 10, 10]),
+                             seed=1, total_gbit=5.0)
+    assert res.completion_s is not None  # ~1 Gbit/s moves 5 Gbit fast
+    res = run_in_dynamic_sim(spec, params, StaticController([10, 10, 10]),
+                             seed=1)
+    assert 0.0 < res.utilization <= 1.0
+    assert res.threads.shape == (24, 3)
+
+
+# -- live engine replay (same definition, real pipeline) ---------------------
+
+def test_stage_throttle_set_rates_threadsafe():
+    from repro.transfer import StageThrottle
+    th = StageThrottle(aggregate_bps=1 << 30)
+    stop = threading.Event()
+    errs = []
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                th.acquire(1024)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    workers = [threading.Thread(target=hammer) for _ in range(4)]
+    for w in workers:
+        w.start()
+    for cap in (1 << 20, None, 1 << 25, 1 << 19):
+        th.set_rates(aggregate_bps=cap, per_thread_bps=cap)
+        time.sleep(0.02)
+    stop.set()
+    for w in workers:
+        w.join(timeout=2.0)
+    assert not errs
+    assert th.rates() == (1 << 19, 1 << 19)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("family", list(FAMILIES))
+def test_every_family_replays_against_live_engine(family):
+    """Acceptance bit: each family runs against the real TransferEngine from
+    the same spec that drives the simulator."""
+    from repro.transfer import (TransferEngine, SyntheticSource, ChecksumSink,
+                                StageThrottle)
+    MB = 1 << 20
+    spec = ScenarioSpec(family=family, seed=2, horizon=10.0)
+    src = SyntheticSource(256 * MB, chunk_bytes=128 * 1024)
+    eng = TransferEngine(
+        src, ChecksumSink(), sender_buf=4 * MB, receiver_buf=4 * MB,
+        throttles=(StageThrottle(), StageThrottle(), StageThrottle()),
+        initial_concurrency=(3, 3, 3), metric_interval=0.2)
+    with ScenarioDriver(eng, spec, bytes_per_unit=8 * MB,
+                        time_scale=20.0) as drv:
+        time.sleep(0.5)
+        assert drv.sim_time() > 0
+        assert drv._applied_idx >= 0
+        obs = eng.observe()
+    eng.close()
+    assert eng.bytes_written() > 0
+    assert len(obs["throughputs"]) == 3
+
+
+@pytest.mark.slow
+def test_live_engine_sees_step_change():
+    """The same step scenario that drives the sim test above changes the
+    REAL pipeline's measured network throughput."""
+    from repro.transfer import (TransferEngine, SyntheticSource, ChecksumSink,
+                                StageThrottle)
+    MB = 1 << 20
+    spec = ScenarioSpec(family="step", seed=0, horizon=8.0,
+                        params={"stage": 1, "at_frac": 0.5, "factor": 0.3})
+    src = SyntheticSource(512 * MB, chunk_bytes=128 * 1024)
+    eng = TransferEngine(
+        src, ChecksumSink(), sender_buf=4 * MB, receiver_buf=4 * MB,
+        throttles=(StageThrottle(), StageThrottle(), StageThrottle()),
+        initial_concurrency=(4, 4, 4), metric_interval=0.2)
+    with ScenarioDriver(eng, spec, bytes_per_unit=8 * MB, time_scale=2.0):
+        time.sleep(0.4)
+        eng.observe()
+        time.sleep(1.2)
+        before = eng.observe()["throughputs"][1]
+        time.sleep(1.0)
+        eng.observe()
+        time.sleep(1.2)
+        after = eng.observe()["throughputs"][1]
+    eng.close()
+    assert after < 0.6 * before, (before, after)
+
+
+def test_dyn_sim_env_probe_interface():
+    """DynSimEnv supports the exploration probe contract (engine twin)."""
+    spec = ScenarioSpec(family="diurnal", seed=0, horizon=20.0)
+    env = DynSimEnv(default_params(spec), spec.table(), seed=0)
+    obs = env.reset()
+    assert obs.shape == (8,)
+    tps = env.probe([8, 8, 8])
+    assert len(tps) == 3 and all(t >= 0 for t in tps)
+
+
+def test_dyn_sim_env_clock_survives_reset():
+    """reset() re-randomizes threads, not the world: the scenario clock
+    keeps advancing (engine-twin semantics)."""
+    spec = ScenarioSpec(family="step", seed=0, horizon=40.0)
+    env = DynSimEnv(default_params(spec), spec.table(), seed=0)
+    env.reset()
+    for _ in range(5):
+        env.step([5, 5, 5])
+    t_before = float(env.state.t)
+    env.reset()
+    assert float(env.state.t) >= t_before
+
+
+def test_eval_delivered_and_completion_respect_duration():
+    """delivered is Gbit (rate x duration) and completion_s is simulated
+    seconds, also when one env step != one second."""
+    from repro.scenarios import StaticController
+    spec = ScenarioSpec(family="static", seed=0, horizon=10.0)
+    p = make_env_params(tpt=list(spec.base_tpt), bw=list(spec.base_bw),
+                        cap=[2, 2], n_max=50, duration=0.5)
+    res = run_in_dynamic_sim(spec, p, StaticController([20, 20, 20]),
+                             seed=1, total_gbit=2.0)
+    # bottleneck 1 Gbit/s: ~10 Gbit over the 10 s horizon, done at ~2 s
+    assert res.threads.shape == (20, 3)
+    assert abs(res.delivered - 10.0) <= 1.5, res.delivered
+    assert res.completion_s is not None and abs(res.completion_s - 2.0) <= 1.0

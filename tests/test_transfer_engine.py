@@ -1,11 +1,15 @@
 """The real threaded 3-stage transfer engine."""
 
+import os
+import threading
 import time
 
+import numpy as np
 import pytest
 
-from repro.transfer import (TransferEngine, SyntheticSource, ChecksumSink,
-                            StageThrottle)
+from repro.transfer import (TransferEngine, SyntheticSource, FileSource,
+                            FileSink, ChecksumSink, StageThrottle)
+from repro.transfer.engine import BoundedBuffer
 
 MB = 1 << 20
 
@@ -86,6 +90,122 @@ def test_engine_resize_and_observe():
     assert obs["threads"] == [5, 1, 2]
     assert obs["sender_capacity"] > 0 and obs["receiver_capacity"] > 0
     eng.close()
+
+
+def test_filesink_tuple_ids_out_of_order_round_trip(tmp_path):
+    """FileSource's (fidx, off) chunk ids must land at their true per-file
+    offsets even when write workers race out of order."""
+    rng = np.random.default_rng(0)
+    srcs = []
+    for i in range(3):
+        p = tmp_path / f"in{i}"
+        p.write_bytes(rng.integers(0, 256, size=200 * 1024 + i * 7919,
+                                   dtype=np.uint8).tobytes())
+        srcs.append(str(p))
+    src = FileSource(srcs, chunk_bytes=64 * 1024)
+    chunks = []
+    while True:
+        c = src.next_chunk()
+        if c is None:
+            break
+        chunks.append(c)
+    rng.shuffle(chunks)  # simulate out-of-order arrival at the sink
+    outs = [str(tmp_path / f"out{i}") for i in range(3)]
+    sink = FileSink(str(tmp_path / "out"), paths=outs)
+    for cid, payload in chunks:
+        sink.write_chunk(cid, payload)
+    sink.close()
+    for a, b in zip(srcs, outs):
+        assert open(a, "rb").read() == open(b, "rb").read()
+
+
+def test_filesink_multifile_through_engine(tmp_path):
+    """End-to-end: FileSource -> engine (concurrent workers) -> FileSink,
+    byte-identical outputs."""
+    rng = np.random.default_rng(1)
+    srcs = []
+    for i in range(2):
+        p = tmp_path / f"src{i}"
+        p.write_bytes(rng.integers(0, 256, size=1 * MB + i * 12345,
+                                   dtype=np.uint8).tobytes())
+        srcs.append(str(p))
+    outs = [str(tmp_path / f"dst{i}") for i in range(2)]
+    sink = FileSink(str(tmp_path / "dst"), paths=outs)
+    eng = TransferEngine(FileSource(srcs, chunk_bytes=128 * 1024), sink,
+                         sender_buf=1 * MB, receiver_buf=1 * MB,
+                         initial_concurrency=(3, 3, 3), metric_interval=0.1)
+    t0 = time.time()
+    while not eng.done() and time.time() - t0 < 30:
+        time.sleep(0.05)
+    eng.close()
+    sink.close()
+    for a, b in zip(srcs, outs):
+        assert open(a, "rb").read() == open(b, "rb").read()
+
+
+def test_bounded_buffer_survives_spurious_wakeup():
+    """put() must keep waiting after a wakeup that freed no space, and still
+    succeed when space frees before its deadline (the old single-wait
+    semantics returned failure)."""
+    buf = BoundedBuffer(10)
+    assert buf.put(b"x", 10)
+    result = {}
+
+    def putter():
+        result["ok"] = buf.put(b"y", 5, timeout=0.6)
+
+    th = threading.Thread(target=putter)
+    th.start()
+    time.sleep(0.05)
+    with buf._not_full:  # spurious wakeup: notified, but still full
+        buf._not_full.notify()
+    time.sleep(0.15)
+    assert "ok" not in result  # must still be waiting, not failed
+    assert buf.get() is not None  # frees space well before the deadline
+    th.join(timeout=2.0)
+    assert result["ok"] is True
+    assert buf.used == 5
+
+
+def test_filesink_rejects_writes_after_close(tmp_path):
+    """A straggler worker writing after close() must fail loudly — reopening
+    'wb' would truncate data already on disk."""
+    sink = FileSink(str(tmp_path / "f"))
+    sink.write_chunk(0, b"abcd")
+    sink.close()
+    with pytest.raises(ValueError):
+        sink.write_chunk(0, b"efgh")
+    assert (tmp_path / "f").read_bytes() == b"abcd"
+
+
+def test_stage_throttle_zero_rate_is_outage_not_uncapped():
+    """rate=0 (scenario outage bin) parks acquire() until a retune lifts it
+    — the opposite of rate=None (uncapped)."""
+    th = StageThrottle()
+    th.set_rates(aggregate_bps=0, per_thread_bps=0)
+    done = {}
+
+    def worker():
+        done["sleep"] = th.acquire(1024)
+
+    t = threading.Thread(target=worker, daemon=True)
+    t.start()
+    time.sleep(0.15)
+    assert "sleep" not in done  # blocked during the outage
+    th.set_rates(aggregate_bps=None, per_thread_bps=None)
+    t.join(timeout=2.0)
+    assert done["sleep"] == 0.0
+
+
+def test_bounded_buffer_deadline_and_fifo():
+    buf = BoundedBuffer(10)
+    t0 = time.monotonic()
+    assert buf.get(timeout=0.12) is None  # empty: honors the full deadline
+    assert time.monotonic() - t0 >= 0.1
+    assert buf.put("a", 4) and buf.put("b", 4)
+    assert not buf.put("c", 4, timeout=0.05)  # over capacity: times out
+    assert buf.get()[0] == "a"  # FIFO preserved
+    assert buf.get()[0] == "b"
 
 
 def test_buffer_backpressure():

@@ -1,6 +1,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # not baked into every CI image
 from hypothesis import given, settings, strategies as st
 
 from repro.core.utility import utility, stage_utility, r_max, K_DEFAULT
