@@ -6,6 +6,12 @@ Scaled testbed: 25 MB/s link cap (stands in for 25 Gbit/s), per-thread
 read/net/write = 2.0/1.25/1.6 MB/s, 8 MB staging buffers, 64 MB "Large" /
 48 MB "Mixed" datasets. Paper ratios to reproduce: AutoMDT ~1.3x Marlin,
 ~6.5x Globus (Dataset A); ~1.2x / ~7.3x (Dataset B).
+
+Beyond Table I, ``live_scenario_rows`` replays every scenario family against
+the live engine via ScenarioDriver (the sim-trained domain-randomized agent
+driving the real pipeline while the schedule retunes its throttles) and
+records per-family utilization = delivered / achievable bytes — the live
+counterpart of the sim-side numbers in bench_scenarios (ROADMAP open item).
 """
 
 from __future__ import annotations
@@ -68,6 +74,75 @@ def _run(controller, source, *, budget_s=90):
     return moved / elapsed / MB  # MB/s
 
 
+def live_scenario_rows(rows=None, *, families=None, time_scale=10.0,
+                       horizon=30.0, episodes=800, seed=5):
+    """Replay each scenario family against the REAL pipeline: the same spec
+    that scores the agent in the dense sim retunes the engine's throttles on
+    a wall-clock ticker (time-compressed), the agent re-allocates live, and
+    utilization is delivered bytes over the schedule's integrated bottleneck."""
+    from benchmarks.bench_scenarios import (train_dynamic_agent, BASE_TPT,
+                                            BASE_BW, N_MAX)
+    from repro.core import AutoMDTController
+    from repro.core.schedule import bottleneck_trace
+    from repro.scenarios import FAMILIES, ScenarioSpec, ScenarioDriver
+
+    rows = rows if rows is not None else []
+    params = make_env_params(tpt=list(BASE_TPT), bw=list(BASE_BW),
+                             cap=[2.0, 2.0], n_max=N_MAX)
+    ctrl, res = train_dynamic_agent(params, seed=seed, episodes=episodes)
+    rows.append(("end_to_end.scenario_live.train_wall_s", res.wall_s * 1e6,
+                 f"{res.episodes} episodes in {res.wall_s:.1f}s"))
+    bytes_per_unit = 4 * MB  # 1.0 sim Gbit/s -> 4 MB/s on the live engine
+    # live twin of the trained controller: same policy, byte-scaled
+    # normalization references, drain interval in replayed sim-seconds
+    live_ctrl = AutoMDTController(
+        ctrl.params, n_max=N_MAX,
+        bw_ref=float(max(BASE_BW)) * bytes_per_unit, deterministic=True,
+        obs_spec=ctrl.obs_spec, interval=1.0 / time_scale)
+    for family in (families or list(FAMILIES)):
+        spec = ScenarioSpec(family=family, seed=11, horizon=horizon,
+                            base_tpt=BASE_TPT, base_bw=BASE_BW)
+        src = SyntheticSource(1 << 40, chunk_bytes=128 * 1024)  # bottomless
+        eng = TransferEngine(
+            src, ChecksumSink(),
+            sender_buf=int(2.0 * bytes_per_unit),
+            receiver_buf=int(2.0 * bytes_per_unit),
+            throttles=(StageThrottle(), StageThrottle(), StageThrottle()),
+            initial_concurrency=(2, 2, 2), n_max=N_MAX, metric_interval=0.2)
+        live_ctrl.reset()
+        wall = horizon / time_scale
+        try:
+            with ScenarioDriver(eng, spec, bytes_per_unit=bytes_per_unit,
+                                time_scale=time_scale):
+                t0 = time.time()
+                while time.time() - t0 < wall:
+                    n = live_ctrl.step(eng.observe())
+                    eng.set_concurrency(n)
+                    time.sleep(0.2)
+                elapsed = time.time() - t0
+                moved = eng.bytes_written()
+        finally:
+            eng.close()
+        # achievable bytes over the replayed window: integrate the
+        # bottleneck per bin over the sim time actually played (partial
+        # last bin pro-rated; overshoot past the horizon holds the LAST
+        # bin's rate, matching the driver's right-extension)
+        ach = np.asarray(bottleneck_trace(spec.table(), float(N_MAX)))
+        bin_s = float(spec.bin_seconds)
+        sim_elapsed = elapsed * time_scale
+        play = np.clip(sim_elapsed - np.arange(len(ach)) * bin_s, 0.0, bin_s)
+        units = float((ach * play).sum())
+        units += float(ach[-1]) * max(sim_elapsed - len(ach) * bin_s, 0.0)
+        achievable = units * bytes_per_unit / time_scale
+        util = min(moved / max(achievable, 1e-9), 1.0)
+        rows.append((f"end_to_end.scenario_live.{family}.utilization",
+                     util * 1e6,
+                     f"{util:.3f} delivered/achievable on the live engine "
+                     f"({moved / MB:.1f} MB in {elapsed:.1f}s, "
+                     f"time_scale={time_scale:g})"))
+    return rows
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     # train AutoMDT offline against the matching sim profile (MB/s -> "Gbit")
@@ -99,6 +174,7 @@ def main(rows=None):
              f"{speeds['automdt'] / max(speeds['globus'], 1e-9):.2f}x "
              "(paper: 6.6-7.3x)"),
         ]
+    live_scenario_rows(rows)
     return rows
 
 

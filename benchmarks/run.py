@@ -4,11 +4,15 @@ Prints ``name,us_per_call,derived`` CSV rows.
   Fig. 3  -> bench_convergence     (completion time vs Marlin)
   Fig. 4  -> bench_action_space    (discrete vs continuous actions)
   Fig. 5  -> bench_bottleneck      (3 bottleneck scenarios, stability)
-  Table I -> bench_end_to_end      (Globus/Marlin/AutoMDT, live engine)
-  §V-A    -> bench_training_time   (offline training wall time)
+  Table I -> bench_end_to_end      (Globus/Marlin/AutoMDT, live engine;
+                                    + per-family live ScenarioDriver replays:
+                                    end_to_end.scenario_live.*.utilization)
+  §V-A    -> bench_training_time   (offline training wall time; + substep
+                                    backend comparison jnp vs pallas)
   (g)     -> roofline              (dry-run roofline aggregates)
-  beyond  -> bench_scenarios       (dynamic conditions: domain-randomized
-                                    agent vs static/exploration-only)
+  beyond  -> bench_scenarios       (dynamic conditions: schedule-context
+                                    domain-randomized agent vs base-obs
+                                    agent and static/exploration-only)
 """
 
 from __future__ import annotations

@@ -55,22 +55,33 @@ def main(live=False):
 def run_live(spec, ctrl):
     """Replay the same scenario file against the REAL threaded pipeline."""
     import time
+    from repro.core import AutoMDTController
     from repro.transfer import (TransferEngine, SyntheticSource, ChecksumSink,
                                 StageThrottle)
     from repro.scenarios import ScenarioDriver
 
     MB = 1 << 20
+    time_scale = 10.0
+    bytes_per_unit = 8 * MB  # 1.0 sim Gbit/s -> 8 MB/s live
     src = SyntheticSource(2048 * MB, chunk_bytes=256 * 1024)
     eng = TransferEngine(
-        src, ChecksumSink(), sender_buf=8 * MB, receiver_buf=8 * MB,
+        src, ChecksumSink(),
+        sender_buf=int(2.0 * bytes_per_unit),
+        receiver_buf=int(2.0 * bytes_per_unit),
         throttles=(StageThrottle(), StageThrottle(), StageThrottle()),
         initial_concurrency=(2, 2, 2), n_max=N_MAX, metric_interval=0.4)
+    # live twin of the sim-trained controller: same policy, byte-scaled
+    # observation normalization (see benchmarks/bench_end_to_end.py)
+    live_ctrl = AutoMDTController(
+        ctrl.params, n_max=N_MAX, bw_ref=float(max(BASE_BW)) * bytes_per_unit,
+        deterministic=True, obs_spec=ctrl.obs_spec, interval=1.0 / time_scale)
     print("\nlive replay (time_scale=10x => 60 sim-seconds in 6s):")
-    with ScenarioDriver(eng, spec, bytes_per_unit=8 * MB, time_scale=10.0) as drv:
+    with ScenarioDriver(eng, spec, bytes_per_unit=bytes_per_unit,
+                        time_scale=time_scale) as drv:
         t0 = time.time()
         while time.time() - t0 < 6.0:
             obs = eng.observe()
-            n = ctrl.step(obs)
+            n = live_ctrl.step(obs)
             eng.set_concurrency(n)
             time.sleep(0.4)
             tps = [f"{x / MB:5.1f}" for x in eng.observe()["throughputs"]]

@@ -1,21 +1,32 @@
 """AutoMDT — the paper's primary contribution.
 
+  schedule.py    ScheduleTable: piecewise-constant conditions + 1-bin
+                 constant_table (the env core is schedule-native)
   simref.py      Algorithm 1, faithful: event-driven priority-queue simulator
-  simulator.py   TPU-native adaptation: dense fixed-timestep vectorized sim
+  simulator.py   TPU-native adaptation: dense fixed-timestep vectorized sim —
+                 ONE schedule-native path (static = 1-bin table), selectable
+                 substep backend ("jnp" | "pallas"), ObservationSpec
   utility.py     U = sum_i t_i / k^{n_i}; R_max; k = 1.02
   exploration.py random-threads logging phase -> B_i, TPT_i, b, n_i*, R_max
-  networks.py    residual actor/critic exactly as §IV-D
-  ppo.py         Algorithm 2 training (+ vectorized beyond-paper trainer)
+  networks.py    residual actor/critic exactly as §IV-D (widths follow
+                 ObservationSpec.dim)
+  ppo.py         Algorithm 2 training: one train_ppo for static /
+                 single-schedule / domain-randomized regimes
   marlin.py      baseline: 3 independent single-variable gradient-descent opts
   globus.py      baseline: static configuration
-  controller.py  production phase (§IV-F)
+  controller.py  production phase (§IV-F), ObservationSpec-aware
 """
 
 from repro.core.utility import utility, stage_utility, r_max, K_DEFAULT
-from repro.core.simulator import SimParams, SimEnv, make_env_params
+from repro.core.schedule import (ScheduleTable, make_table, constant_table,
+                                 schedule_at, stack_tables, peak_bw,
+                                 bottleneck_trace)
+from repro.core.simulator import (SimParams, SimEnv, make_env_params,
+                                  ObservationSpec, DEFAULT_OBS, CONTEXT_OBS)
 from repro.core.simref import EventSimulator
 from repro.core.networks import policy_init, policy_apply, value_init, value_apply
-from repro.core.ppo import PPOConfig, train_ppo, train_ppo_vectorized
+from repro.core.ppo import (PPOConfig, train_ppo, train_ppo_vectorized,
+                            train_ppo_scenarios)
 from repro.core.marlin import MarlinOptimizer
 from repro.core.globus import GlobusController
 from repro.core.exploration import explore, ExplorationResult

@@ -9,6 +9,12 @@ Works against any engine exposing:
                       sender_capacity, receiver_capacity)
     set_concurrency((n_r, n_n, n_w))
 Both repro.transfer.TransferEngine and the simulators provide this.
+
+The controller mirrors the simulator's ``ObservationSpec``: a policy trained
+with schedule context (``CONTEXT_OBS``) gets the same per-stage throughput
+deltas and buffer-drain rates here, computed from consecutive observe()
+dicts — the live twin of what ``repro.core.simulator.observe`` derives from
+``EnvState``.
 """
 
 from __future__ import annotations
@@ -19,18 +25,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks as nets
+from repro.core.simulator import ObservationSpec, DEFAULT_OBS
 
 
 class AutoMDTController:
     def __init__(self, policy_params, *, n_max=100, bw_ref=None,
-                 deterministic=False, seed=0):
+                 deterministic=False, seed=0,
+                 obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0):
         self.params = policy_params
         self.n_max = n_max
         self.bw_ref = bw_ref  # normalization reference (exploration B max)
         self.deterministic = deterministic
+        self.obs_spec = obs_spec
+        self.interval = interval  # seconds per control step (drain scaling)
         self._key = jax.random.PRNGKey(seed)
         self._apply = jax.jit(nets.policy_apply)
         self._bw_seen = 1e-9  # running max when bw_ref is not provided
+        self._prev_tps = None  # previous step's throughputs (context deltas)
 
     def _obs_vector(self, obs: dict):
         if self.bw_ref:
@@ -41,12 +52,30 @@ class AutoMDTController:
             # bandwidth dip (training normalizes by the schedule's PEAK)
             self._bw_seen = max(self._bw_seen, max(obs["throughputs"]), 1e-9)
             bw = self._bw_seen
-        return jnp.asarray(np.concatenate([
+        tps = np.asarray(obs["throughputs"], float)
+        parts = [
             np.asarray(obs["threads"], float) / self.n_max,
-            np.asarray(obs["throughputs"], float) / bw,
+            tps / bw,
             [obs["sender_free"] / max(obs["sender_capacity"], 1e-9),
              obs["receiver_free"] / max(obs["receiver_capacity"], 1e-9)],
-        ]), jnp.float32)
+        ]
+        if self.obs_spec.context:
+            prev = self._prev_tps if self._prev_tps is not None else tps
+            parts.append((tps - prev) / bw)
+            parts.append([
+                (tps[1] - tps[0]) * self.interval
+                / max(obs["sender_capacity"], 1e-9),
+                (tps[2] - tps[1]) * self.interval
+                / max(obs["receiver_capacity"], 1e-9),
+            ])
+        self._prev_tps = tps
+        return jnp.asarray(np.concatenate(parts), jnp.float32)
+
+    def reset(self):
+        """Clear per-run state (context deltas, running bw max) so one
+        controller can be scored on many scenarios without leakage."""
+        self._prev_tps = None
+        self._bw_seen = 1e-9
 
     def step(self, obs: dict):
         """obs dict -> next concurrency tuple (ints)."""

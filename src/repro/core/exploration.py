@@ -10,7 +10,10 @@ A short "random-threads" run: every interval we set random thread counts
     R_max = b * (k^-n_r* + k^-n_n* + k^-n_w*)
 
 Works against anything exposing ``probe(threads) -> [T_r, T_n, T_w]`` — the
-dense simulator, the event oracle, or the real TransferEngine.
+dense simulator (``SimEnv``, optionally under a schedule table's opening
+bin — see repro.scenarios.evaluate.exploration_baseline), the event oracle,
+or the real TransferEngine. ``bandwidth.max()`` is the natural ``bw_ref``
+observation-normalization reference to hand an AutoMDTController.
 """
 
 from __future__ import annotations

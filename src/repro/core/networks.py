@@ -10,6 +10,10 @@ Value: input -> Linear(256) -> tanh -> 2 residual blocks (Tanh activations)
 Actions are thread counts DIRECTLY (continuous; the env rounds+clamps), so
 the mean head is scaled by ``action_scale`` (≈ n_max/4 at init) to put the
 initial policy in a sensible region of thread-space.
+
+``obs_dim`` is spec-derived: pass ``ObservationSpec.dim`` from
+repro.core.simulator (8 base dims, 13 with schedule context) — the default
+of 8 is the paper's base observation.
 """
 
 from __future__ import annotations

@@ -1,4 +1,5 @@
-"""Algorithm 2: PPO training for thread allocation.
+"""Algorithm 2: PPO training for thread allocation — one schedule-native
+trainer.
 
 Faithful loop structure: N episodes, each = reset to random threads + M env
 steps + ONE batched update over the episode memory (clipped surrogate +
@@ -6,25 +7,38 @@ steps + ONE batched update over the episode memory (clipped surrogate +
 convergence when best episode reward reaches 0.9*R_max and then ``patience``
 episodes pass without improvement.
 
-Beyond-paper (train_ppo_vectorized): the rollout is vmapped over ``n_envs``
-parallel simulator environments and the whole episode+update is one jitted
-call — this is what makes offline training take seconds here vs the paper's
-45 minutes (their simulator is a Python heap; see DESIGN.md §4).
+``train_ppo`` covers every training regime through ONE jitted episode fn:
+
+  static          train_ppo(params, cfg) — no tables; the env runs the
+                  params' frozen conditions as a 1-bin schedule
+  single schedule train_ppo(params, cfg, tables=<batched table>)
+  domain random.  train_ppo(params, cfg, tables=..., resample=fn) — the
+                  batched schedule tables are a TRACED argument, so redrawing
+                  the scenario distribution between episode batches reuses
+                  the one compiled program (no per-schedule retrace)
+
+Beyond-paper: the rollout is vmapped over ``cfg.n_envs`` parallel simulator
+environments and the whole episode+update is one jitted call — this is what
+makes offline training take seconds here vs the paper's 45 minutes (their
+simulator is a Python heap; see DESIGN.md §4). ``cfg.obs_spec`` selects the
+observation (schedule context on/off; the network widths follow spec.dim)
+and ``cfg.backend`` selects the inner substep-loop implementation
+("jnp" | "pallas").
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import networks as nets
-from repro.core.simulator import (env_reset, env_step, observe, OBS_DIM,
-                                  ACT_DIM, dyn_env_reset, dyn_env_step,
-                                  observe_sched)
+from repro.core.schedule import constant_table
+from repro.core.simulator import (env_reset, env_step, observe, ACT_DIM,
+                                  ObservationSpec, DEFAULT_OBS)
 from repro.optim import adamw_init, adamw_update
 
 
@@ -48,6 +62,14 @@ class PPOConfig:
     max_grad_norm: float = 0.5
     seed: int = 0
     log_every: int = 0
+    obs_spec: ObservationSpec = DEFAULT_OBS  # observation layout (spec.dim)
+    backend: str = "jnp"         # inner substep loop: "jnp" | "pallas"
+    param_selection: str = "best_episode"  # | "batch_mean": under domain
+    # randomization a single episode's reward mostly measures how lucky the
+    # sampled scenario was; the mean over the whole randomized batch is a
+    # far lower-variance estimate of policy quality, so best-params
+    # selection (and the stagnation counter) can track it instead. History,
+    # best_reward, and the paper's convergence criterion stay per-episode.
 
 
 @dataclass
@@ -63,20 +85,34 @@ class TrainResult:
 
 def init_agent(key, cfg: PPOConfig):
     kp, kv = jax.random.split(key)
+    obs_dim = cfg.obs_spec.dim
     params = {
-        "policy": nets.policy_init(kp, obs_dim=OBS_DIM, act_dim=ACT_DIM,
+        "policy": nets.policy_init(kp, obs_dim=obs_dim, act_dim=ACT_DIM,
                                    action_scale=cfg.action_scale,
                                    init_log_std=cfg.init_log_std),
-        "value": nets.value_init(kv, obs_dim=OBS_DIM),
+        "value": nets.value_init(kv, obs_dim=obs_dim),
     }
     return {"params": params, "opt": adamw_init(params)}
 
 
-def _rollout(policy_params, env_params, key, *, M, substeps):
-    """One episode in one env. Returns per-step (obs, action, reward, logp)."""
-    k_reset, k_steps = jax.random.split(key)
-    state = env_reset(env_params, k_reset, substeps=substeps)
-    obs0 = observe(env_params, state)
+def _rollout(policy_params, env_params, table, key, *, M, substeps, spec,
+             backend, randomize_t0):
+    """One episode in one env under ``table``. When ``randomize_t0`` the
+    episode start time is drawn uniformly over the schedule horizon so
+    M-step episodes see every phase (domain randomization); static training
+    keeps the paper's reset-at-zero and the paper's key stream. Returns
+    per-step (obs, action, reward, logp)."""
+    if randomize_t0:
+        k_reset, k_t0, k_steps = jax.random.split(key, 3)
+        horizon = table.tpt.shape[0] * table.bin_seconds
+        span = jnp.maximum(horizon - (M + 1) * env_params.duration, 0.0)
+        t0 = jax.random.uniform(k_t0, ()) * span
+    else:
+        k_reset, k_steps = jax.random.split(key)
+        t0 = 0.0
+    state = env_reset(env_params, k_reset, t0, table=table, substeps=substeps,
+                      spec=spec, backend=backend)
+    obs0 = observe(env_params, state, table=table, spec=spec)
 
     def step(carry, k):
         state, obs = carry
@@ -84,37 +120,13 @@ def _rollout(policy_params, env_params, key, *, M, substeps):
         action = mean + std * jax.random.normal(k, mean.shape)
         logp = nets.gaussian_logp(mean, std, action)
         state, obs_next, reward = env_step(env_params, state, action,
-                                           substeps=substeps)
+                                           table=table, substeps=substeps,
+                                           spec=spec, backend=backend)
         return (state, obs_next), (obs, action, reward, logp)
 
     keys = jax.random.split(k_steps, M)
     (_, _), traj = jax.lax.scan(step, (state, obs0), keys)
-    return traj  # obs (M,8), act (M,3), rew (M,), logp (M,)
-
-
-def _rollout_sched(policy_params, env_params, table, key, *, M, substeps):
-    """Schedule-aware episode in one env: same structure as _rollout, but
-    conditions follow ``table`` and the episode start time is drawn uniformly
-    over the schedule horizon so M-step episodes see every phase."""
-    k_reset, k_t0, k_steps = jax.random.split(key, 3)
-    horizon = table.tpt.shape[0] * table.bin_seconds
-    span = jnp.maximum(horizon - (M + 1) * env_params.duration, 0.0)
-    t0 = jax.random.uniform(k_t0, ()) * span
-    state = dyn_env_reset(env_params, table, k_reset, t0, substeps=substeps)
-    obs0 = observe_sched(env_params, table, state)
-
-    def step(carry, k):
-        state, obs = carry
-        mean, std = nets.policy_apply(policy_params, obs)
-        action = mean + std * jax.random.normal(k, mean.shape)
-        logp = nets.gaussian_logp(mean, std, action)
-        state, obs_next, reward = dyn_env_step(env_params, table, state,
-                                               action, substeps=substeps)
-        return (state, obs_next), (obs, action, reward, logp)
-
-    keys = jax.random.split(k_steps, M)
-    (_, _), traj = jax.lax.scan(step, (state, obs0), keys)
-    return traj
+    return traj  # obs (M,D), act (M,3), rew (M,), logp (M,)
 
 
 def _returns(rew, gamma):
@@ -143,55 +155,24 @@ def _loss(params, batch, cfg: PPOConfig):
     return total, {"actor": actor, "critic": critic, "entropy": entropy}
 
 
-def _make_episode_fn(env_params, cfg: PPOConfig):
-    """One jitted call = n_envs episodes + ppo_epochs updates."""
-
-    def episode(train_state, key):
-        params, opt = train_state["params"], train_state["opt"]
-        k_roll, _ = jax.random.split(key)
-        roll_keys = jax.random.split(k_roll, cfg.n_envs)
-        obs, act, rew, logp = jax.vmap(
-            lambda k: _rollout(params["policy"], env_params, k,
-                               M=cfg.max_steps, substeps=cfg.substeps)
-        )(roll_keys)  # (E, M, ...)
-        ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
-        flat = (obs.reshape(-1, OBS_DIM), act.reshape(-1, ACT_DIM),
-                ret.reshape(-1), logp.reshape(-1))
-
-        def update(carry, _):
-            params, opt = carry
-            (l, aux), grads = jax.value_and_grad(_loss, has_aux=True)(
-                params, flat, cfg)
-            params, opt, _ = adamw_update(params, grads, opt, lr=cfg.lr,
-                                          weight_decay=0.0,
-                                          max_grad_norm=cfg.max_grad_norm)
-            return (params, opt), l
-
-        (params, opt), losses = jax.lax.scan(update, (params, opt), None,
-                                             length=cfg.ppo_epochs)
-        ep_rewards = rew.sum(axis=1)  # (E,)
-        return ({"params": params, "opt": opt}, ep_rewards, losses[-1])
-
-    return jax.jit(episode)
-
-
-def _make_episode_fn_sched(env_params, cfg: PPOConfig):
-    """Scenario-distribution twin of _make_episode_fn: the batched schedule
-    tables are a TRACED argument, so resampling scenarios between episodes
-    (domain randomization) reuses the one compiled program — no per-schedule
-    retrace."""
+def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0):
+    """One jitted call = n_envs episodes + ppo_epochs updates — the single
+    episode fn in the repo. ``tables`` (batched ScheduleTable, leading axis
+    n_envs) is traced, so new schedule VALUES never retrace."""
+    spec = cfg.obs_spec
 
     def episode(train_state, tables, key):
         params, opt = train_state["params"], train_state["opt"]
         k_roll, _ = jax.random.split(key)
         roll_keys = jax.random.split(k_roll, cfg.n_envs)
         obs, act, rew, logp = jax.vmap(
-            lambda tab, k: _rollout_sched(params["policy"], env_params, tab,
-                                          k, M=cfg.max_steps,
-                                          substeps=cfg.substeps)
+            lambda tab, k: _rollout(params["policy"], env_params, tab, k,
+                                    M=cfg.max_steps, substeps=cfg.substeps,
+                                    spec=spec, backend=cfg.backend,
+                                    randomize_t0=randomize_t0)
         )(tables, roll_keys)  # (E, M, ...)
         ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
-        flat = (obs.reshape(-1, OBS_DIM), act.reshape(-1, ACT_DIM),
+        flat = (obs.reshape(-1, spec.dim), act.reshape(-1, ACT_DIM),
                 ret.reshape(-1), logp.reshape(-1))
 
         def update(carry, _):
@@ -211,21 +192,37 @@ def _make_episode_fn_sched(env_params, cfg: PPOConfig):
     return jax.jit(episode)
 
 
-def train_ppo_scenarios(env_params, tables, cfg: PPOConfig, *, r_max=None,
-                        key=None, resample=None):
-    """Domain-randomized PPO over a distribution of dynamic scenarios.
+def _broadcast_table(table, n_envs):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_envs,) + x.shape), table)
 
-    ``tables``: batched ScheduleTable with leading axis cfg.n_envs — each env
-    rolls out under its own time-varying conditions. ``resample``: optional
-    ``fn(round_index) -> batched tables`` called before every episode batch
-    to redraw the scenario distribution (same shapes => no retrace).
-    Returns TrainResult (best-params convention, like train_ppo)."""
+
+def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
+              resample=None, r_max=None, key=None):
+    """Algorithm 2, schedule-native. Returns TrainResult with the BEST (not
+    last) params.
+
+    ``tables``: optional batched ScheduleTable with leading axis cfg.n_envs —
+    each env rolls out under its own time-varying conditions, with episode
+    start times drawn uniformly over the horizon. None = the params' static
+    conditions (paper-faithful: one 1-bin schedule, episodes start at t=0).
+    ``resample``: optional ``fn(round_index) -> batched tables`` called
+    before every episode batch to redraw the scenario distribution (same
+    shapes => no retrace); explicitly passed ``tables`` are honored for
+    round 0, resampling starts at round 1."""
+    cfg = cfg or PPOConfig()
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
     train_state = init_agent(k_init, cfg)
-    episode_fn = _make_episode_fn_sched(env_params, cfg)
+    scheduled = tables is not None or resample is not None
+    if tables is None and resample is None:
+        tables = _broadcast_table(
+            constant_table(env_params.tpt, env_params.bw, env_params.duration),
+            cfg.n_envs)
+    episode_fn = _make_episode_fn(env_params, cfg, randomize_t0=scheduled)
 
     best_r = -jnp.inf
+    best_sel = -jnp.inf  # selection metric (batch_mean mode)
     best_params = train_state["params"]
     stagnant = 0
     converged_at = None
@@ -233,72 +230,39 @@ def train_ppo_scenarios(env_params, tables, cfg: PPOConfig, *, r_max=None,
     t0 = time.time()
     n_episodes = 0
     rnd = 0
+    by_batch_mean = cfg.param_selection == "batch_mean"
 
     while n_episodes < cfg.max_episodes:
-        if resample is not None:
+        if resample is not None and (tables is None or rnd > 0):
             tables = resample(rnd)
         rnd += 1
         key, k = jax.random.split(key)
         train_state, ep_rewards, loss = episode_fn(train_state, tables, k)
         ep_rewards = jax.device_get(ep_rewards)
+        if by_batch_mean:
+            batch_mean = float(ep_rewards.mean())
+            if batch_mean > best_sel:
+                best_sel = batch_mean
+                best_params = jax.device_get(train_state["params"])
+                stagnant = 0
+            else:
+                stagnant += len(ep_rewards)
         for r in ep_rewards:
             n_episodes += 1
             history.append(float(r))
             if r > best_r:
                 best_r = float(r)
-                best_params = jax.device_get(train_state["params"])
-                stagnant = 0
-            else:
+                if not by_batch_mean:
+                    best_params = jax.device_get(train_state["params"])
+                    stagnant = 0
+            elif not by_batch_mean:
                 stagnant += 1
         if cfg.log_every and n_episodes % cfg.log_every < cfg.n_envs:
-            print(f"[ppo-sc] ep={n_episodes} best={best_r:.3f} "
+            print(f"[ppo] ep={n_episodes} best={best_r:.3f} "
                   f"loss={float(loss):.3f}", flush=True)
         if r_max is not None:
             if (converged_at is None
                     and best_r >= cfg.convergence_frac * r_max * cfg.max_steps):
-                converged_at = n_episodes
-            if converged_at is not None and stagnant >= cfg.patience:
-                break
-
-    return TrainResult(params=best_params, episodes=n_episodes,
-                       wall_s=time.time() - t0, history=history,
-                       converged_at=converged_at, best_reward=float(best_r),
-                       r_max=r_max)
-
-
-def train_ppo(env_params, cfg: PPOConfig, *, r_max=None, key=None):
-    """Algorithm 2. Returns TrainResult with the BEST (not last) params."""
-    key = key if key is not None else jax.random.PRNGKey(cfg.seed)
-    k_init, key = jax.random.split(key)
-    train_state = init_agent(k_init, cfg)
-    episode_fn = _make_episode_fn(env_params, cfg)
-
-    best_r = -jnp.inf
-    best_params = train_state["params"]
-    stagnant = 0
-    converged_at = None
-    history = []
-    t0 = time.time()
-    n_episodes = 0
-
-    while n_episodes < cfg.max_episodes:
-        key, k = jax.random.split(key)
-        train_state, ep_rewards, loss = episode_fn(train_state, k)
-        ep_rewards = jax.device_get(ep_rewards)
-        for r in ep_rewards:
-            n_episodes += 1
-            history.append(float(r))
-            if r > best_r:
-                best_r = float(r)
-                best_params = jax.device_get(train_state["params"])
-                stagnant = 0
-            else:
-                stagnant += 1
-        if cfg.log_every and n_episodes % cfg.log_every < cfg.n_envs:
-            print(f"[ppo] ep={n_episodes} best={best_r:.3f} loss={float(loss):.3f}",
-                  flush=True)
-        if r_max is not None:
-            if converged_at is None and best_r >= cfg.convergence_frac * r_max * cfg.max_steps:
                 converged_at = n_episodes
             if converged_at is not None and stagnant >= cfg.patience:
                 break
@@ -315,3 +279,11 @@ def train_ppo_vectorized(env_params, cfg: PPOConfig = None, *, r_max=None,
     cfg = cfg or PPOConfig()
     cfg = PPOConfig(**{**cfg.__dict__, "n_envs": n_envs, **kw})
     return train_ppo(env_params, cfg, r_max=r_max, key=key)
+
+
+def train_ppo_scenarios(env_params, tables, cfg: PPOConfig, *, r_max=None,
+                        key=None, resample=None):
+    """Deprecated alias: ``train_ppo(env_params, cfg, tables=...,
+    resample=...)`` is the unified trainer."""
+    return train_ppo(env_params, cfg, tables=tables, resample=resample,
+                     r_max=r_max, key=key)

@@ -37,8 +37,9 @@ class EventSimulator:
         (sender, receiver). chunk defaults to min(tpt)*duration/8 so a thread
         completes several chunks per simulated second.
 
-        ``schedule``: optional ``(tpt_table[T,3], bw_table[T,3], bin_seconds)``
-        of piecewise-constant conditions (repro.scenarios format). When set,
+        ``schedule``: optional piecewise-constant conditions — either a
+        ``repro.core.schedule.ScheduleTable`` or the raw
+        ``(tpt_table[T,3], bw_table[T,3], bin_seconds)`` tuple. When set,
         tpt/bandwidth are looked up at each task's ABSOLUTE start time — the
         clock accumulates ``duration`` per get_utility() call — making this
         the oracle for the schedule-aware dense simulator. A task straddling
@@ -54,6 +55,9 @@ class EventSimulator:
         self.t_global = 0.0
         self.schedule = None
         if schedule is not None:
+            if hasattr(schedule, "tpt"):  # ScheduleTable (core or scenarios)
+                from repro.core.schedule import table_to_numpy
+                schedule = table_to_numpy(schedule)
             tpt_tab, bw_tab, bin_s = schedule
             self.schedule = ([[float(x) for x in row] for row in tpt_tab],
                              [[float(x) for x in row] for row in bw_tab],

@@ -1,4 +1,4 @@
-"""TPU-native adaptation of the paper's Algorithm-1 simulator.
+"""TPU-native adaptation of the paper's Algorithm-1 simulator — schedule-native.
 
 The event-driven heap is inherently sequential (pop one task at a time) —
 hostile to accelerators and to vmap. We adapt the same buffer dynamics to a
@@ -15,6 +15,26 @@ what turns the paper's 45-minute offline training into seconds (benchmarked
 in benchmarks/bench_training_time.py). Property tests assert agreement with
 repro.core.simref.EventSimulator.
 
+There is ONE path through this module: conditions are always a
+piecewise-constant ``ScheduleTable`` (repro.core.schedule) looked up by the
+sim clock carried in ``EnvState``. A static configuration is the degenerate
+1-bin table built from ``SimParams`` (``table=None`` everywhere below), so
+the frozen-world and dynamic-scenario code are literally the same trace —
+the schedule lookup is a gather, so vmap over a batch of per-env tables
+compiles once (what keeps domain-randomized PPO batched on-accelerator).
+
+Observations are described by an ``ObservationSpec``: the paper's 8-dim
+state (§IV-D-1) optionally extended with schedule context — per-stage
+throughput deltas and normalized buffer-drain rates — so the agent can
+ANTICIPATE condition changes instead of reacting one step late.
+
+The inner dense-substep loop runs on a selectable ``backend``:
+``"jnp"`` (lax.scan, the default) or ``"pallas"`` (the
+repro.kernels.sim_step kernel: the whole substep loop in VMEM, one HBM
+round-trip per simulated second). Both backends share the same precomputed
+per-substep rate gather, so they agree to float tolerance
+(tests/test_unified_env.py) and bench_training_time.py compares them.
+
 Per-thread rates are capped by the aggregate bandwidth share exactly like
 the oracle: aggregate rate = min(n*TPT, B).
 """
@@ -27,6 +47,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.schedule import ScheduleTable, constant_table, peak_bw
 from repro.core.utility import utility, K_DEFAULT
 
 
@@ -50,170 +71,199 @@ def make_env_params(*, tpt, bw, cap, n_max=100, duration=1.0, k=K_DEFAULT):
     )
 
 
+# ---------------------------------------------------------------------------
+# Observations
+# ---------------------------------------------------------------------------
+
+OBS_DIM = 8       # the paper's base observation (§IV-D-1)
+CONTEXT_DIM = 5   # schedule context: 3 throughput deltas + 2 drain rates
+ACT_DIM = 3
+
+
+class ObservationSpec(NamedTuple):
+    """What the agent sees. Hashable (all-static fields) so it can be a jit
+    static argument; ``dim`` flows through networks/ppo/controller so every
+    consumer derives the observation width from the spec instead of a
+    hard-coded 8.
+
+    context=False: the paper's 8 dims — thread counts, throughputs, and
+    unused buffer fractions, normalized to [0, 1].
+
+    context=True: 5 extra dims of schedule context — per-stage throughput
+    deltas vs the previous step (bw_ref-normalized; directly encodes "the
+    world just moved under you, and in which direction") and the two staging
+    buffers' normalized drain rates (net fill per step / capacity; a buffer
+    trending full or empty is the earliest observable symptom of a stage
+    falling behind). Both are cheap functions of state the simulator and the
+    live controller already track.
+    """
+
+    context: bool = False
+
+    @property
+    def dim(self) -> int:
+        return OBS_DIM + (CONTEXT_DIM if self.context else 0)
+
+
+DEFAULT_OBS = ObservationSpec()
+CONTEXT_OBS = ObservationSpec(context=True)
+
+
 class EnvState(NamedTuple):
     buffers: jnp.ndarray      # (2,) sender/receiver occupancy
     threads: jnp.ndarray      # (3,) current concurrency
     throughputs: jnp.ndarray  # (3,) last measured per-stage throughput
+    t: jnp.ndarray = 0.0      # scalar, simulated seconds elapsed (sim clock)
+    prev_throughputs: jnp.ndarray = None  # (3,) previous step's throughputs
 
 
-def sim_interval(params: SimParams, buffers, threads, *, substeps=50):
-    """Simulate ``duration`` seconds. Returns (buffers', throughputs (3,))."""
+def _table_or_params(params: SimParams, table):
+    """The ONE place where static and scheduled worlds meet: no table means
+    the params' frozen conditions as a 1-bin schedule."""
+    if table is None:
+        return constant_table(params.tpt, params.bw, params.duration)
+    return table
+
+
+def _substep_rates(params: SimParams, table: ScheduleTable, threads, t0,
+                   substeps: int):
+    """(substeps, 3) aggregate per-stage rates, one gather per sub-interval:
+    conditions are re-looked-up every substep, so intra-interval changes (a
+    brown-out shorter than one env step) are honored."""
     dt = params.duration / substeps
-    rate = jnp.minimum(threads * params.tpt, params.bw)  # (3,) aggregate
+    T = table.tpt.shape[0]
+    ts = t0 + dt * jnp.arange(substeps, dtype=jnp.float32)
+    idx = jnp.clip(jnp.floor(ts / table.bin_seconds), 0, T - 1)
+    idx = idx.astype(jnp.int32)
+    return jnp.minimum(threads[None, :] * table.tpt[idx], table.bw[idx])
 
-    def sub(bufs, _):
+
+def _scan_substeps(buffers, rates, cap, dt):
+    """The buffer dynamics — the single definition in the repo. ``rates``
+    is (substeps, 3); returns (buffers', moved (3,))."""
+
+    def sub(bufs, rate):
         s_buf, r_buf = bufs[0], bufs[1]
-        read = jnp.minimum(rate[0] * dt, params.cap[0] - s_buf)
+        read = jnp.minimum(rate[0] * dt, cap[0] - s_buf)
         read = jnp.maximum(read, 0.0)
         s_mid = s_buf + read
-        net = jnp.minimum(jnp.minimum(rate[1] * dt, s_mid),
-                          params.cap[1] - r_buf)
+        net = jnp.minimum(jnp.minimum(rate[1] * dt, s_mid), cap[1] - r_buf)
         net = jnp.maximum(net, 0.0)
         r_mid = r_buf + net
         wr = jnp.maximum(jnp.minimum(rate[2] * dt, r_mid), 0.0)
         new = jnp.stack([s_mid - net, r_mid - wr])
         return new, jnp.stack([read, net, wr])
 
-    buffers, moved = jax.lax.scan(sub, buffers, None, length=substeps)
-    throughputs = moved.sum(axis=0) / params.duration
-    return buffers, throughputs
+    buffers, moved = jax.lax.scan(sub, buffers, rates)
+    return buffers, moved.sum(axis=0)
 
 
-def observe(params: SimParams, state: EnvState):
-    """Paper state space (§IV-D-1): thread counts, throughputs, and UNUSED
-    buffer at sender and receiver — normalized to [0, 1]."""
-    bw_ref = jnp.maximum(jnp.max(params.bw), 1e-9)
+def _pallas_substeps(buffers, rates, cap, dt):
+    """Same contract as _scan_substeps via the Pallas kernel (whole substep
+    loop in VMEM). Takes the same precomputed per-substep rates, so the two
+    backends agree to float tolerance."""
+    from repro.kernels.sim_step.ops import sim_interval_batch
+    new_bufs, moved = sim_interval_batch(buffers[None], (rates * dt)[None],
+                                         cap[None])
+    return new_bufs[0], moved[0]
+
+
+def sim_interval(params: SimParams, buffers, threads, t0=0.0, *, table=None,
+                 substeps=50, backend="jnp"):
+    """Simulate ``duration`` seconds starting at sim time ``t0`` under
+    ``table`` (None = the params' static conditions). Returns
+    (buffers', throughputs (3,))."""
+    tab = _table_or_params(params, table)
+    dt = params.duration / substeps
+    rates = _substep_rates(params, tab, threads, jnp.asarray(t0, jnp.float32),
+                           substeps)
+    if backend == "jnp":
+        buffers, moved = _scan_substeps(buffers, rates, params.cap, dt)
+    elif backend == "pallas":
+        buffers, moved = _pallas_substeps(buffers, rates, params.cap, dt)
+    else:
+        raise ValueError(f"unknown simulator backend {backend!r}; "
+                         "expected 'jnp' or 'pallas'")
+    return buffers, moved / params.duration
+
+
+def observe(params: SimParams, state: EnvState, *, table=None,
+            spec: ObservationSpec = DEFAULT_OBS):
+    """Observation under ``spec``. Normalized by the schedule's PEAK
+    bandwidth (static world: max(params.bw)) so the scale is stable while
+    conditions move underneath the agent."""
+    tab = _table_or_params(params, table)
+    bw_ref = peak_bw(tab)
     free = (params.cap - state.buffers) / jnp.maximum(params.cap, 1e-9)
-    return jnp.concatenate([
+    base = jnp.concatenate([
         state.threads / params.n_max,
         state.throughputs / bw_ref,
         free,
     ])  # (8,)
+    if not spec.context:
+        return base
+    prev = (state.prev_throughputs if state.prev_throughputs is not None
+            else state.throughputs)
+    delta = (state.throughputs - prev) / bw_ref
+    drain = jnp.stack([
+        (state.throughputs[1] - state.throughputs[0]) * params.duration
+        / jnp.maximum(params.cap[0], 1e-9),
+        (state.throughputs[2] - state.throughputs[1]) * params.duration
+        / jnp.maximum(params.cap[1], 1e-9),
+    ])
+    return jnp.concatenate([base, delta, drain])  # (13,)
 
 
-OBS_DIM = 8
-ACT_DIM = 3
-
-
-@partial(jax.jit, static_argnames=("substeps",))
-def env_reset(params: SimParams, key, *, substeps=50):
+@partial(jax.jit, static_argnames=("substeps", "spec", "backend"))
+def env_reset(params: SimParams, key, t0=0.0, *, table=None, substeps=50,
+              spec: ObservationSpec = DEFAULT_OBS, backend="jnp"):
     """Random initial threads (paper: each episode starts from a new random
     thread allocation), empty buffers, one warm-up interval for consistent
-    observations."""
-    threads = jax.random.randint(key, (3,), 1, 16).astype(jnp.float32)
-    buffers = jnp.zeros((2,), jnp.float32)
-    buffers, tps = sim_interval(params, buffers, threads, substeps=substeps)
-    return EnvState(buffers=buffers, threads=threads, throughputs=tps)
-
-
-@partial(jax.jit, static_argnames=("substeps",))
-def env_step(params: SimParams, state: EnvState, action, *, substeps=50):
-    """action: (3,) raw continuous -> round -> clamp [1, n_max] (§IV-F).
-    Returns (state', obs, reward)."""
-    threads = jnp.clip(jnp.round(action), 1.0, params.n_max)
-    buffers, tps = sim_interval(params, state.buffers, threads,
-                                substeps=substeps)
-    new_state = EnvState(buffers=buffers, threads=threads, throughputs=tps)
-    reward = utility(tps, threads, k=params.k)
-    return new_state, observe(params, new_state), reward
-
-
-# ---------------------------------------------------------------------------
-# Schedule-aware (dynamic-scenario) path
-# ---------------------------------------------------------------------------
-#
-# Same buffer dynamics, but tpt/bw are FUNCTIONS OF SIMULATED TIME, supplied
-# as piecewise-constant ScheduleTable arrays (repro.scenarios.schedule). The
-# lookup is a gather indexed by the carried sim clock, so the whole thing
-# stays one trace under jit and vmaps over a batch of per-env tables — that
-# is what keeps domain-randomized PPO training batched on-accelerator.
-
-class DynEnvState(NamedTuple):
-    buffers: jnp.ndarray      # (2,) sender/receiver occupancy
-    threads: jnp.ndarray      # (3,) current concurrency
-    throughputs: jnp.ndarray  # (3,) last measured per-stage throughput
-    t: jnp.ndarray            # scalar, simulated seconds elapsed
-
-
-def sim_interval_sched(params: SimParams, table, buffers, threads, t0, *,
-                       substeps=50):
-    """Simulate ``duration`` seconds starting at sim time ``t0`` under the
-    schedule ``table``. Returns (buffers', throughputs (3,)). Conditions are
-    re-looked-up every sub-interval, so intra-interval changes (a brown-out
-    shorter than one env step) are honored."""
-    dt = params.duration / substeps
-    T = table.tpt.shape[0]
-
-    def sub(carry, _):
-        bufs, t = carry
-        idx = jnp.clip(jnp.floor(t / table.bin_seconds), 0, T - 1)
-        idx = idx.astype(jnp.int32)
-        rate = jnp.minimum(threads * table.tpt[idx], table.bw[idx])
-        s_buf, r_buf = bufs[0], bufs[1]
-        read = jnp.minimum(rate[0] * dt, params.cap[0] - s_buf)
-        read = jnp.maximum(read, 0.0)
-        s_mid = s_buf + read
-        net = jnp.minimum(jnp.minimum(rate[1] * dt, s_mid),
-                          params.cap[1] - r_buf)
-        net = jnp.maximum(net, 0.0)
-        r_mid = r_buf + net
-        wr = jnp.maximum(jnp.minimum(rate[2] * dt, r_mid), 0.0)
-        new = jnp.stack([s_mid - net, r_mid - wr])
-        return (new, t + dt), jnp.stack([read, net, wr])
-
-    (buffers, _), moved = jax.lax.scan(sub, (buffers, t0), None,
-                                       length=substeps)
-    throughputs = moved.sum(axis=0) / params.duration
-    return buffers, throughputs
-
-
-def observe_sched(params: SimParams, table, state: DynEnvState):
-    """Same 8-dim observation, normalized by the schedule's PEAK bandwidth so
-    the scale is stable while conditions move underneath the agent."""
-    bw_ref = jnp.maximum(jnp.max(table.bw), 1e-9)
-    free = (params.cap - state.buffers) / jnp.maximum(params.cap, 1e-9)
-    return jnp.concatenate([
-        state.threads / params.n_max,
-        state.throughputs / bw_ref,
-        free,
-    ])  # (8,)
-
-
-@partial(jax.jit, static_argnames=("substeps",))
-def dyn_env_reset(params: SimParams, table, key, t0=0.0, *, substeps=50):
-    """``t0``: sim-time at which the episode starts — domain-randomized
-    training draws it uniformly so short episodes cover every phase of a
-    long schedule."""
+    observations. ``t0``: sim-time at which the episode starts —
+    domain-randomized training draws it uniformly so short episodes cover
+    every phase of a long schedule."""
     threads = jax.random.randint(key, (3,), 1, 16).astype(jnp.float32)
     buffers = jnp.zeros((2,), jnp.float32)
     t0 = jnp.asarray(t0, jnp.float32)
-    buffers, tps = sim_interval_sched(params, table, buffers, threads, t0,
-                                      substeps=substeps)
-    return DynEnvState(buffers=buffers, threads=threads, throughputs=tps,
-                       t=t0 + params.duration)
+    buffers, tps = sim_interval(params, buffers, threads, t0, table=table,
+                                substeps=substeps, backend=backend)
+    return EnvState(buffers=buffers, threads=threads, throughputs=tps,
+                    t=t0 + params.duration, prev_throughputs=tps)
 
 
-@partial(jax.jit, static_argnames=("substeps",))
-def dyn_env_step(params: SimParams, table, state: DynEnvState, action, *,
-                 substeps=50):
-    """Schedule-aware env_step: same action semantics, the sim clock advances
-    by ``duration`` each call. Returns (state', obs, reward)."""
+@partial(jax.jit, static_argnames=("substeps", "spec", "backend"))
+def env_step(params: SimParams, state: EnvState, action, *, table=None,
+             substeps=50, spec: ObservationSpec = DEFAULT_OBS, backend="jnp"):
+    """action: (3,) raw continuous -> round -> clamp [1, n_max] (§IV-F).
+    The sim clock advances by ``duration`` each call.
+    Returns (state', obs, reward)."""
     threads = jnp.clip(jnp.round(action), 1.0, params.n_max)
-    buffers, tps = sim_interval_sched(params, table, state.buffers, threads,
-                                      state.t, substeps=substeps)
-    new_state = DynEnvState(buffers=buffers, threads=threads,
-                            throughputs=tps, t=state.t + params.duration)
+    buffers, tps = sim_interval(params, state.buffers, threads, state.t,
+                                table=table, substeps=substeps,
+                                backend=backend)
+    new_state = EnvState(buffers=buffers, threads=threads, throughputs=tps,
+                         t=state.t + params.duration,
+                         prev_throughputs=state.throughputs)
     reward = utility(tps, threads, k=params.k)
-    return new_state, observe_sched(params, table, new_state), reward
+    return new_state, observe(params, new_state, table=table, spec=spec), \
+        reward
 
 
 class SimEnv:
-    """Convenience OO wrapper (host-side users: controller, benchmarks).
-    The PPO trainer uses the functional API directly."""
+    """Convenience OO wrapper (host-side users: controller, benchmarks,
+    exploration). One class for both worlds: pass ``table`` for a dynamic
+    scenario (the clock keeps advancing across reset() — a reset
+    re-randomizes threads, not the world, matching a real TransferEngine
+    under a ScenarioDriver), omit it for the frozen-world path. The PPO
+    trainer uses the functional API directly."""
 
-    def __init__(self, params: SimParams, *, substeps=50, seed=0):
+    def __init__(self, params: SimParams, table=None, *, substeps=50, seed=0,
+                 spec: ObservationSpec = DEFAULT_OBS, backend="jnp"):
         self.params = params
+        self.table = table
         self.substeps = substeps
+        self.spec = spec
+        self.backend = backend
         self._key = jax.random.PRNGKey(seed)
         self.state = None
 
@@ -222,54 +272,62 @@ class SimEnv:
         return k
 
     def reset(self):
-        self.state = env_reset(self.params, self._split(),
-                               substeps=self.substeps)
-        return observe(self.params, self.state)
+        t0 = (self.state.t if self.table is not None and self.state is not None
+              else 0.0)
+        self.state = env_reset(self.params, self._split(), t0,
+                               table=self.table, substeps=self.substeps,
+                               spec=self.spec, backend=self.backend)
+        return observe(self.params, self.state, table=self.table,
+                       spec=self.spec)
 
     def step(self, action):
-        self.state, obs, reward = env_step(self.params, self.state,
-                                           jnp.asarray(action, jnp.float32),
-                                           substeps=self.substeps)
+        self.state, obs, reward = env_step(
+            self.params, self.state, jnp.asarray(action, jnp.float32),
+            table=self.table, substeps=self.substeps, spec=self.spec,
+            backend=self.backend)
         return obs, float(reward)
 
     # engine-like probe interface for the exploration phase
     def probe(self, threads):
-        self.state, obs, _ = env_step(self.params, self.state,
-                                      jnp.asarray(threads, jnp.float32),
-                                      substeps=self.substeps)
+        self.state, _, _ = env_step(
+            self.params, self.state, jnp.asarray(threads, jnp.float32),
+            table=self.table, substeps=self.substeps, spec=self.spec,
+            backend=self.backend)
         return [float(x) for x in self.state.throughputs]
 
 
-class DynSimEnv:
-    """OO wrapper over the schedule-aware path — the simulator-side twin of
-    driving a real TransferEngine under a ScenarioDriver. The clock keeps
-    advancing across reset() (a reset re-randomizes threads, not the world)."""
+# ---------------------------------------------------------------------------
+# Deprecated aliases (PR 1 dual-stack API) — thin shims over the unified
+# schedule-native core above. Kept one deprecation horizon (see README);
+# new code should pass ``table=`` to the unified functions instead.
+# ---------------------------------------------------------------------------
+
+DynEnvState = EnvState  # deprecated: EnvState carries the clock natively
+
+
+def sim_interval_sched(params, table, buffers, threads, t0, *, substeps=50):
+    """Deprecated alias for ``sim_interval(..., table=table)``."""
+    return sim_interval(params, buffers, threads, t0, table=table,
+                        substeps=substeps)
+
+
+def observe_sched(params, table, state):
+    """Deprecated alias for ``observe(..., table=table)``."""
+    return observe(params, state, table=table)
+
+
+def dyn_env_reset(params, table, key, t0=0.0, *, substeps=50):
+    """Deprecated alias for ``env_reset(..., table=table)``."""
+    return env_reset(params, key, t0, table=table, substeps=substeps)
+
+
+def dyn_env_step(params, table, state, action, *, substeps=50):
+    """Deprecated alias for ``env_step(..., table=table)``."""
+    return env_step(params, state, action, table=table, substeps=substeps)
+
+
+class DynSimEnv(SimEnv):
+    """Deprecated alias: ``SimEnv(params, table)`` is the unified wrapper."""
 
     def __init__(self, params: SimParams, table, *, substeps=50, seed=0):
-        self.params = params
-        self.table = table
-        self.substeps = substeps
-        self._key = jax.random.PRNGKey(seed)
-        self.state = None
-
-    def _split(self):
-        self._key, k = jax.random.split(self._key)
-        return k
-
-    def reset(self):
-        t0 = self.state.t if self.state is not None else 0.0
-        self.state = dyn_env_reset(self.params, self.table, self._split(),
-                                   t0, substeps=self.substeps)
-        return observe_sched(self.params, self.table, self.state)
-
-    def step(self, action):
-        self.state, obs, reward = dyn_env_step(
-            self.params, self.table, self.state,
-            jnp.asarray(action, jnp.float32), substeps=self.substeps)
-        return obs, float(reward)
-
-    def probe(self, threads):
-        self.state, _, _ = dyn_env_step(self.params, self.table, self.state,
-                                        jnp.asarray(threads, jnp.float32),
-                                        substeps=self.substeps)
-        return [float(x) for x in self.state.throughputs]
+        super().__init__(params, table, substeps=substeps, seed=seed)

@@ -1,1 +1,1 @@
-from repro.kernels.sim_step.ops import sim_step_batch
+from repro.kernels.sim_step.ops import sim_step_batch, sim_interval_batch

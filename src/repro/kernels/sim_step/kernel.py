@@ -51,6 +51,69 @@ def _sim_kernel(bufs_ref, rate_ref, cap_ref, out_bufs_ref, moved_ref, *,
     moved_ref[:, 2] = mw
 
 
+def _sim_sched_kernel(bufs_ref, rates_ref, cap_ref, out_bufs_ref, moved_ref,
+                      *, substeps):
+    """Schedule-aware variant: per-substep rates (already scaled by dt) are
+    resident in VMEM as a (blk, substeps, 3) block and gathered inside the
+    loop — this is what lets the unified schedule-native simulator route its
+    inner substep scan through Pallas unchanged."""
+    s = bufs_ref[:, 0]
+    r = bufs_ref[:, 1]
+    cap_s = cap_ref[:, 0]
+    cap_r = cap_ref[:, 1]
+
+    def body(i, carry):
+        s, r, mr, mn, mw = carry
+        rate = pl.load(rates_ref,
+                       (slice(None), pl.dslice(i, 1), slice(None)))[:, 0, :]
+        read = jnp.maximum(jnp.minimum(rate[:, 0], cap_s - s), 0.0)
+        s_mid = s + read
+        net = jnp.maximum(jnp.minimum(jnp.minimum(rate[:, 1], s_mid),
+                                      cap_r - r), 0.0)
+        r_mid = r + net
+        wr = jnp.maximum(jnp.minimum(rate[:, 2], r_mid), 0.0)
+        return (s_mid - net, r_mid - wr, mr + read, mn + net, mw + wr)
+
+    zero = jnp.zeros_like(s)
+    s, r, mr, mn, mw = jax.lax.fori_loop(0, substeps, body,
+                                         (s, r, zero, zero, zero))
+    out_bufs_ref[:, 0] = s
+    out_bufs_ref[:, 1] = r
+    moved_ref[:, 0] = mr
+    moved_ref[:, 1] = mn
+    moved_ref[:, 2] = mw
+
+
+def sim_interval_pallas(bufs, rates_dt, cap, *, blk=256, interpret=True):
+    """bufs: (E,2); rates_dt: (E,S,3) aggregate per-stage rates PER SUBSTEP,
+    pre-multiplied by dt (already min(n*TPT, B) under the schedule); cap:
+    (E,2). Returns (new_bufs (E,2), moved (E,3))."""
+    E, S = rates_dt.shape[0], rates_dt.shape[1]
+    blk = min(blk, E)
+    assert E % blk == 0, (E, blk)
+    kernel = functools.partial(_sim_sched_kernel, substeps=S)
+    return pl.pallas_call(
+        kernel,
+        grid=(E // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, 2), lambda i: (i, 0)),
+            pl.BlockSpec((blk, S, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, 2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk, 2), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 3), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((E, 2), jnp.float32),
+            jax.ShapeDtypeStruct((E, 3), jnp.float32),
+        ],
+        interpret=interpret,
+        name="sim_step_sched",
+    )(bufs.astype(jnp.float32), rates_dt.astype(jnp.float32),
+      cap.astype(jnp.float32))
+
+
 def sim_step_pallas(bufs, rate, cap, *, substeps=50, duration=1.0,
                     blk=256, interpret=True):
     """bufs: (E,2); rate: (E,3) aggregate per-stage rates (already

@@ -7,7 +7,14 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sim_step.kernel import sim_step_pallas
+from repro.kernels.sim_step.kernel import sim_step_pallas, sim_interval_pallas
+
+
+def _pick_blk(E):
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if E % cand == 0:
+            return cand
+    return E
 
 
 @partial(jax.jit, static_argnames=("substeps", "duration", "interpret"))
@@ -15,11 +22,19 @@ def sim_step_batch(bufs, rate, cap, *, substeps=50, duration=1.0,
                    interpret=None):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    E = bufs.shape[0]
-    blk = E
-    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
-        if E % cand == 0:
-            blk = cand
-            break
     return sim_step_pallas(bufs, rate, cap, substeps=substeps,
-                           duration=duration, blk=blk, interpret=interpret)
+                           duration=duration, blk=_pick_blk(bufs.shape[0]),
+                           interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def sim_interval_batch(bufs, rates_dt, cap, *, interpret=None):
+    """Schedule-aware interval: per-substep rates (E,S,3), pre-scaled by dt.
+    The ``backend="pallas"`` path of repro.core.simulator.sim_interval routes
+    here (per-env under vmap — the pallas batching rule folds the env batch
+    into the grid)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return sim_interval_pallas(bufs, rates_dt, cap,
+                               blk=_pick_blk(bufs.shape[0]),
+                               interpret=interpret)

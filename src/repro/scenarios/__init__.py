@@ -1,7 +1,8 @@
 """Dynamic scenario subsystem: composable, time-varying network/system
 conditions, driven from ONE definition into all three layers —
 
-  schedule.py   ScheduleTable (piecewise-constant jnp tables) + lookup
+  schedule.py   re-export of repro.core.schedule (the env core is
+                schedule-native; the table type lives in core)
   families.py   the generators: static, step, diurnal, bursty, square_wave,
                 brownout, random_walk
   spec.py       ScenarioSpec (JSON scenario files) + domain-randomized
@@ -9,11 +10,12 @@ conditions, driven from ONE definition into all three layers —
   driver.py     ScenarioDriver: replay against the live TransferEngine
   evaluate.py   scoring harness vs static / exploration-only baselines
 
-Sim side: repro.core.simulator.dyn_env_step / sim_interval_sched;
-training side: repro.core.ppo.train_ppo_scenarios.
+Sim side: repro.core.simulator.env_step(..., table=...);
+training side: repro.core.ppo.train_ppo(..., tables=..., resample=...).
 """
 
-from repro.scenarios.schedule import (ScheduleTable, make_table, schedule_at,
+from repro.scenarios.schedule import (ScheduleTable, make_table,
+                                      constant_table, schedule_at,
                                       stack_tables, table_to_numpy, peak_bw,
                                       bottleneck_trace, horizon_seconds)
 from repro.scenarios.families import FAMILIES

@@ -26,8 +26,8 @@ import jax.numpy as jnp
 
 from repro.core import GlobusController, explore
 from repro.core.controller import AutoMDTController
-from repro.core.simulator import (SimParams, make_env_params, dyn_env_reset,
-                                  dyn_env_step, DynSimEnv)
+from repro.core.simulator import (SimParams, make_env_params, env_reset,
+                                  env_step, SimEnv)
 from repro.core.utility import utility as utility_fn, K_DEFAULT
 from repro.scenarios.schedule import (ScheduleTable, bottleneck_trace,
                                       peak_bw)
@@ -58,7 +58,7 @@ def exploration_baseline(spec, params, *, n_samples=120, seed=0):
     table = spec.table()
     opening = ScheduleTable(tpt=table.tpt[:1], bw=table.bw[:1],
                             bin_seconds=table.bin_seconds)
-    env = DynSimEnv(params, opening, seed=seed)
+    env = SimEnv(params, opening, seed=seed)
     env.reset()
     ex = explore(env.probe, n_samples=n_samples,
                  n_max=int(params.n_max), seed=seed)
@@ -102,7 +102,9 @@ def run_in_dynamic_sim(spec, params, controller, *, steps=None, seed=7,
     achievable = np.asarray(bottleneck_trace(table, float(params.n_max)))
     bin_s = float(np.asarray(table.bin_seconds))
 
-    st = dyn_env_reset(params, table, jax.random.PRNGKey(seed))
+    st = env_reset(params, jax.random.PRNGKey(seed), table=table)
+    if hasattr(controller, "reset"):
+        controller.reset()  # fresh context deltas for every scenario run
     threads_hist, tput_hist, util_hist, ach_hist = [], [], [], []
     delivered = 0.0
     completion = None
@@ -112,8 +114,8 @@ def run_in_dynamic_sim(spec, params, controller, *, steps=None, seed=7,
             n = controller.step(o)
         else:
             n = controller.update(o["throughputs"])
-        st, _, r = dyn_env_step(params, table, st,
-                                jnp.asarray(n, jnp.float32))
+        st, _, r = env_step(params, st, jnp.asarray(n, jnp.float32),
+                            table=table)
         t_mid = float(st.t) - 0.5 * duration
         idx = min(max(int(t_mid / bin_s), 0), len(achievable) - 1)
         threads_hist.append(np.asarray(st.threads).tolist())

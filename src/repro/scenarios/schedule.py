@@ -1,85 +1,19 @@
-"""Piecewise-constant condition schedules — the core data structure of the
-dynamic-scenario subsystem.
+"""Backward-compatible re-export of the schedule core.
 
-A schedule is a pair of tables ``tpt[T, 3]`` / ``bw[T, 3]`` giving the
-per-thread throughput and aggregate bandwidth cap of each pipeline stage
-(read, network, write) over ``T`` fixed-width time bins. Piecewise-constant
-tables are the representation that keeps everything compilable: a lookup is
-one gather, so ``vmap``/``lax.scan``/``jit`` over thousands of randomized
-scenarios traces ONCE — schedule values are data, never Python structure.
-
-Family generators live in :mod:`repro.scenarios.families`; this module owns
-the table container, the jnp lookup used inside the simulator, and batch
-stacking for domain-randomized training.
+The ScheduleTable container and its lookup moved to
+:mod:`repro.core.schedule` when the simulator became schedule-native (a
+static config is a 1-bin table, so the table type is a core concept, not a
+scenario add-on). Scenario family generators and domain-randomized batch
+sampling still live in this package; this module keeps every established
+``repro.scenarios.schedule`` import path working.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from repro.core.schedule import (ScheduleTable, make_table, constant_table,
+                                 schedule_at, horizon_seconds, stack_tables,
+                                 table_to_numpy, peak_bw, bottleneck_trace)
 
-import numpy as np
-import jax.numpy as jnp
-
-
-class ScheduleTable(NamedTuple):
-    """Time-binned stage conditions. All leaves are jnp arrays so a batch of
-    tables (leading axis) vmaps like any other pytree."""
-
-    tpt: jnp.ndarray          # (T, 3) per-thread throughput per bin
-    bw: jnp.ndarray           # (T, 3) aggregate stage bandwidth per bin
-    bin_seconds: jnp.ndarray  # scalar, width of one bin
-
-
-def make_table(tpt, bw, bin_seconds=1.0) -> ScheduleTable:
-    tpt = jnp.asarray(tpt, jnp.float32)
-    bw = jnp.asarray(bw, jnp.float32)
-    if tpt.shape != bw.shape or tpt.ndim != 2 or tpt.shape[-1] != 3:
-        raise ValueError(f"schedule tables must be (T, 3): {tpt.shape} vs "
-                         f"{bw.shape}")
-    return ScheduleTable(tpt=tpt, bw=bw,
-                         bin_seconds=jnp.asarray(bin_seconds, jnp.float32))
-
-
-def schedule_at(table: ScheduleTable, t):
-    """Conditions at simulated time ``t`` (scalar): returns (tpt (3,), bw (3,)).
-    Times past the horizon hold the last bin (schedules are right-extended),
-    negative times hold the first."""
-    T = table.tpt.shape[0]
-    idx = jnp.clip(jnp.floor(t / table.bin_seconds), 0, T - 1).astype(jnp.int32)
-    return table.tpt[idx], table.bw[idx]
-
-
-def horizon_seconds(table: ScheduleTable) -> float:
-    return float(table.tpt.shape[0] * table.bin_seconds)
-
-
-def stack_tables(tables) -> ScheduleTable:
-    """Stack same-length tables into one batched ScheduleTable (leading env
-    axis) for ``vmap``. All tables must share T (pad/retile upstream)."""
-    tables = list(tables)
-    lengths = {t.tpt.shape[0] for t in tables}
-    if len(lengths) != 1:
-        raise ValueError(f"cannot stack tables of different lengths {lengths}")
-    return ScheduleTable(
-        tpt=jnp.stack([t.tpt for t in tables]),
-        bw=jnp.stack([t.bw for t in tables]),
-        bin_seconds=jnp.stack([t.bin_seconds for t in tables]),
-    )
-
-
-def table_to_numpy(table: ScheduleTable):
-    """Host-side copy for the engine-facing ScenarioDriver / plotting."""
-    return (np.asarray(table.tpt), np.asarray(table.bw),
-            float(np.asarray(table.bin_seconds)))
-
-
-def peak_bw(table: ScheduleTable):
-    """Max aggregate bandwidth anywhere in the schedule — the observation
-    normalization reference (keeps obs in [0, 1] across the whole run)."""
-    return jnp.maximum(jnp.max(table.bw), 1e-9)
-
-
-def bottleneck_trace(table: ScheduleTable, n_max: float):
-    """(T,) best achievable end-to-end rate per bin: the slowest stage's
-    aggregate cap, itself capped by what n_max threads can carry."""
-    return jnp.min(jnp.minimum(n_max * table.tpt, table.bw), axis=-1)
+__all__ = ["ScheduleTable", "make_table", "constant_table", "schedule_at",
+           "horizon_seconds", "stack_tables", "table_to_numpy", "peak_bw",
+           "bottleneck_trace"]

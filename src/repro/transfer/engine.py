@@ -51,18 +51,24 @@ class StageThrottle:
         """Retune either cap live. None disables a cap; ZERO means fully
         blocked (an outage bin) — acquire() parks until a retune, matching
         the simulator where rate = min(n*tpt, 0) moves nothing. Tokens are
-        clamped to the new burst so a cap cut takes effect within one
-        chunk."""
+        clamped to the new burst so a cap cut takes effect within one chunk,
+        but a NEGATIVE balance (debt from an oversized chunk) is never
+        forgiven by a retune — otherwise an outage/recovery cycle would
+        erase the owed wait and the average rate would exceed the cap."""
         with self._lock:
             if aggregate_bps is not _UNSET:
                 enabling = aggregate_bps and not self.aggregate_bps
                 self.aggregate_bps = aggregate_bps
                 if aggregate_bps:
                     cap = float(aggregate_bps)
-                    self._tokens = cap if enabling else min(self._tokens, cap)
+                    if enabling:
+                        self._tokens = cap if self._tokens >= 0.0 \
+                            else self._tokens
+                    else:
+                        self._tokens = min(self._tokens, cap)
                     self._t = time.monotonic()
                 else:
-                    self._tokens = 0.0
+                    self._tokens = min(self._tokens, 0.0)
             if per_thread_bps is not _UNSET:
                 self.per_thread_bps = per_thread_bps
 
@@ -70,13 +76,23 @@ class StageThrottle:
         with self._lock:
             return self.aggregate_bps, self.per_thread_bps
 
-    def acquire(self, nbytes):
+    def acquire(self, nbytes, should_abort=None):
         """Blocks to enforce the aggregate cap. Returns per-thread sleep that
-        the caller must additionally honor for its own chunk. Rates are
-        re-read every iteration so a live retune is honored mid-wait — a
-        zero rate (outage) parks here instead of sleeping nbytes/0 forever
-        in the caller."""
+        the caller must additionally honor for its own chunk, or None when
+        ``should_abort()`` turned true mid-wait (engine shutdown: outage bins
+        and token waits would otherwise never observe it). Rates are re-read
+        every iteration so a live retune is honored mid-wait — a zero rate
+        (outage) parks here instead of sleeping nbytes/0 forever in the
+        caller.
+
+        A chunk larger than one second of aggregate tokens (nbytes > cap)
+        can never accumulate enough: it runs on DEBT — the bucket only needs
+        to be full, the withdrawal may drive it negative, and subsequent
+        acquires wait the deficit out. Average rate stays at the cap; the
+        oversized chunk passes within ~1 s instead of parking forever."""
         while True:
+            if should_abort is not None and should_abort():
+                return None
             with self._lock:
                 agg = self.aggregate_bps
                 per_thread = self.per_thread_bps
@@ -85,13 +101,15 @@ class StageThrottle:
                     if agg is None:
                         break
                     now = time.monotonic()
+                    cap = float(agg)  # burst = 1 second
                     self._tokens = min(self._tokens + (now - self._t) * agg,
-                                       float(agg))  # burst = 1 second
+                                       cap)
                     self._t = now
-                    if self._tokens >= nbytes:
-                        self._tokens -= nbytes
+                    need_tokens = min(float(nbytes), cap)
+                    if self._tokens >= need_tokens:
+                        self._tokens -= nbytes  # may go negative: debt
                         break
-                    need = (nbytes - self._tokens) / agg
+                    need = (need_tokens - self._tokens) / agg
                 else:
                     need = 0.05  # wait for a retune to lift the outage
             time.sleep(min(max(need, 1e-4), 0.05))
@@ -328,6 +346,22 @@ class TransferEngine:
         self.set_concurrency(initial_concurrency)
 
     # -- worker loops -----------------------------------------------------
+    def _acquire(self, stage, nbytes):
+        """Throttle acquire that observes engine shutdown: close() flips
+        _alive and workers parked in an outage bin or a token wait unwind
+        within one poll interval instead of never."""
+        return self.throttles[stage].acquire(
+            nbytes, should_abort=lambda: not self._alive)
+
+    def _sleep(self, seconds):
+        """Per-thread pacing sleep, sliced so close() interrupts it."""
+        deadline = time.monotonic() + seconds
+        while self._alive:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return
+            time.sleep(min(remaining, 0.05))
+
     def _worker(self, stage, epoch):
         while self._alive and self._epoch[stage] == epoch:
             if stage == self.READ:
@@ -337,9 +371,12 @@ class TransferEngine:
                     continue
                 self._track(+1)
                 cid, payload = item
-                sleep = self.throttles[0].acquire(len(payload))
+                sleep = self._acquire(0, len(payload))
+                if sleep is None:  # shutdown mid-acquire
+                    self._track(-1)
+                    return
                 if sleep:
-                    time.sleep(sleep)
+                    self._sleep(sleep)
                 while self._alive and not self.buffers[0].put(
                         (cid, payload), len(payload)):
                     pass  # put() parks on the condition until space frees or
@@ -352,9 +389,12 @@ class TransferEngine:
                     continue
                 self._track(+1)
                 (cid, payload), n = got
-                sleep = self.throttles[1].acquire(n)
+                sleep = self._acquire(1, n)
+                if sleep is None:
+                    self._track(-1)
+                    return
                 if sleep:
-                    time.sleep(sleep)
+                    self._sleep(sleep)
                 while self._alive and not self.buffers[1].put(
                         (cid, payload), n):
                     pass
@@ -366,9 +406,12 @@ class TransferEngine:
                     continue
                 self._track(+1)
                 (cid, payload), n = got
-                sleep = self.throttles[2].acquire(n)
+                sleep = self._acquire(2, n)
+                if sleep is None:
+                    self._track(-1)
+                    return
                 if sleep:
-                    time.sleep(sleep)
+                    self._sleep(sleep)
                 self.sink.write_chunk(cid, payload)
                 self._track(-1)
                 self._count(2, n)
@@ -451,7 +494,9 @@ class TransferEngine:
                 and self.buffers[1].used == 0 and inflight == 0)
 
     def close(self):
+        """Terminate all workers, including those parked in an outage bin or
+        a throttle token wait (acquire observes shutdown via should_abort)."""
         self._alive = False
         for p in self._pools:
             for t in p:
-                t.join(timeout=0.5)
+                t.join(timeout=1.0)

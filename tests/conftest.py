@@ -1,4 +1,7 @@
 import os
+import time
+
+import pytest
 
 # Tests run on the single real CPU device (the 512-device fake platform is
 # ONLY for the dry-run, set inside repro.launch.dryrun before jax init).
@@ -6,3 +9,51 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 # 8 host devices let the sharding/elastic tests build small real meshes while
 # staying cheap; model smoke tests ignore the extra devices.
+
+# Tier-1 wall-clock budget (seconds): the default tier-1 selection
+# (`-m "not slow"`, from pytest.ini addopts) FAILS if the whole session runs
+# longer — keeps the suite honest about what belongs behind the slow marker.
+TIER1_BUDGET_S = float(os.environ.get("TIER1_BUDGET_S", "900"))
+
+_session_t0 = None
+
+
+def _is_tier1_selection(config) -> bool:
+    markexpr = getattr(config.option, "markexpr", "") or ""
+    return "not slow" in markexpr
+
+
+def pytest_configure(config):
+    global _session_t0
+    _session_t0 = time.monotonic()
+
+
+def pytest_collection_modifyitems(config, items):
+    """pallas-marked tests need a compiled-Pallas-compatible accelerator;
+    skip them cleanly on CPU-only hosts (PALLAS_TESTS=1 forces them on)."""
+    if os.environ.get("PALLAS_TESTS"):
+        return
+    import jax
+    if jax.default_backend() != "cpu":
+        return
+    skip = pytest.mark.skip(
+        reason="pallas: no compatible accelerator (PALLAS_TESTS=1 to force)")
+    for item in items:
+        if "pallas" in item.keywords:
+            item.add_marker(skip)
+
+
+def pytest_sessionfinish(session, exitstatus):
+    if _session_t0 is None or not _is_tier1_selection(session.config):
+        return
+    elapsed = time.monotonic() - _session_t0
+    if elapsed > TIER1_BUDGET_S and exitstatus == 0:
+        session.exitstatus = 1
+        reporter = session.config.pluginmanager.get_plugin("terminalreporter")
+        msg = (f"tier-1 wall-clock guard: {elapsed:.0f}s exceeds the "
+               f"{TIER1_BUDGET_S:.0f}s budget (TIER1_BUDGET_S to adjust; "
+               f"move long tests behind the `slow` marker)")
+        if reporter is not None:
+            reporter.write_line(msg, red=True)
+        else:  # pragma: no cover
+            print(msg)

@@ -197,6 +197,76 @@ def test_stage_throttle_zero_rate_is_outage_not_uncapped():
     assert done["sleep"] == 0.0
 
 
+def test_stage_throttle_oversized_chunk_no_livelock():
+    """A chunk larger than one second of aggregate tokens (nbytes >
+    aggregate_bps) can never fill the bucket — it must run on debt instead
+    of parking forever (the old accumulate-to-nbytes condition livelocked)."""
+    cap = 256 * 1024
+    th = StageThrottle(aggregate_bps=cap)
+    t0 = time.monotonic()
+    sleep = th.acquire(2 * cap)  # 2 seconds of tokens in one chunk
+    first = time.monotonic() - t0
+    assert sleep == 0.0
+    assert first < 1.0, first  # bucket starts full: passes immediately...
+    t0 = time.monotonic()
+    th.acquire(1024)  # ...and the next acquire pays the debt down
+    second = time.monotonic() - t0
+    assert second >= 0.7, second  # ~1 s deficit (tokens went ~-cap)
+    # average over both acquires respects the cap
+    assert (2 * cap + 1024) / (first + second) <= cap * 2.6
+
+
+def test_stage_throttle_debt_survives_retune_cycle():
+    """An outage/recovery retune cycle (set_rates(0) then set_rates(cap) —
+    exactly what a brownout-family ScenarioDriver plays) must not forgive
+    the negative balance left by an oversized chunk."""
+    cap = 256 * 1024
+    th = StageThrottle(aggregate_bps=cap)
+    th.acquire(2 * cap)  # passes on debt: balance ~ -cap
+    th.set_rates(aggregate_bps=0)    # outage bin
+    th.set_rates(aggregate_bps=cap)  # recovery bin
+    t0 = time.monotonic()
+    th.acquire(1024)
+    waited = time.monotonic() - t0
+    assert waited >= 0.7, waited  # still owes ~1 s of debt
+
+
+def test_engine_moves_oversized_chunks():
+    """End-to-end regression: chunk_bytes > aggregate_bps must not park the
+    read stage forever."""
+    cap = 128 * 1024
+    src = SyntheticSource(3 * 256 * 1024, chunk_bytes=256 * 1024)
+    sink = ChecksumSink()
+    eng = TransferEngine(
+        src, sink, sender_buf=1 * MB, receiver_buf=1 * MB,
+        throttles=(StageThrottle(cap), StageThrottle(), StageThrottle()),
+        initial_concurrency=(1, 2, 2), metric_interval=0.2)
+    t0 = time.time()
+    while sink.nbytes < 256 * 1024 and time.time() - t0 < 10:
+        time.sleep(0.05)
+    eng.close()
+    assert sink.nbytes >= 256 * 1024  # at least one oversized chunk landed
+
+
+def test_close_returns_promptly_mid_outage():
+    """close() must terminate workers parked in StageThrottle.acquire —
+    outage bins and token waits now observe shutdown via should_abort."""
+    src = SyntheticSource(64 * MB, chunk_bytes=256 * 1024)
+    eng = TransferEngine(
+        src, ChecksumSink(), sender_buf=2 * MB, receiver_buf=2 * MB,
+        throttles=(StageThrottle(), StageThrottle(), StageThrottle()),
+        initial_concurrency=(3, 3, 3), metric_interval=0.2)
+    time.sleep(0.3)
+    for th in eng.throttles:  # outage bin: every stage fully blocked
+        th.set_rates(aggregate_bps=0, per_thread_bps=0)
+    time.sleep(0.2)  # workers park in acquire()
+    t0 = time.monotonic()
+    eng.close()
+    assert time.monotonic() - t0 < 2.5
+    time.sleep(0.1)
+    assert eng.concurrency() == (0, 0, 0)  # parked workers actually exited
+
+
 def test_bounded_buffer_deadline_and_fifo():
     buf = BoundedBuffer(10)
     t0 = time.monotonic()
