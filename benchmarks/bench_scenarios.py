@@ -1,4 +1,4 @@
-"""Dynamic-scenario suite: ONE domain-randomized agent (PPO trained over the
+"""Dynamic-scenario suite: domain-randomized agents (PPO trained over the
 whole scenario distribution, batched on-accelerator via the schedule-native
 vmapped simulator) scored per scenario family against the two frozen-world
 baselines —
@@ -13,6 +13,13 @@ agent (the PR 1 8-dim observation) trains alongside it and the
 ``utilization_context_vs_base`` rows quantify what the context buys per
 family.
 
+The TEMPORAL policy stack trains two more agents on the same context
+observation — ``policy="stacked"`` (last-4-frame window) and
+``policy="gru"`` (recurrent carry) — and the per-family
+``utilization_mlp`` / ``utilization_stacked`` / ``utilization_gru`` rows
+compare them (``best_temporal_vs_mlp`` is the headline ratio: what K-step
+history buys over the one-step context deltas on the volatile families).
+
 Rows per family: convergence steps (first hit of 95% of the instantaneous
 achievable bottleneck), mean utilization over the run (the metric that
 punishes slow re-convergence after every condition change), mean utility,
@@ -26,7 +33,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import AutoMDTController
-from repro.core.ppo import PPOConfig, train_ppo
+from repro.core.ppo import PPOConfig, train_ppo, effective_obs_spec
 from repro.core.simulator import make_env_params, DEFAULT_OBS, CONTEXT_OBS
 from repro.scenarios import (FAMILIES, ScenarioSpec, sample_scenario_batch,
                              evaluate_scenario, run_in_dynamic_sim)
@@ -36,14 +43,19 @@ BASE_TPT = (0.2, 0.15, 0.2)
 BASE_BW = (1.0, 1.0, 1.0)
 TOTAL_GBIT = 40.0  # sized so the transfer spans the condition changes
                    # (>= 40 s even at the full 1 Gbit/s bottleneck)
+TEMPORAL_POLICIES = ("stacked", "gru")
 
 
 def train_dynamic_agent(params, *, families=None, seed=0, episodes=1500,
-                        n_envs=32, horizon=60.0, obs_spec=CONTEXT_OBS):
+                        n_envs=32, horizon=60.0, obs_spec=CONTEXT_OBS,
+                        policy="mlp", history=4):
     """Domain-randomized PPO: every episode batch redraws n_envs scenarios
     across ``families`` (same table shapes -> the episode step never
     retraces). ``obs_spec`` selects the observation; the default appends
-    schedule context so the agent anticipates rather than reacts."""
+    schedule context so the agent anticipates rather than reacts.
+    ``policy`` selects the temporal stack ("mlp" | "stacked" | "gru"); the
+    returned controller maintains the matching history window / GRU carry
+    live."""
 
     def resample(rnd):
         _, tables = sample_scenario_batch(
@@ -56,29 +68,47 @@ def train_dynamic_agent(params, *, families=None, seed=0, episodes=1500,
     # worth ~0.05-0.10 utilization on the volatile families
     cfg = PPOConfig(max_episodes=episodes, n_envs=n_envs,
                     action_scale=N_MAX / 4, seed=seed, obs_spec=obs_spec,
-                    param_selection="batch_mean")
+                    param_selection="batch_mean", policy=policy,
+                    history=history)
     res = train_ppo(params, cfg, tables=resample(0), resample=resample)
     ctrl = AutoMDTController(res.params["policy"], n_max=N_MAX,
                              bw_ref=float(max(BASE_BW)), deterministic=True,
-                             obs_spec=obs_spec)
+                             obs_spec=effective_obs_spec(cfg), policy=policy)
     return ctrl, res
 
 
-def main(rows=None):
+def main(rows=None, quick=False):
+    """``quick``: tiny training budgets + 2 families — the CI smoke mode
+    (exercises every policy path end-to-end without the full training)."""
     rows = rows if rows is not None else []
+    episodes = 96 if quick else 1500
+    n_envs = 8 if quick else 32
+    families = ("step", "bursty") if quick else FAMILIES
     params = make_env_params(tpt=list(BASE_TPT), bw=list(BASE_BW),
                              cap=[2.0, 2.0], n_max=N_MAX)
-    ctrl, res = train_dynamic_agent(params, seed=1)
+    ctrl, res = train_dynamic_agent(params, seed=1, episodes=episodes,
+                                    n_envs=n_envs)
     rows.append(("scenarios.train.wall_s", res.wall_s * 1e6,
                  f"{res.episodes} domain-randomized episodes in "
                  f"{res.wall_s:.1f}s"))
     base_ctrl, base_res = train_dynamic_agent(params, seed=1,
+                                              episodes=episodes,
+                                              n_envs=n_envs,
                                               obs_spec=DEFAULT_OBS)
     rows.append(("scenarios.train_base.wall_s", base_res.wall_s * 1e6,
                  f"{base_res.episodes} episodes (8-dim base obs) in "
                  f"{base_res.wall_s:.1f}s"))
+    temporal = {}
+    for policy in TEMPORAL_POLICIES:
+        t_ctrl, t_res = train_dynamic_agent(params, seed=1,
+                                            episodes=episodes,
+                                            n_envs=n_envs, policy=policy)
+        temporal[policy] = t_ctrl
+        rows.append((f"scenarios.train_{policy}.wall_s", t_res.wall_s * 1e6,
+                     f"{t_res.episodes} episodes (policy={policy}) in "
+                     f"{t_res.wall_s:.1f}s"))
 
-    for family in FAMILIES:
+    for family in families:
         spec = ScenarioSpec(family=family, seed=11, horizon=60.0,
                             base_tpt=BASE_TPT, base_bw=BASE_BW)
         evals = evaluate_scenario(spec, ctrl, params=params,
@@ -113,9 +143,27 @@ def main(rows=None):
         ratio = agent.utilization / max(base_ev.utilization, 1e-9)
         rows.append((f"scenarios.{family}.utilization_context_vs_base",
                      ratio * 1e6, f"{ratio:.2f}x context over base obs"))
+        # temporal policy stack: mlp (the context agent) vs stacked vs gru
+        rows.append((f"scenarios.{family}.utilization_mlp",
+                     agent.utilization * 1e6,
+                     f"{agent.utilization:.3f} (context mlp)"))
+        per_policy = {"mlp": agent.utilization}
+        for policy, t_ctrl in temporal.items():
+            ev = run_in_dynamic_sim(spec, params, t_ctrl, seed=7,
+                                    total_gbit=TOTAL_GBIT, label=policy)
+            per_policy[policy] = ev.utilization
+            rows.append((f"scenarios.{family}.utilization_{policy}",
+                         ev.utilization * 1e6,
+                         f"{ev.utilization:.3f} (policy={policy})"))
+        best = max(per_policy[p] for p in TEMPORAL_POLICIES)
+        ratio = best / max(per_policy["mlp"], 1e-9)
+        rows.append((f"scenarios.{family}.best_temporal_vs_mlp",
+                     ratio * 1e6,
+                     f"{ratio:.2f}x best temporal policy over context mlp"))
     return rows
 
 
 if __name__ == "__main__":
-    for r in main():
+    import sys
+    for r in main(quick="--quick" in sys.argv[1:]):
         print(",".join(str(x) for x in r))

@@ -58,6 +58,43 @@ def backend_rows(rows, *, n_envs=64, iters=20):
     return rows
 
 
+def policy_rows(rows, *, n_envs=16, iters=8):
+    """Per-policy cost of one jitted episode batch (rollout + ppo_epochs
+    updates): what the temporal stack costs over the feed-forward baseline —
+    "stacked" widens the input, "gru" threads a carry through the episode
+    scan AND replays it per update epoch (truncated BPTT)."""
+    import jax
+    from repro.core.ppo import (PPOConfig, _make_episode_fn, init_agent,
+                                _broadcast_table)
+    from repro.core.schedule import constant_table
+    from repro.core.simulator import make_env_params, CONTEXT_OBS
+
+    p = make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1], cap=[2, 2],
+                        n_max=50)
+    tables = _broadcast_table(constant_table(p.tpt, p.bw, p.duration), n_envs)
+    per_policy = {}
+    for policy in ("mlp", "stacked", "gru"):
+        cfg = PPOConfig(n_envs=n_envs, obs_spec=CONTEXT_OBS, policy=policy)
+        key = jax.random.PRNGKey(0)
+        state = init_agent(key, cfg)
+        episode = _make_episode_fn(p, cfg, randomize_t0=False)
+        state, _, _ = episode(state, tables, key)  # compile
+        jax.block_until_ready(state["params"])
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            state, _, _ = episode(state, tables, key)
+        jax.block_until_ready(state["params"])
+        per = (time.perf_counter() - t0) / iters
+        per_policy[policy] = per
+        rows.append((f"training_time.episode_{policy}_us", per * 1e6,
+                     f"{per * 1e3:.2f} ms per episode batch "
+                     f"({n_envs} envs, policy={policy})"))
+    ratio = per_policy["gru"] / max(per_policy["mlp"], 1e-12)
+    rows.append(("training_time.episode_gru_vs_mlp", ratio * 1e6,
+                 f"{ratio:.2f}x recurrent episode cost over mlp"))
+    return rows
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     p = make_scenario_env("read")
@@ -82,6 +119,7 @@ def main(rows=None):
          f"{45 * 60 / max(wall, 1e-9):.0f}x vs paper's 45 min"),
     ]
     backend_rows(rows)
+    policy_rows(rows)
     return rows
 
 

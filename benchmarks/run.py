@@ -8,35 +8,65 @@ Prints ``name,us_per_call,derived`` CSV rows.
                                     + per-family live ScenarioDriver replays:
                                     end_to_end.scenario_live.*.utilization)
   §V-A    -> bench_training_time   (offline training wall time; + substep
-                                    backend comparison jnp vs pallas)
+                                    backend comparison jnp vs pallas and
+                                    per-policy episode cost mlp/stacked/gru)
   (g)     -> roofline              (dry-run roofline aggregates)
   beyond  -> bench_scenarios       (dynamic conditions: schedule-context
                                     domain-randomized agent vs base-obs
-                                    agent and static/exploration-only)
+                                    agent and static/exploration-only, plus
+                                    the temporal policy stack mlp vs
+                                    stacked vs gru)
+
+``--quick`` runs the CI smoke subset: the substep-backend and per-policy
+episode-cost microbenches plus bench_scenarios in quick mode (tiny training
+budgets, 2 families) — minutes, not the full suite, so CI catches perf
+entry points that rot without paying for the real numbers.
 """
 
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
 
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; add the root so the `benchmarks.*` imports resolve no matter
+# where the script is launched from.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
-def main() -> None:
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    quick = "--quick" in argv
     from benchmarks import (bench_training_time, bench_convergence,
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
                             bench_scenarios)
-    suites = [
-        ("training_time", bench_training_time.main),
-        ("convergence", bench_convergence.main),
-        ("bottleneck", bench_bottleneck.main),
-        ("action_space", bench_action_space.main),
-        ("end_to_end", bench_end_to_end.main),
-        ("finetune", bench_finetune.main),
-        ("roofline", roofline.main),
-        ("scenarios", bench_scenarios.main),
-    ]
+    if quick:
+        suites = [
+            ("training_time_backends",
+             lambda rows: bench_training_time.backend_rows(rows, n_envs=8,
+                                                           iters=3)),
+            ("training_time_policies",
+             lambda rows: bench_training_time.policy_rows(rows, n_envs=4,
+                                                          iters=2)),
+            ("scenarios_quick",
+             lambda rows: bench_scenarios.main(rows, quick=True)),
+        ]
+    else:
+        suites = [
+            ("training_time", bench_training_time.main),
+            ("convergence", bench_convergence.main),
+            ("bottleneck", bench_bottleneck.main),
+            ("action_space", bench_action_space.main),
+            ("end_to_end", bench_end_to_end.main),
+            ("finetune", bench_finetune.main),
+            ("roofline", roofline.main),
+            ("scenarios", bench_scenarios.main),
+        ]
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suites:

@@ -8,6 +8,8 @@ for the old world and bleeds utilization for the rest of the run.
 
   PYTHONPATH=src python examples/dynamic_conditions.py          # simulator
   PYTHONPATH=src python examples/dynamic_conditions.py --live   # + real engine
+  PYTHONPATH=src python examples/dynamic_conditions.py --policy gru
+                                      # temporal policy: mlp | stacked | gru
 """
 
 import os
@@ -22,7 +24,7 @@ from benchmarks.bench_scenarios import (train_dynamic_agent, BASE_TPT,
                                         BASE_BW, N_MAX)
 
 
-def main(live=False):
+def main(live=False, policy="mlp"):
     params = make_env_params(tpt=list(BASE_TPT), bw=list(BASE_BW),
                              cap=[2.0, 2.0], n_max=N_MAX)
     spec = ScenarioSpec(
@@ -30,9 +32,10 @@ def main(live=False):
         base_tpt=BASE_TPT, base_bw=BASE_BW,
         params={"stage": 1, "at_frac": 0.5, "factor": 0.35})
 
-    print("training domain-randomized agent (step family)...")
+    print(f"training domain-randomized agent (step family, policy={policy})"
+          "...")
     ctrl, res = train_dynamic_agent(params, families=["step"], seed=2,
-                                    episodes=1000)
+                                    episodes=1000, policy=policy)
     print(f"  {res.episodes} episodes in {res.wall_s:.1f}s")
 
     evals = evaluate_scenario(spec, ctrl, params=params)
@@ -70,11 +73,13 @@ def run_live(spec, ctrl):
         receiver_buf=int(2.0 * bytes_per_unit),
         throttles=(StageThrottle(), StageThrottle(), StageThrottle()),
         initial_concurrency=(2, 2, 2), n_max=N_MAX, metric_interval=0.4)
-    # live twin of the sim-trained controller: same policy, byte-scaled
-    # observation normalization (see benchmarks/bench_end_to_end.py)
+    # live twin of the sim-trained controller: same policy (incl. history
+    # window / GRU carry), byte-scaled observation normalization (see
+    # benchmarks/bench_end_to_end.py)
     live_ctrl = AutoMDTController(
         ctrl.params, n_max=N_MAX, bw_ref=float(max(BASE_BW)) * bytes_per_unit,
-        deterministic=True, obs_spec=ctrl.obs_spec, interval=1.0 / time_scale)
+        deterministic=True, obs_spec=ctrl.obs_spec, interval=1.0 / time_scale,
+        policy=ctrl.policy)
     print("\nlive replay (time_scale=10x => 60 sim-seconds in 6s):")
     with ScenarioDriver(eng, spec, bytes_per_unit=bytes_per_unit,
                         time_scale=time_scale) as drv:
@@ -91,4 +96,12 @@ def run_live(spec, ctrl):
 
 
 if __name__ == "__main__":
-    main(live="--live" in sys.argv[1:])
+    argv = sys.argv[1:]
+    pol = "mlp"
+    if "--policy" in argv:
+        i = argv.index("--policy")
+        if i + 1 >= len(argv) or argv[i + 1] not in ("mlp", "stacked", "gru"):
+            sys.exit("usage: dynamic_conditions.py [--live] "
+                     "[--policy mlp|stacked|gru]")
+        pol = argv[i + 1]
+    main(live="--live" in argv, policy=pol)

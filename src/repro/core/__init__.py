@@ -9,9 +9,10 @@
   utility.py     U = sum_i t_i / k^{n_i}; R_max; k = 1.02
   exploration.py random-threads logging phase -> B_i, TPT_i, b, n_i*, R_max
   networks.py    residual actor/critic exactly as §IV-D (widths follow
-                 ObservationSpec.dim)
+                 ObservationSpec.dim) + the recurrent GRU actor-critic
   ppo.py         Algorithm 2 training: one train_ppo for static /
-                 single-schedule / domain-randomized regimes
+                 single-schedule / domain-randomized regimes and the
+                 temporal policy stack (policy="mlp" | "stacked" | "gru")
   marlin.py      baseline: 3 independent single-variable gradient-descent opts
   globus.py      baseline: static configuration
   controller.py  production phase (§IV-F), ObservationSpec-aware
@@ -22,11 +23,16 @@ from repro.core.schedule import (ScheduleTable, make_table, constant_table,
                                  schedule_at, stack_tables, peak_bw,
                                  bottleneck_trace)
 from repro.core.simulator import (SimParams, SimEnv, make_env_params,
-                                  ObservationSpec, DEFAULT_OBS, CONTEXT_OBS)
+                                  ObservationSpec, HistorySpec, DEFAULT_OBS,
+                                  CONTEXT_OBS, history_init, history_push,
+                                  history_flatten)
 from repro.core.simref import EventSimulator
-from repro.core.networks import policy_init, policy_apply, value_init, value_apply
+from repro.core.networks import (policy_init, policy_apply, value_init,
+                                 value_apply, rnn_policy_init,
+                                 rnn_policy_apply, rnn_value_init,
+                                 rnn_value_apply, rnn_carry)
 from repro.core.ppo import (PPOConfig, train_ppo, train_ppo_vectorized,
-                            train_ppo_scenarios)
+                            effective_obs_spec)
 from repro.core.marlin import MarlinOptimizer
 from repro.core.globus import GlobusController
 from repro.core.exploration import explore, ExplorationResult

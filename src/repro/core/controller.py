@@ -15,7 +15,13 @@ with schedule context (``CONTEXT_OBS``) gets the same per-stage throughput
 deltas and buffer-drain rates here, computed from consecutive observe()
 dicts — the live twin of what ``repro.core.simulator.observe`` derives from
 ``EnvState``.
-"""
+
+Temporal policies transfer the same way: a frame-stacked spec
+(``HistorySpec``, spec.history > 1) makes the controller maintain the same
+zero-padded K-frame window the PPO rollout carries, and ``policy="gru"``
+makes it thread the recurrent carry (zeros at reset) across consecutive
+``step()`` calls — so sim-trained params drop into the real engine
+unchanged (pinned by the live/sim parity tests)."""
 
 from __future__ import annotations
 
@@ -31,19 +37,28 @@ from repro.core.simulator import ObservationSpec, DEFAULT_OBS
 class AutoMDTController:
     def __init__(self, policy_params, *, n_max=100, bw_ref=None,
                  deterministic=False, seed=0,
-                 obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0):
+                 obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0,
+                 policy="mlp"):
+        if policy not in ("mlp", "stacked", "gru"):
+            raise ValueError(f"unknown policy {policy!r}")
         self.params = policy_params
         self.n_max = n_max
         self.bw_ref = bw_ref  # normalization reference (exploration B max)
         self.deterministic = deterministic
         self.obs_spec = obs_spec
         self.interval = interval  # seconds per control step (drain scaling)
+        # "stacked" vs "mlp" is decided by obs_spec.history; only the
+        # recurrent path needs a different apply fn + carry
+        self.policy = "gru" if policy == "gru" else "mlp"
         self._key = jax.random.PRNGKey(seed)
-        self._apply = jax.jit(nets.policy_apply)
+        self._apply = jax.jit(nets.rnn_policy_apply if self.policy == "gru"
+                              else nets.policy_apply)
         self._bw_seen = 1e-9  # running max when bw_ref is not provided
         self._prev_tps = None  # previous step's throughputs (context deltas)
+        self._hist = None   # (K, frame_dim) stacked window (spec.history > 1)
+        self._carry = None  # GRU carry (policy="gru"); zeros at reset
 
-    def _obs_vector(self, obs: dict):
+    def _frame_vector(self, obs: dict):
         if self.bw_ref:
             bw = self.bw_ref
         else:
@@ -69,17 +84,41 @@ class AutoMDTController:
                 / max(obs["receiver_capacity"], 1e-9),
             ])
         self._prev_tps = tps
-        return jnp.asarray(np.concatenate(parts), jnp.float32)
+        return np.concatenate(parts).astype(np.float32)
+
+    def _obs_vector(self, obs: dict):
+        """Network input under the spec: one frame (history=1, the PR 2
+        path, unchanged) or the flattened K-frame window — the live twin of
+        the rollout's ``history_init``/``history_push`` (zero-padded until K
+        real frames have been seen)."""
+        frame = self._frame_vector(obs)
+        K = self.obs_spec.history
+        if K == 1:
+            return jnp.asarray(frame, jnp.float32)
+        if self._hist is None:
+            self._hist = np.zeros((K, frame.shape[0]), np.float32)
+        self._hist = np.concatenate([self._hist[1:], frame[None]], axis=0)
+        return jnp.asarray(self._hist.reshape(-1), jnp.float32)
 
     def reset(self):
-        """Clear per-run state (context deltas, running bw max) so one
-        controller can be scored on many scenarios without leakage."""
+        """Clear per-run state (context deltas, running bw max, history
+        window, GRU carry) so one controller can be scored on many scenarios
+        without leakage."""
         self._prev_tps = None
         self._bw_seen = 1e-9
+        self._hist = None
+        self._carry = None
 
     def step(self, obs: dict):
         """obs dict -> next concurrency tuple (ints)."""
-        mean, std = self._apply(self.params, self._obs_vector(obs))
+        vec = self._obs_vector(obs)
+        if self.policy == "gru":
+            if self._carry is None:
+                self._carry = nets.rnn_carry(self.params)
+            self._carry, mean, std = self._apply(self.params, self._carry,
+                                                 vec)
+        else:
+            mean, std = self._apply(self.params, vec)
         if self.deterministic:
             a = mean
         else:

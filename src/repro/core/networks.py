@@ -1,4 +1,5 @@
-"""Policy and value networks, following §IV-D precisely.
+"""Policy and value networks, following §IV-D precisely — plus the
+recurrent (GRU) actor-critic for the temporal policy stack.
 
 Policy: input -> Linear(256) -> tanh -> 3 residual blocks (two linears
 interleaved with LayerNorm + ReLU, plus skip) -> tanh -> Linear(mean), with a
@@ -12,8 +13,16 @@ the mean head is scaled by ``action_scale`` (≈ n_max/4 at init) to put the
 initial policy in a sensible region of thread-space.
 
 ``obs_dim`` is spec-derived: pass ``ObservationSpec.dim`` from
-repro.core.simulator (8 base dims, 13 with schedule context) — the default
-of 8 is the paper's base observation.
+repro.core.simulator (8 base dims, 13 with schedule context, x K when
+frame-stacked) — the default of 8 is the paper's base observation.
+
+Recurrent variant (``PPOConfig(policy="gru")``): input -> Linear(256) ->
+tanh -> GRU cell -> tanh -> heads. The carry starts at zeros every episode
+(``rnn_carry``), is threaded through the jitted episode scan during
+training, and is maintained live by AutoMDTController — so sim-trained
+params drop into the real engine unchanged. ``rnn_policy_apply`` /
+``rnn_value_apply`` return ``(carry', ...)`` and broadcast over leading
+batch axes exactly like the feed-forward appliers.
 """
 
 from __future__ import annotations
@@ -88,6 +97,84 @@ def value_apply(params, obs):
     for b in ("b0", "b1"):
         h = _block_apply(params[b], h, jnp.tanh)
     return linear(params["out"], h)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Recurrent (GRU) actor-critic — the temporal policy stack
+# ---------------------------------------------------------------------------
+
+RNN_HIDDEN = 64
+
+
+def gru_init(key, d_in, d_hidden, dtype=F32):
+    kz, kr, kh = jax.random.split(key, 3)
+    return {
+        "wz": linear_init(kz, d_in + d_hidden, d_hidden, use_bias=True,
+                          dtype=dtype),
+        "wr": linear_init(kr, d_in + d_hidden, d_hidden, use_bias=True,
+                          dtype=dtype),
+        "wh": linear_init(kh, d_in + d_hidden, d_hidden, use_bias=True,
+                          dtype=dtype),
+    }
+
+
+def gru_cell(p, h, x):
+    """Standard GRU cell: (..., d_hidden), (..., d_in) -> (..., d_hidden)."""
+    hx = jnp.concatenate([x, h], axis=-1)
+    z = jax.nn.sigmoid(linear(p["wz"], hx))
+    r = jax.nn.sigmoid(linear(p["wr"], hx))
+    cand = jnp.tanh(linear(p["wh"], jnp.concatenate([x, r * h], axis=-1)))
+    return (1.0 - z) * h + z * cand
+
+
+def gru_hidden_dim(p) -> int:
+    return p["wz"]["w"].shape[1]
+
+
+def rnn_policy_init(key, *, obs_dim=8, act_dim=3, hidden=HIDDEN,
+                    rnn_hidden=RNN_HIDDEN, action_scale=25.0,
+                    init_log_std=1.5):
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": linear_init(ks[0], obs_dim, hidden, use_bias=True, dtype=F32),
+        "gru": gru_init(ks[1], hidden, rnn_hidden),
+        "mean": linear_init(ks[2], rnn_hidden, act_dim, use_bias=True,
+                            dtype=F32, stddev=0.01),
+        "mean_bias_units": jnp.ones((act_dim,), F32),
+        "log_std": jnp.full((act_dim,), init_log_std, F32),
+        "action_scale": jnp.asarray(action_scale, F32),
+    }
+
+
+def rnn_carry(params, batch_shape=()):
+    """Zero carry for a policy/value param tree (episode-start contract)."""
+    return jnp.zeros(batch_shape + (gru_hidden_dim(params["gru"]),), F32)
+
+
+def rnn_policy_apply(params, carry, obs):
+    """(carry, obs) -> (carry', mean, std): thread-count units."""
+    x = jnp.tanh(linear(params["embed"], obs))
+    h = gru_cell(params["gru"], carry, x)
+    raw = linear(params["mean"], jnp.tanh(h)) + params["mean_bias_units"]
+    mean = raw * params["action_scale"]
+    log_std = jnp.clip(params["log_std"], LOG_STD_MIN, LOG_STD_MAX)
+    std = jnp.exp(log_std) * jnp.ones_like(mean)
+    return h, mean, std
+
+
+def rnn_value_init(key, *, obs_dim=8, hidden=HIDDEN, rnn_hidden=RNN_HIDDEN):
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": linear_init(ks[0], obs_dim, hidden, use_bias=True, dtype=F32),
+        "gru": gru_init(ks[1], hidden, rnn_hidden),
+        "out": linear_init(ks[2], rnn_hidden, 1, use_bias=True, dtype=F32),
+    }
+
+
+def rnn_value_apply(params, carry, obs):
+    x = jnp.tanh(linear(params["embed"], obs))
+    h = gru_cell(params["gru"], carry, x)
+    return h, linear(params["out"], jnp.tanh(h))[..., 0]
 
 
 def gaussian_logp(mean, std, action):

@@ -21,9 +21,10 @@ Beyond-paper: the rollout is vmapped over ``cfg.n_envs`` parallel simulator
 environments and the whole episode+update is one jitted call — this is what
 makes offline training take seconds here vs the paper's 45 minutes (their
 simulator is a Python heap; see DESIGN.md §4). ``cfg.obs_spec`` selects the
-observation (schedule context on/off; the network widths follow spec.dim)
-and ``cfg.backend`` selects the inner substep-loop implementation
-("jnp" | "pallas").
+observation (schedule context on/off; the network widths follow spec.dim),
+``cfg.policy`` the temporal policy ("mlp" | "stacked" frame-stacking |
+"gru" recurrent carry), and ``cfg.backend`` the inner substep-loop
+implementation ("jnp" | "pallas").
 """
 
 from __future__ import annotations
@@ -38,8 +39,11 @@ import jax.numpy as jnp
 from repro.core import networks as nets
 from repro.core.schedule import constant_table
 from repro.core.simulator import (env_reset, env_step, observe, ACT_DIM,
-                                  ObservationSpec, DEFAULT_OBS)
+                                  ObservationSpec, DEFAULT_OBS,
+                                  history_init, history_push, history_flatten)
 from repro.optim import adamw_init, adamw_update
+
+POLICIES = ("mlp", "stacked", "gru")
 
 
 @dataclass
@@ -63,6 +67,14 @@ class PPOConfig:
     seed: int = 0
     log_every: int = 0
     obs_spec: ObservationSpec = DEFAULT_OBS  # observation layout (spec.dim)
+    policy: str = "mlp"          # "mlp" | "stacked" | "gru" (temporal stack):
+    # "stacked" frame-stacks the last ``history`` observations (HistorySpec;
+    # zero-padded reset) into a feed-forward input; "gru" threads a recurrent
+    # carry through the episode scan (truncated BPTT over the M-step
+    # episode). A 1-frame "stacked"/"mlp" policy is bit-identical to the
+    # plain path (pinned in tests/test_temporal_policies.py).
+    history: int = 4             # frames stacked when policy="stacked"
+    rnn_hidden: int = 64         # GRU carry width when policy="gru"
     backend: str = "jnp"         # inner substep loop: "jnp" | "pallas"
     param_selection: str = "best_episode"  # | "batch_mean": under domain
     # randomization a single episode's reward mostly measures how lucky the
@@ -83,25 +95,54 @@ class TrainResult:
     r_max: float | None
 
 
+def effective_obs_spec(cfg: PPOConfig) -> ObservationSpec:
+    """The observation layout the POLICY actually consumes: policy="stacked"
+    frame-stacks ``cfg.history`` frames onto ``cfg.obs_spec`` (unless the
+    spec already carries an explicit history); "mlp"/"gru" take the spec as
+    given. Network widths derive from this spec's ``dim``."""
+    if cfg.policy == "stacked" and cfg.obs_spec.history == 1:
+        return cfg.obs_spec._replace(history=cfg.history)
+    return cfg.obs_spec
+
+
 def init_agent(key, cfg: PPOConfig):
+    if cfg.policy not in POLICIES:
+        raise ValueError(f"unknown policy {cfg.policy!r}; expected one of "
+                         f"{POLICIES}")
     kp, kv = jax.random.split(key)
-    obs_dim = cfg.obs_spec.dim
-    params = {
-        "policy": nets.policy_init(kp, obs_dim=obs_dim, act_dim=ACT_DIM,
-                                   action_scale=cfg.action_scale,
-                                   init_log_std=cfg.init_log_std),
-        "value": nets.value_init(kv, obs_dim=obs_dim),
-    }
+    obs_dim = effective_obs_spec(cfg).dim
+    if cfg.policy == "gru":
+        params = {
+            "policy": nets.rnn_policy_init(kp, obs_dim=obs_dim,
+                                           act_dim=ACT_DIM,
+                                           rnn_hidden=cfg.rnn_hidden,
+                                           action_scale=cfg.action_scale,
+                                           init_log_std=cfg.init_log_std),
+            "value": nets.rnn_value_init(kv, obs_dim=obs_dim,
+                                         rnn_hidden=cfg.rnn_hidden),
+        }
+    else:
+        params = {
+            "policy": nets.policy_init(kp, obs_dim=obs_dim, act_dim=ACT_DIM,
+                                       action_scale=cfg.action_scale,
+                                       init_log_std=cfg.init_log_std),
+            "value": nets.value_init(kv, obs_dim=obs_dim),
+        }
     return {"params": params, "opt": adamw_init(params)}
 
 
 def _rollout(policy_params, env_params, table, key, *, M, substeps, spec,
-             backend, randomize_t0):
+             backend, randomize_t0, policy="mlp"):
     """One episode in one env under ``table``. When ``randomize_t0`` the
     episode start time is drawn uniformly over the schedule horizon so
     M-step episodes see every phase (domain randomization); static training
-    keeps the paper's reset-at-zero and the paper's key stream. Returns
-    per-step (obs, action, reward, logp)."""
+    keeps the paper's reset-at-zero and the paper's key stream.
+
+    Temporal policies: the scan carry holds the (K, frame_dim) history
+    window (zero-padded at reset; K=1 is exactly the unstacked path) and,
+    for "gru", the recurrent carry (zeros at episode start — the same
+    contract the loss replay and the live controller use). Returns per-step
+    (obs, action, reward, logp) where obs is the stacked network input."""
     if randomize_t0:
         k_reset, k_t0, k_steps = jax.random.split(key, 3)
         horizon = table.tpt.shape[0] * table.bin_seconds
@@ -110,22 +151,35 @@ def _rollout(policy_params, env_params, table, key, *, M, substeps, spec,
     else:
         k_reset, k_steps = jax.random.split(key)
         t0 = 0.0
+    fspec = spec._replace(history=1)  # env-level spec: observe() is per-frame
     state = env_reset(env_params, k_reset, t0, table=table, substeps=substeps,
-                      spec=spec, backend=backend)
-    obs0 = observe(env_params, state, table=table, spec=spec)
+                      spec=fspec, backend=backend)
+    obs0 = observe(env_params, state, table=table, spec=fspec)
+    hist0 = history_init(spec, obs0)
+    recurrent = policy == "gru"
 
     def step(carry, k):
-        state, obs = carry
-        mean, std = nets.policy_apply(policy_params, obs)
+        if recurrent:
+            state, hist, h = carry
+            obs = history_flatten(hist)
+            h, mean, std = nets.rnn_policy_apply(policy_params, h, obs)
+        else:
+            state, hist = carry
+            obs = history_flatten(hist)
+            mean, std = nets.policy_apply(policy_params, obs)
         action = mean + std * jax.random.normal(k, mean.shape)
         logp = nets.gaussian_logp(mean, std, action)
         state, obs_next, reward = env_step(env_params, state, action,
                                            table=table, substeps=substeps,
-                                           spec=spec, backend=backend)
-        return (state, obs_next), (obs, action, reward, logp)
+                                           spec=fspec, backend=backend)
+        hist = history_push(hist, obs_next)
+        out = (state, hist, h) if recurrent else (state, hist)
+        return out, (obs, action, reward, logp)
 
+    init = ((state, hist0, nets.rnn_carry(policy_params)) if recurrent
+            else (state, hist0))
     keys = jax.random.split(k_steps, M)
-    (_, _), traj = jax.lax.scan(step, (state, obs0), keys)
+    _, traj = jax.lax.scan(step, init, keys)
     return traj  # obs (M,D), act (M,3), rew (M,), logp (M,)
 
 
@@ -137,11 +191,9 @@ def _returns(rew, gamma):
     return gs
 
 
-def _loss(params, batch, cfg: PPOConfig):
-    obs, act, ret, logp_old = batch
-    mean, std = nets.policy_apply(params["policy"], obs)
-    logp = nets.gaussian_logp(mean, std, act)
-    v = nets.value_apply(params["value"], obs)
+def _surrogate(logp, logp_old, v, ret, entropy, cfg: PPOConfig):
+    """Clipped PPO surrogate shared by the feed-forward and recurrent
+    losses (inputs may be any matching shape; means are over all elems)."""
     adv = ret - jax.lax.stop_gradient(v)
     if cfg.normalize_adv:
         adv = (adv - adv.mean()) / (adv.std() + 1e-8)
@@ -150,16 +202,52 @@ def _loss(params, batch, cfg: PPOConfig):
     surr2 = jnp.clip(ratio, 1.0 - cfg.clip_eps, 1.0 + cfg.clip_eps) * adv
     actor = -jnp.minimum(surr1, surr2).mean()
     critic = cfg.critic_coef * jnp.mean((ret - v) ** 2)
-    entropy = nets.gaussian_entropy(std).mean()
+    entropy = entropy.mean()
     total = actor + critic - cfg.entropy_coef * entropy
     return total, {"actor": actor, "critic": critic, "entropy": entropy}
+
+
+def _loss(params, batch, cfg: PPOConfig):
+    obs, act, ret, logp_old = batch
+    mean, std = nets.policy_apply(params["policy"], obs)
+    logp = nets.gaussian_logp(mean, std, act)
+    v = nets.value_apply(params["value"], obs)
+    return _surrogate(logp, logp_old, v, ret, nets.gaussian_entropy(std), cfg)
+
+
+def _loss_recurrent(params, batch, cfg: PPOConfig):
+    """Recurrent PPO loss: replay the GRU over each episode SEQUENCE from
+    the zero carry (truncated BPTT, truncation = the M-step episode) so the
+    fresh params' logp/value reflect the carries THEY would have produced.
+    ``batch`` keeps episode structure: obs (E,M,D), act (E,M,A), ret (E,M),
+    logp_old (E,M)."""
+    obs, act, ret, logp_old = batch
+
+    def replay(obs_seq, act_seq):
+        def stepfn(carry, xs):
+            hp, hv = carry
+            o, a = xs
+            hp, mean, std = nets.rnn_policy_apply(params["policy"], hp, o)
+            hv, v = nets.rnn_value_apply(params["value"], hv, o)
+            return (hp, hv), (nets.gaussian_logp(mean, std, a), v,
+                              nets.gaussian_entropy(std))
+
+        carry0 = (nets.rnn_carry(params["policy"]),
+                  nets.rnn_carry(params["value"]))
+        _, (logp, v, ent) = jax.lax.scan(stepfn, carry0, (obs_seq, act_seq))
+        return logp, v, ent
+
+    logp, v, ent = jax.vmap(replay)(obs, act)  # (E, M) each
+    return _surrogate(logp, logp_old, v, ret, ent, cfg)
 
 
 def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0):
     """One jitted call = n_envs episodes + ppo_epochs updates — the single
     episode fn in the repo. ``tables`` (batched ScheduleTable, leading axis
     n_envs) is traced, so new schedule VALUES never retrace."""
-    spec = cfg.obs_spec
+    spec = effective_obs_spec(cfg)
+    recurrent = cfg.policy == "gru"
+    loss_fn = _loss_recurrent if recurrent else _loss
 
     def episode(train_state, tables, key):
         params, opt = train_state["params"], train_state["opt"]
@@ -169,16 +257,20 @@ def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0):
             lambda tab, k: _rollout(params["policy"], env_params, tab, k,
                                     M=cfg.max_steps, substeps=cfg.substeps,
                                     spec=spec, backend=cfg.backend,
-                                    randomize_t0=randomize_t0)
+                                    randomize_t0=randomize_t0,
+                                    policy=cfg.policy)
         )(tables, roll_keys)  # (E, M, ...)
         ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
-        flat = (obs.reshape(-1, spec.dim), act.reshape(-1, ACT_DIM),
-                ret.reshape(-1), logp.reshape(-1))
+        if recurrent:  # the loss replays carries over episode sequences
+            batch = (obs, act, ret, logp)
+        else:
+            batch = (obs.reshape(-1, spec.dim), act.reshape(-1, ACT_DIM),
+                     ret.reshape(-1), logp.reshape(-1))
 
         def update(carry, _):
             params, opt = carry
-            (l, aux), grads = jax.value_and_grad(_loss, has_aux=True)(
-                params, flat, cfg)
+            (l, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch, cfg)
             params, opt, _ = adamw_update(params, grads, opt, lr=cfg.lr,
                                           weight_decay=0.0,
                                           max_grad_norm=cfg.max_grad_norm)
@@ -279,11 +371,3 @@ def train_ppo_vectorized(env_params, cfg: PPOConfig = None, *, r_max=None,
     cfg = cfg or PPOConfig()
     cfg = PPOConfig(**{**cfg.__dict__, "n_envs": n_envs, **kw})
     return train_ppo(env_params, cfg, r_max=r_max, key=key)
-
-
-def train_ppo_scenarios(env_params, tables, cfg: PPOConfig, *, r_max=None,
-                        key=None, resample=None):
-    """Deprecated alias: ``train_ppo(env_params, cfg, tables=...,
-    resample=...)`` is the unified trainer."""
-    return train_ppo(env_params, cfg, tables=tables, resample=resample,
-                     r_max=r_max, key=key)

@@ -96,17 +96,55 @@ class ObservationSpec(NamedTuple):
     trending full or empty is the earliest observable symptom of a stage
     falling behind). Both are cheap functions of state the simulator and the
     live controller already track.
+
+    history=K: the policy input is the last K frames stacked oldest-first
+    (zero-padded at reset), so a feed-forward network sees K-step condition
+    TRENDS, not just the one-step deltas. ``observe`` always returns one
+    frame (``frame_dim``); stacking is a policy-side concern — the PPO
+    rollout and the live AutoMDTController each maintain the buffer via
+    ``history_init``/``history_push`` so sim-trained params transfer
+    unchanged. ``dim`` is the stacked network-input width.
     """
 
     context: bool = False
+    history: int = 1
+
+    @property
+    def frame_dim(self) -> int:
+        return OBS_DIM + (CONTEXT_DIM if self.context else 0)
 
     @property
     def dim(self) -> int:
-        return OBS_DIM + (CONTEXT_DIM if self.context else 0)
+        return self.frame_dim * self.history
+
+
+def HistorySpec(history: int = 4, *, context: bool = False) -> ObservationSpec:
+    """Frame-stacking extension of ObservationSpec: the last ``history``
+    observations concatenated oldest-first (default 4)."""
+    return ObservationSpec(context=context, history=history)
 
 
 DEFAULT_OBS = ObservationSpec()
 CONTEXT_OBS = ObservationSpec(context=True)
+
+
+def history_init(spec: ObservationSpec, frame):
+    """Fresh (K, frame_dim) history holding one real frame (newest = last
+    row) and K-1 zero-padded slots — the reset contract. K=1 reduces to
+    ``frame[None]`` exactly, which keeps the 1-frame path bit-identical to
+    the unstacked one."""
+    hist = jnp.zeros((spec.history,) + frame.shape, frame.dtype)
+    return hist.at[-1].set(frame)
+
+
+def history_push(hist, frame):
+    """Shift the window one step: drop the oldest row, append ``frame``."""
+    return jnp.concatenate([hist[1:], frame[None]], axis=0)
+
+
+def history_flatten(hist):
+    """(K, frame_dim) -> (K*frame_dim,) network input, oldest-first."""
+    return hist.reshape(-1)
 
 
 class EnvState(NamedTuple):
@@ -294,40 +332,3 @@ class SimEnv:
             table=self.table, substeps=self.substeps, spec=self.spec,
             backend=self.backend)
         return [float(x) for x in self.state.throughputs]
-
-
-# ---------------------------------------------------------------------------
-# Deprecated aliases (PR 1 dual-stack API) — thin shims over the unified
-# schedule-native core above. Kept one deprecation horizon (see README);
-# new code should pass ``table=`` to the unified functions instead.
-# ---------------------------------------------------------------------------
-
-DynEnvState = EnvState  # deprecated: EnvState carries the clock natively
-
-
-def sim_interval_sched(params, table, buffers, threads, t0, *, substeps=50):
-    """Deprecated alias for ``sim_interval(..., table=table)``."""
-    return sim_interval(params, buffers, threads, t0, table=table,
-                        substeps=substeps)
-
-
-def observe_sched(params, table, state):
-    """Deprecated alias for ``observe(..., table=table)``."""
-    return observe(params, state, table=table)
-
-
-def dyn_env_reset(params, table, key, t0=0.0, *, substeps=50):
-    """Deprecated alias for ``env_reset(..., table=table)``."""
-    return env_reset(params, key, t0, table=table, substeps=substeps)
-
-
-def dyn_env_step(params, table, state, action, *, substeps=50):
-    """Deprecated alias for ``env_step(..., table=table)``."""
-    return env_step(params, state, action, table=table, substeps=substeps)
-
-
-class DynSimEnv(SimEnv):
-    """Deprecated alias: ``SimEnv(params, table)`` is the unified wrapper."""
-
-    def __init__(self, params: SimParams, table, *, substeps=50, seed=0):
-        super().__init__(params, table, substeps=substeps, seed=seed)

@@ -10,3 +10,24 @@
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper; interpret=True on non-TPU platforms) and ref.py (pure-jnp oracle).
 """
+
+from __future__ import annotations
+
+
+def tpu_compiler_params(**kwargs):
+    """Version-compat accessor for the Mosaic TPU compiler-params class:
+    newer JAX spells it ``pltpu.CompilerParams``, older releases (including
+    the pinned 0.4.x) ``pltpu.TPUCompilerParams``. Returns an instance built
+    from ``kwargs``, or None when neither spelling exists / accepts them —
+    the semantics only affect TPU compilation, so None is always safe."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    for name in ("CompilerParams", "TPUCompilerParams"):
+        cls = getattr(pltpu, name, None)
+        if cls is None:
+            continue
+        try:
+            return cls(**kwargs)
+        except TypeError:  # field drift across versions
+            continue
+    return None

@@ -100,12 +100,10 @@ def flash_attention_bhsd(q, k, v, *, causal=True, window=None,
                                n_kv=n_kv, causal=causal, window=window,
                                scale=scale)
     grid = (B, Hq, n_q, n_kv)
-    try:
-        cparams = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel",
-                                 "arbitrary"))
-    except TypeError:  # older/newer field names — semantics only affect TPU
-        cparams = None
+    from repro.kernels import tpu_compiler_params
+    cparams = tpu_compiler_params(
+        dimension_semantics=("parallel", "parallel", "parallel",
+                             "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid=grid,

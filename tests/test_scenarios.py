@@ -11,9 +11,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core.simref import EventSimulator
-from repro.core.simulator import (make_env_params, sim_interval, env_step,
-                                  EnvState, sim_interval_sched, dyn_env_reset,
-                                  dyn_env_step, observe_sched, DynSimEnv)
+from repro.core.simulator import (make_env_params, sim_interval, env_reset,
+                                  env_step, SimEnv)
 from repro.scenarios import (FAMILIES, ScenarioSpec, ScheduleTable,
                              make_table, schedule_at, stack_tables,
                              sample_scenario_batch, run_in_dynamic_sim,
@@ -81,7 +80,7 @@ def test_static_schedule_matches_frozen_sim():
     t = jnp.zeros(())
     for _ in range(5):
         b_static, tps_static = sim_interval(p, bufs, threads)
-        b_sched, tps_sched = sim_interval_sched(p, tab, bufs, threads, t)
+        b_sched, tps_sched = sim_interval(p, bufs, threads, t, table=tab)
         np.testing.assert_allclose(np.asarray(tps_static),
                                    np.asarray(tps_sched), atol=1e-6)
         np.testing.assert_allclose(np.asarray(b_static),
@@ -112,8 +111,8 @@ def test_dense_sim_matches_schedule_oracle(family):
         acc_ev = np.zeros(3)
         wall = 0.0
         for _ in range(16):
-            bufs, tps = sim_interval_sched(
-                p, tab, bufs, jnp.asarray(threads, jnp.float32), t)
+            bufs, tps = sim_interval(
+                p, bufs, jnp.asarray(threads, jnp.float32), t, table=tab)
             t = t + p.duration
             _, info = ev.get_utility(threads)
             acc_d += np.asarray(tps)
@@ -131,11 +130,11 @@ def test_dyn_env_step_clock_and_reward():
     tab = spec.table()
     p = make_env_params(tpt=list(spec.base_tpt), bw=list(spec.base_bw),
                         cap=[2, 2], n_max=50)
-    st = dyn_env_reset(p, tab, jax.random.PRNGKey(0))
+    st = env_reset(p, jax.random.PRNGKey(0), table=tab)
     assert float(st.t) == pytest.approx(1.0)
     pre = post = None
     for _ in range(58):
-        st, obs, r = dyn_env_step(p, tab, st, jnp.asarray([10., 10., 10.]))
+        st, obs, r = env_step(p, st, jnp.asarray([10., 10., 10.]), table=tab)
         assert obs.shape == (8,)
         if abs(float(st.t) - 25.0) < 0.5:
             pre = float(st.throughputs[1])
@@ -153,13 +152,13 @@ def test_vmap_env_step_compiles_once_across_schedules():
 
     def raw_step(tab, st, a):
         traces.append(1)
-        return dyn_env_step(p, tab, st, a)
+        return env_step(p, st, a, table=tab)
 
     batch_step = jax.jit(jax.vmap(raw_step))
     _, b1 = sample_scenario_batch(4, seed=0)
     _, b2 = sample_scenario_batch(4, seed=99)
     keys = jax.random.split(jax.random.PRNGKey(0), 4)
-    states = jax.vmap(lambda tab, k: dyn_env_reset(p, tab, k))(b1, keys)
+    states = jax.vmap(lambda tab, k: env_reset(p, k, table=tab))(b1, keys)
     acts = jnp.full((4, 3), 8.0)
     batch_step(b1, states, acts)
     n_first = len(traces)
@@ -169,14 +168,14 @@ def test_vmap_env_step_compiles_once_across_schedules():
 
 
 def test_ppo_scenario_training_smoke():
-    from repro.core.ppo import PPOConfig, train_ppo_scenarios
+    from repro.core.ppo import PPOConfig, train_ppo
     p = make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1], cap=[2, 2],
                         n_max=50)
     _, tables = sample_scenario_batch(4, seed=0, horizon=30.0)
     cfg = PPOConfig(max_episodes=8, n_envs=4, max_steps=5, seed=0)
-    res = train_ppo_scenarios(p, tables, cfg,
-                              resample=lambda i: sample_scenario_batch(
-                                  4, seed=i, horizon=30.0)[1])
+    res = train_ppo(p, cfg, tables=tables,
+                    resample=lambda i: sample_scenario_batch(
+                        4, seed=i, horizon=30.0)[1])
     assert res.episodes == 8
     assert np.isfinite(res.history).all()
 
@@ -278,9 +277,10 @@ def test_live_engine_sees_step_change():
 
 
 def test_dyn_sim_env_probe_interface():
-    """DynSimEnv supports the exploration probe contract (engine twin)."""
+    """SimEnv(params, table) supports the exploration probe contract
+    (engine twin)."""
     spec = ScenarioSpec(family="diurnal", seed=0, horizon=20.0)
-    env = DynSimEnv(default_params(spec), spec.table(), seed=0)
+    env = SimEnv(default_params(spec), spec.table(), seed=0)
     obs = env.reset()
     assert obs.shape == (8,)
     tps = env.probe([8, 8, 8])
@@ -291,7 +291,7 @@ def test_dyn_sim_env_clock_survives_reset():
     """reset() re-randomizes threads, not the world: the scenario clock
     keeps advancing (engine-twin semantics)."""
     spec = ScenarioSpec(family="step", seed=0, horizon=40.0)
-    env = DynSimEnv(default_params(spec), spec.table(), seed=0)
+    env = SimEnv(default_params(spec), spec.table(), seed=0)
     env.reset()
     for _ in range(5):
         env.step([5, 5, 5])

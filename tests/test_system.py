@@ -126,15 +126,20 @@ def test_controller_drives_real_engine_to_completion():
 
 def test_training_driver_end_to_end(tmp_path):
     """~100M-family (smollm) reduced config: tuned input pipeline +
-    fault-tolerant loop; loss decreases."""
+    fault-tolerant loop; loss decreases. The threaded pipeline groups rows
+    into batches in arrival order, so per-step losses jitter run-to-run
+    (~0.02): assert the TREND over head/tail windows, where the ~0.05
+    decrease at 30 steps clears the noise, not two single samples."""
+    import numpy as np
     from repro.configs import get_smoke_config
     from repro.launch.train import train
     cfg = get_smoke_config("smollm-135m")
-    _, info = train(cfg, steps=10, batch=4, seq=64,
+    _, info = train(cfg, steps=30, batch=4, seq=64,
                     ckpt_dir=str(tmp_path / "ckpt"), controller="globus",
                     log_every=0)
-    assert len(info["losses"]) == 10
-    assert info["losses"][-1] < info["losses"][0]
+    losses = np.asarray(info["losses"])
+    assert len(losses) == 30
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]), losses
     assert info["report"].checkpoints >= 1
 
 

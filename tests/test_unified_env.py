@@ -10,12 +10,11 @@ import pytest
 
 from repro.core import networks as nets
 from repro.core.controller import AutoMDTController
-from repro.core.ppo import PPOConfig, train_ppo, train_ppo_scenarios
+from repro.core.ppo import PPOConfig, train_ppo
 from repro.core.schedule import constant_table, make_table
 from repro.core.simulator import (make_env_params, sim_interval, env_reset,
-                                  env_step, observe, EnvState, SimEnv,
-                                  ObservationSpec, DEFAULT_OBS, CONTEXT_OBS,
-                                  OBS_DIM, CONTEXT_DIM)
+                                  env_step, ObservationSpec, DEFAULT_OBS,
+                                  CONTEXT_OBS, OBS_DIM, CONTEXT_DIM)
 
 # ---------------------------------------------------------------------------
 # Goldens captured from the PRE-refactor static path (PR 1 HEAD, seed repo
@@ -103,18 +102,6 @@ def test_batch_mean_selection_same_history_different_params():
                   tables=tables)
     b = train_ppo(p, PPOConfig(max_episodes=8, n_envs=4, max_steps=5, seed=0,
                                param_selection="batch_mean"), tables=tables)
-    np.testing.assert_allclose(a.history, b.history, atol=0)
-
-
-def test_train_ppo_scenarios_is_thin_wrapper():
-    """The deprecated name routes through the unified trainer: same tables +
-    same key => identical history."""
-    from repro.scenarios import sample_scenario_batch
-    p = _params_read()
-    _, tables = sample_scenario_batch(4, seed=0, horizon=30.0)
-    cfg = PPOConfig(max_episodes=8, n_envs=4, max_steps=5, seed=3)
-    a = train_ppo_scenarios(p, tables, cfg)
-    b = train_ppo(p, cfg, tables=tables)
     np.testing.assert_allclose(a.history, b.history, atol=0)
 
 
@@ -247,6 +234,17 @@ def test_unknown_backend_raises():
         sim_interval(p, jnp.zeros(2), jnp.ones(3), backend="tpu2000")
 
 
+def test_deprecated_pr1_aliases_are_gone():
+    """The PR 1 dual-stack shims reached their one-cycle deprecation horizon
+    and are removed: the unified ``table=`` API is the only path."""
+    import repro.core.simulator as sim
+    import repro.core.ppo as ppo
+    for name in ("sim_interval_sched", "observe_sched", "dyn_env_reset",
+                 "dyn_env_step", "DynSimEnv", "DynEnvState"):
+        assert not hasattr(sim, name), name
+    assert not hasattr(ppo, "train_ppo_scenarios")
+
+
 @pytest.mark.pallas
 def test_pallas_backend_compiled_on_accelerator():
     """Compiled (non-interpret) Pallas on a real accelerator — auto-skipped
@@ -258,27 +256,3 @@ def test_pallas_backend_compiled_on_accelerator():
     nb, moved = sim_interval_batch(bufs, rates, cap, interpret=False)
     assert nb.shape == (8, 2) and moved.shape == (8, 3)
     assert np.isfinite(np.asarray(moved)).all()
-
-
-# ---------------------------------------------------------------------------
-# Deprecated aliases keep working (removal horizon: next major PR)
-# ---------------------------------------------------------------------------
-
-def test_deprecated_aliases_are_shims():
-    from repro.core.simulator import (sim_interval_sched, dyn_env_reset,
-                                      dyn_env_step, observe_sched, DynSimEnv,
-                                      DynEnvState)
-    p = _params_fill()
-    tab = constant_table(p.tpt, p.bw)
-    st = dyn_env_reset(p, tab, jax.random.PRNGKey(0))
-    assert isinstance(st, EnvState) and DynEnvState is EnvState
-    st2, obs, r = dyn_env_step(p, tab, st, jnp.asarray([5.0, 5.0, 5.0]))
-    assert obs.shape == (8,)
-    np.testing.assert_allclose(np.asarray(observe_sched(p, tab, st2)),
-                               np.asarray(obs), atol=0)
-    b, tps = sim_interval_sched(p, tab, jnp.zeros(2), jnp.ones(3),
-                                jnp.zeros(()))
-    assert b.shape == (2,)
-    env = DynSimEnv(p, tab, seed=0)
-    assert isinstance(env, SimEnv)
-    assert env.reset().shape == (8,)
