@@ -1,0 +1,170 @@
+"""Fleet suite: N concurrent transfers sharing one bottleneck.
+
+ONE shared fleet policy (PPO with the cross-flow observation and the
+Jain-fairness reward, domain-randomized over flow-ARRIVAL families) is
+scored per arrival family against three per-flow-INDEPENDENT baselines —
+each baseline flow sees only its own pipe, the regime every single-flow
+tool ships today:
+
+  automdt_indep   the single-flow context agent, one instance per flow
+  static          Globus-style fixed configuration per flow
+  marlin          per-flow Marlin hill climbing
+
+Arrival families (repro.scenarios.families.ARRIVAL_FAMILIES):
+staggered_start (rolling user arrivals), poisson_arrivals (seeded
+exponential gaps), flash_crowd (everyone piles on mid-run). Conditions are
+the static base profile — contention from the POPULATION, not the weather,
+is what this suite isolates (bench_scenarios covers moving conditions).
+
+Rows per family: aggregate utilization (total delivered over the integrated
+fleet-achievable bottleneck), time-mean Jain fairness over contended steps,
+and the fleet-over-baseline ratios. The ISSUE acceptance bar: the shared
+policy beats static and marlin on aggregate utilization on every arrival
+family, at Jain >= 0.9.
+
+  PYTHONPATH=src python benchmarks/bench_fleet.py          # full
+  PYTHONPATH=src python benchmarks/bench_fleet.py --quick  # CI smoke
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GlobusController, MarlinOptimizer
+from repro.core.controller import AutoMDTController, FleetPolicy
+from repro.core.ppo import PPOConfig, train_ppo, effective_obs_spec
+from repro.core.simulator import make_env_params, CONTEXT_OBS, FLEET_OBS
+from repro.scenarios import (ScenarioSpec, arrival_schedule,
+                             sample_fleet_batch, run_fleet_in_dynamic_sim)
+
+N_MAX = 50
+BASE_TPT = (0.2, 0.15, 0.2)
+BASE_BW = (1.0, 1.0, 1.0)
+N_FLOWS = 4
+FAIRNESS_COEF = 0.5
+ARRIVALS = ("staggered_start", "poisson_arrivals", "flash_crowd")
+BASELINES = ("automdt_indep", "static", "marlin")
+
+
+def train_fleet_agent(params, *, seed=0, episodes=1500, n_envs=16,
+                      n_flows=N_FLOWS, horizon=60.0,
+                      fairness_coef=FAIRNESS_COEF, policy="mlp"):
+    """Domain-randomized fleet PPO: every episode batch redraws n_envs
+    (condition table, arrival schedule) pairs over all arrival families, so
+    the ONE shared policy sees every population regime — alone on the link,
+    rolling arrivals, the flash crowd. Returns (FleetPolicy, TrainResult)."""
+    cache = {}
+
+    def draw(rnd):
+        if rnd not in cache:
+            cache.clear()  # train_ppo asks tables then flows for the same rnd
+            cache[rnd] = sample_fleet_batch(
+                n_envs, n_flows, seed=seed * 7919 + rnd, horizon=horizon,
+                base_tpt=BASE_TPT, base_bw=BASE_BW)[1:]
+        return cache[rnd]
+
+    cfg = PPOConfig(max_episodes=episodes, n_envs=n_envs,
+                    action_scale=N_MAX / 4, seed=seed, obs_spec=FLEET_OBS,
+                    param_selection="batch_mean", policy=policy,
+                    n_flows=n_flows, fairness_coef=fairness_coef)
+    tables, flows = draw(0)
+    res = train_ppo(params, cfg, tables=tables, flows=flows,
+                    resample=lambda rnd: draw(rnd)[0],
+                    resample_flows=lambda rnd: draw(rnd)[1])
+    fleet = FleetPolicy(res.params["policy"], n_max=N_MAX,
+                        deterministic=True,
+                        obs_spec=effective_obs_spec(cfg), policy=policy)
+    return fleet, res
+
+
+def train_independent_agent(params, *, seed=0, episodes=1500, n_envs=32):
+    """The per-flow-independent AutoMDT baseline: the SINGLE-flow context
+    agent (no cross-flow features, trained alone on the link), later
+    instantiated once per flow — what deploying today's tool N times looks
+    like."""
+    cfg = PPOConfig(max_episodes=episodes, n_envs=n_envs,
+                    action_scale=N_MAX / 4, seed=seed, obs_spec=CONTEXT_OBS,
+                    param_selection="batch_mean")
+    res = train_ppo(params, cfg)
+    return res
+
+
+def independent_controllers(kind, indep_params, n_flows):
+    """Fresh per-flow controller instances (independent internal state)."""
+    if kind == "automdt_indep":
+        return [AutoMDTController(indep_params, n_max=N_MAX,
+                                  bw_ref=float(max(BASE_BW)),
+                                  deterministic=True, obs_spec=CONTEXT_OBS)
+                for _ in range(n_flows)]
+    if kind == "static":
+        return [GlobusController() for _ in range(n_flows)]
+    if kind == "marlin":
+        return [MarlinOptimizer(n_max=N_MAX, seed=f)
+                for f in range(n_flows)]
+    raise ValueError(kind)
+
+
+def main(rows=None, quick=False):
+    """``quick``: tiny training budgets — the CI smoke mode (exercises the
+    fleet training + evaluation path end-to-end; the acceptance comparison
+    still runs, on the same arrival families)."""
+    rows = rows if rows is not None else []
+    episodes = 96 if quick else 1500
+    n_envs = 8 if quick else 16
+    horizon = 40.0 if quick else 60.0
+    n_flows = 3 if quick else N_FLOWS
+    params = make_env_params(tpt=list(BASE_TPT), bw=list(BASE_BW),
+                             cap=[2.0, 2.0], n_max=N_MAX)
+
+    fleet, res = train_fleet_agent(params, seed=1, episodes=episodes,
+                                   n_envs=n_envs, n_flows=n_flows,
+                                   horizon=horizon)
+    rows.append(("fleet.train.wall_s", res.wall_s * 1e6,
+                 f"{res.episodes} fleet episodes (F={n_flows}) in "
+                 f"{res.wall_s:.1f}s"))
+    indep = train_independent_agent(params, seed=1,
+                                    episodes=max(episodes, 96),
+                                    n_envs=max(n_envs, 8))
+    rows.append(("fleet.train_indep.wall_s", indep.wall_s * 1e6,
+                 f"{indep.episodes} single-flow episodes in "
+                 f"{indep.wall_s:.1f}s"))
+
+    spec = ScenarioSpec(family="static", seed=11, horizon=horizon,
+                        base_tpt=BASE_TPT, base_bw=BASE_BW)
+    for arrival in ARRIVALS:
+        flows = arrival_schedule(arrival, n_flows, horizon=horizon, seed=11)
+        evals = {"fleet": run_fleet_in_dynamic_sim(
+            spec, flows, params, fleet, seed=7, label="fleet",
+            arrival=arrival)}
+        for kind in BASELINES:
+            ctrls = independent_controllers(kind, indep.params["policy"],
+                                            n_flows)
+            evals[kind] = run_fleet_in_dynamic_sim(
+                spec, flows, params, ctrls, seed=7, label=kind,
+                arrival=arrival)
+        for label, ev in evals.items():
+            rows.append((f"fleet.{arrival}.utilization_{label}",
+                         ev.utilization * 1e6,
+                         f"{ev.utilization:.3f} aggregate "
+                         f"delivered/achievable (F={n_flows})"))
+            rows.append((f"fleet.{arrival}.jain_{label}",
+                         ev.jain * 1e6,
+                         f"{ev.jain:.3f} time-mean Jain fairness"))
+        for base in ("static", "marlin"):
+            ratio = (evals["fleet"].utilization
+                     / max(evals[base].utilization, 1e-9))
+            rows.append((f"fleet.{arrival}.fleet_vs_{base}",
+                         ratio * 1e6,
+                         f"{ratio:.2f}x shared fleet policy over "
+                         f"per-flow {base}"))
+        rows.append((f"fleet.{arrival}.mean_active",
+                     evals["fleet"].mean_active * 1e6,
+                     f"{evals['fleet'].mean_active:.2f} flows active "
+                     "on average"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for r in main(quick="--quick" in sys.argv[1:]):
+        print(",".join(str(x) for x in r))

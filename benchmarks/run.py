@@ -16,15 +16,24 @@ Prints ``name,us_per_call,derived`` CSV rows.
                                     agent and static/exploration-only, plus
                                     the temporal policy stack mlp vs
                                     stacked vs gru)
+  beyond  -> bench_fleet           (multi-flow fleet: shared fairness-aware
+                                    policy vs per-flow-independent AutoMDT/
+                                    static/Marlin across arrival families —
+                                    aggregate utilization + Jain index)
 
 ``--quick`` runs the CI smoke subset: the substep-backend and per-policy
-episode-cost microbenches plus bench_scenarios in quick mode (tiny training
-budgets, 2 families) — minutes, not the full suite, so CI catches perf
-entry points that rot without paying for the real numbers.
+episode-cost microbenches plus bench_scenarios and bench_fleet in quick
+mode (tiny training budgets) — minutes, not the full suite, so CI catches
+perf entry points that rot without paying for the real numbers.
+
+``--json PATH`` additionally writes every row to PATH as JSON — CI uploads
+the quick rows as a ``BENCH_<pr>.json`` artifact per PR, the repo's
+benchmark trajectory (see README).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
@@ -41,10 +50,16 @@ if _ROOT not in sys.path:
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     quick = "--quick" in argv
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            sys.exit("usage: run.py [--quick] [--json PATH]")
+        json_path = argv[i + 1]
     from benchmarks import (bench_training_time, bench_convergence,
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
-                            bench_scenarios)
+                            bench_scenarios, bench_fleet)
     if quick:
         suites = [
             ("training_time_backends",
@@ -55,6 +70,8 @@ def main(argv=None) -> None:
                                                           iters=2)),
             ("scenarios_quick",
              lambda rows: bench_scenarios.main(rows, quick=True)),
+            ("fleet_quick",
+             lambda rows: bench_fleet.main(rows, quick=True)),
         ]
     else:
         suites = [
@@ -66,9 +83,11 @@ def main(argv=None) -> None:
             ("finetune", bench_finetune.main),
             ("roofline", roofline.main),
             ("scenarios", bench_scenarios.main),
+            ("fleet", bench_fleet.main),
         ]
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for name, fn in suites:
         t0 = time.time()
         try:
@@ -76,12 +95,26 @@ def main(argv=None) -> None:
             for r in rows:
                 n, us, derived = r
                 print(f"{n},{us:.1f},{str(derived).replace(',', ';')}")
-            print(f"suite.{name}.wall_s,{(time.time() - t0) * 1e6:.0f},"
-                  f"{time.time() - t0:.1f}s", flush=True)
+                all_rows.append({"name": n, "us_per_call": float(us),
+                                 "derived": str(derived)})
+            wall = time.time() - t0
+            print(f"suite.{name}.wall_s,{wall * 1e6:.0f},{wall:.1f}s",
+                  flush=True)
+            all_rows.append({"name": f"suite.{name}.wall_s",
+                             "us_per_call": wall * 1e6,
+                             "derived": f"{wall:.1f}s"})
         except Exception:
             failures += 1
             print(f"suite.{name}.FAILED,0,{traceback.format_exc(limit=1)!r}",
                   flush=True)
+            all_rows.append({"name": f"suite.{name}.FAILED",
+                             "us_per_call": 0.0,
+                             "derived": traceback.format_exc(limit=1)})
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"quick": quick, "failures": failures,
+                       "rows": all_rows}, f, indent=1)
+        print(f"suite.json_written,0,{json_path}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -11,7 +11,7 @@
 import time
 
 from repro.core import (AutoMDTController, GlobusController, MarlinOptimizer,
-                        PPOConfig, train_ppo_vectorized, make_env_params,
+                        PPOConfig, train_ppo, make_env_params,
                         SimEnv, explore)
 from repro.transfer import (TransferEngine, SyntheticSource, ChecksumSink,
                             StageThrottle)
@@ -31,9 +31,9 @@ def main():
 
     # --- 2. offline PPO training (seconds, vs paper's 45 minutes) ----------
     t0 = time.time()
-    res = train_ppo_vectorized(params, PPOConfig(max_episodes=2000, seed=0,
-                                                 action_scale=10.0),
-                               r_max=ex.r_max, n_envs=32)
+    res = train_ppo(params, PPOConfig(max_episodes=2000, seed=0,
+                                      action_scale=10.0, n_envs=32),
+                    r_max=ex.r_max)
     print(f"[train] {res.episodes} episodes in {time.time()-t0:.1f}s; "
           f"best reward {res.best_reward:.2f} "
           f"({res.best_reward/(ex.r_max*10):.0%} of R_max), "

@@ -6,16 +6,22 @@
   simulator.py   TPU-native adaptation: dense fixed-timestep vectorized sim —
                  ONE schedule-native path (static = 1-bin table), selectable
                  substep backend ("jnp" | "pallas"), ObservationSpec
+  fleet.py       multi-flow fleet core: F contending flows share the
+                 scheduled capacity (thread-proportional contention,
+                 FlowSchedule arrivals, Jain-fairness reward); F=1 is the
+                 single-flow path bit-for-bit
   utility.py     U = sum_i t_i / k^{n_i}; R_max; k = 1.02
   exploration.py random-threads logging phase -> B_i, TPT_i, b, n_i*, R_max
   networks.py    residual actor/critic exactly as §IV-D (widths follow
                  ObservationSpec.dim) + the recurrent GRU actor-critic
   ppo.py         Algorithm 2 training: one train_ppo for static /
-                 single-schedule / domain-randomized regimes and the
+                 single-schedule / domain-randomized / fleet regimes and the
                  temporal policy stack (policy="mlp" | "stacked" | "gru")
   marlin.py      baseline: 3 independent single-variable gradient-descent opts
   globus.py      baseline: static configuration
-  controller.py  production phase (§IV-F), ObservationSpec-aware
+  controller.py  production phase (§IV-F), ObservationSpec-aware; FleetPolicy
+                 + FleetController step ONE trained policy across N live
+                 engines sharing a SharedLink
 """
 
 from repro.core.utility import utility, stage_utility, r_max, K_DEFAULT
@@ -24,16 +30,20 @@ from repro.core.schedule import (ScheduleTable, make_table, constant_table,
                                  bottleneck_trace)
 from repro.core.simulator import (SimParams, SimEnv, make_env_params,
                                   ObservationSpec, HistorySpec, DEFAULT_OBS,
-                                  CONTEXT_OBS, history_init, history_push,
-                                  history_flatten)
+                                  CONTEXT_OBS, FLEET_OBS, history_init,
+                                  history_push, history_flatten)
+from repro.core.fleet import (FleetState, FlowSchedule, make_flow_schedule,
+                              always_on, stack_flow_schedules, active_at,
+                              fleet_reset, fleet_step, fleet_observe,
+                              fleet_interval, fleet_achievable, jain_index)
 from repro.core.simref import EventSimulator
 from repro.core.networks import (policy_init, policy_apply, value_init,
                                  value_apply, rnn_policy_init,
                                  rnn_policy_apply, rnn_value_init,
                                  rnn_value_apply, rnn_carry)
-from repro.core.ppo import (PPOConfig, train_ppo, train_ppo_vectorized,
-                            effective_obs_spec)
+from repro.core.ppo import PPOConfig, train_ppo, effective_obs_spec
 from repro.core.marlin import MarlinOptimizer
 from repro.core.globus import GlobusController
 from repro.core.exploration import explore, ExplorationResult
-from repro.core.controller import AutoMDTController
+from repro.core.controller import (AutoMDTController, FleetPolicy,
+                                   FleetController)

@@ -21,7 +21,15 @@ Temporal policies transfer the same way: a frame-stacked spec
 zero-padded K-frame window the PPO rollout carries, and ``policy="gru"``
 makes it thread the recurrent carry (zeros at reset) across consecutive
 ``step()`` calls — so sim-trained params drop into the real engine
-unchanged (pinned by the live/sim parity tests)."""
+unchanged (pinned by the live/sim parity tests).
+
+Fleets transfer too: ``FleetController`` runs ONE shared policy across N
+live engines on a SharedLink — each engine's observe() dict becomes one
+per-flow frame (the same ``_FrameBuilder`` the single-flow controller
+uses), the cross-flow features (active fraction, aggregate utilization,
+my-share) are appended exactly as ``repro.core.fleet.fleet_observe``
+derives them, and ``FleetPolicy`` applies the policy to the whole
+(F, frame_dim) matrix at once (the networks broadcast over leading axes)."""
 
 from __future__ import annotations
 
@@ -34,39 +42,37 @@ from repro.core import networks as nets
 from repro.core.simulator import ObservationSpec, DEFAULT_OBS
 
 
-class AutoMDTController:
-    def __init__(self, policy_params, *, n_max=100, bw_ref=None,
-                 deterministic=False, seed=0,
-                 obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0,
-                 policy="mlp"):
-        if policy not in ("mlp", "stacked", "gru"):
-            raise ValueError(f"unknown policy {policy!r}")
-        self.params = policy_params
-        self.n_max = n_max
-        self.bw_ref = bw_ref  # normalization reference (exploration B max)
-        self.deterministic = deterministic
-        self.obs_spec = obs_spec
-        self.interval = interval  # seconds per control step (drain scaling)
-        # "stacked" vs "mlp" is decided by obs_spec.history; only the
-        # recurrent path needs a different apply fn + carry
-        self.policy = "gru" if policy == "gru" else "mlp"
-        self._key = jax.random.PRNGKey(seed)
-        self._apply = jax.jit(nets.rnn_policy_apply if self.policy == "gru"
-                              else nets.policy_apply)
-        self._bw_seen = 1e-9  # running max when bw_ref is not provided
-        self._prev_tps = None  # previous step's throughputs (context deltas)
-        self._hist = None   # (K, frame_dim) stacked window (spec.history > 1)
-        self._carry = None  # GRU carry (policy="gru"); zeros at reset
+class _FrameBuilder:
+    """One flow's observation frame from consecutive observe() dicts — the
+    live twin of one row of ``simulator.observe`` / ``fleet.fleet_observe``
+    (base dims + optional schedule context). Holds the per-flow running
+    state: previous throughputs (context deltas) and the running bandwidth
+    max used when no explicit normalization reference is given."""
 
-    def _frame_vector(self, obs: dict):
+    def __init__(self, *, n_max, bw_ref, obs_spec: ObservationSpec,
+                 interval):
+        self.n_max = n_max
+        self.bw_ref = bw_ref
+        self.obs_spec = obs_spec
+        self.interval = interval
+        self._bw_seen = 1e-9
+        self._prev_tps = None
+
+    def reset(self):
+        self._bw_seen = 1e-9
+        self._prev_tps = None
+
+    def bw(self, obs: dict):
         if self.bw_ref:
-            bw = self.bw_ref
-        else:
-            # running max, not the instantaneous max: under time-varying
-            # conditions the observation scale must not shrink with every
-            # bandwidth dip (training normalizes by the schedule's PEAK)
-            self._bw_seen = max(self._bw_seen, max(obs["throughputs"]), 1e-9)
-            bw = self._bw_seen
+            return self.bw_ref
+        # running max, not the instantaneous max: under time-varying
+        # conditions the observation scale must not shrink with every
+        # bandwidth dip (training normalizes by the schedule's PEAK)
+        self._bw_seen = max(self._bw_seen, max(obs["throughputs"]), 1e-9)
+        return self._bw_seen
+
+    def frame(self, obs: dict):
+        bw = self.bw(obs)
         tps = np.asarray(obs["throughputs"], float)
         parts = [
             np.asarray(obs["threads"], float) / self.n_max,
@@ -86,45 +92,60 @@ class AutoMDTController:
         self._prev_tps = tps
         return np.concatenate(parts).astype(np.float32)
 
+
+class AutoMDTController:
+    def __init__(self, policy_params, *, n_max=100, bw_ref=None,
+                 deterministic=False, seed=0,
+                 obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0,
+                 policy="mlp"):
+        if policy not in ("mlp", "stacked", "gru"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.params = policy_params
+        self.n_max = n_max
+        self.bw_ref = bw_ref  # normalization reference (exploration B max)
+        self.deterministic = deterministic
+        self.obs_spec = obs_spec
+        self.interval = interval  # seconds per control step (drain scaling)
+        # "stacked" vs "mlp" is decided by obs_spec.history; only the
+        # recurrent path needs a different apply fn + carry
+        self.policy = "gru" if policy == "gru" else "mlp"
+        self._frames = _FrameBuilder(n_max=n_max, bw_ref=bw_ref,
+                                     obs_spec=obs_spec, interval=interval)
+        # the temporal stepping (K-frame window / GRU carry / action
+        # sampling+clipping) is the F=1 slice of the fleet policy — ONE
+        # implementation of the live/sim transfer contract
+        self._policy = FleetPolicy(policy_params, n_max=n_max,
+                                   deterministic=deterministic, seed=seed,
+                                   obs_spec=obs_spec, policy=policy)
+
+    @property
+    def _hist(self):
+        return self._policy._hist
+
+    @property
+    def _carry(self):
+        return self._policy._carry
+
+    def _frame_vector(self, obs: dict):
+        return self._frames.frame(obs)
+
     def _obs_vector(self, obs: dict):
         """Network input under the spec: one frame (history=1, the PR 2
         path, unchanged) or the flattened K-frame window — the live twin of
         the rollout's ``history_init``/``history_push`` (zero-padded until K
         real frames have been seen)."""
-        frame = self._frame_vector(obs)
-        K = self.obs_spec.history
-        if K == 1:
-            return jnp.asarray(frame, jnp.float32)
-        if self._hist is None:
-            self._hist = np.zeros((K, frame.shape[0]), np.float32)
-        self._hist = np.concatenate([self._hist[1:], frame[None]], axis=0)
-        return jnp.asarray(self._hist.reshape(-1), jnp.float32)
+        return self._policy._window(self._frame_vector(obs)[None])[0]
 
     def reset(self):
         """Clear per-run state (context deltas, running bw max, history
         window, GRU carry) so one controller can be scored on many scenarios
         without leakage."""
-        self._prev_tps = None
-        self._bw_seen = 1e-9
-        self._hist = None
-        self._carry = None
+        self._frames.reset()
+        self._policy.reset()
 
     def step(self, obs: dict):
         """obs dict -> next concurrency tuple (ints)."""
-        vec = self._obs_vector(obs)
-        if self.policy == "gru":
-            if self._carry is None:
-                self._carry = nets.rnn_carry(self.params)
-            self._carry, mean, std = self._apply(self.params, self._carry,
-                                                 vec)
-        else:
-            mean, std = self._apply(self.params, vec)
-        if self.deterministic:
-            a = mean
-        else:
-            self._key, k = jax.random.split(self._key)
-            a = mean + std * jax.random.normal(k, mean.shape)
-        n = np.clip(np.round(np.asarray(a)), 1, self.n_max).astype(int)
+        n = self._policy._action(self._obs_vector(obs)[None])[0]
         return tuple(n.tolist())
 
     def run(self, engine, *, total_bytes=None, interval=1.0, max_steps=None,
@@ -148,6 +169,186 @@ class AutoMDTController:
             if total_bytes is not None and engine.bytes_written() >= total_bytes:
                 break
             if getattr(engine, "done", lambda: False)():
+                break
+            if not getattr(engine, "alive", True):
+                break  # closed mid-run: done() will never turn true
+            if max_steps is not None and steps >= max_steps:
+                break
+        return trace
+
+
+class FleetPolicy:
+    """ONE trained policy stepped across a whole fleet: maps a (F, frame_dim)
+    frame matrix to (F, 3) integer thread allocations, maintaining the
+    per-flow history windows (zero-padded, leading F axis) or GRU carries
+    ((F, H), zeros at reset) the fleet rollout used in training — so
+    fleet-trained params drop in unchanged. Shared by the sim-side fleet
+    evaluation (frames from ``fleet_observe``) and the live
+    ``FleetController`` (frames from engine observe() dicts)."""
+
+    def __init__(self, policy_params, *, n_max=100, deterministic=True,
+                 seed=0, obs_spec: ObservationSpec = DEFAULT_OBS,
+                 policy="mlp"):
+        if policy not in ("mlp", "stacked", "gru"):
+            raise ValueError(f"unknown policy {policy!r}")
+        self.params = policy_params
+        self.n_max = n_max
+        self.deterministic = deterministic
+        self.obs_spec = obs_spec
+        self.policy = "gru" if policy == "gru" else "mlp"
+        self._key = jax.random.PRNGKey(seed)
+        self._apply = jax.jit(nets.rnn_policy_apply if self.policy == "gru"
+                              else nets.policy_apply)
+        self._hist = None   # (F, K, frame_dim) when obs_spec.history > 1
+        self._carry = None  # (F, H) GRU carry
+
+    def reset(self):
+        self._hist = None
+        self._carry = None
+
+    def _window(self, frames):
+        """Maintain the per-flow zero-padded K-frame windows: (F, frame_dim)
+        new frames -> (F, dim) network input (K=1 passes frames through)."""
+        n_flows = frames.shape[0]
+        K = self.obs_spec.history
+        if K == 1:
+            return jnp.asarray(frames)
+        if self._hist is None:
+            self._hist = np.zeros((n_flows, K, frames.shape[1]), np.float32)
+        self._hist = np.concatenate([self._hist[:, 1:],
+                                     frames[:, None]], axis=1)
+        return jnp.asarray(self._hist.reshape(n_flows, -1))
+
+    def _action(self, vec):
+        """(F, dim) network input -> (F, 3) int thread allocations,
+        threading the GRU carry when recurrent."""
+        if self.policy == "gru":
+            if self._carry is None:
+                self._carry = nets.rnn_carry(self.params, (vec.shape[0],))
+            self._carry, mean, std = self._apply(self.params, self._carry,
+                                                 vec)
+        else:
+            mean, std = self._apply(self.params, vec)
+        if self.deterministic:
+            a = mean
+        else:
+            self._key, k = jax.random.split(self._key)
+            a = mean + std * jax.random.normal(k, mean.shape)
+        return np.clip(np.round(np.asarray(a)), 1, self.n_max).astype(int)
+
+    def act(self, frames):
+        """frames: (F, frame_dim) -> (F, 3) int thread allocations."""
+        return self._action(self._window(np.asarray(frames, np.float32)))
+
+
+class FleetController:
+    """Production phase for a FLEET: one shared policy drives N live engines
+    contending on a SharedLink, mirroring the sim contention model. Each
+    engine's observe() dict becomes one per-flow frame; when the spec
+    carries the fleet dims, the cross-flow features are appended exactly as
+    ``fleet_observe`` computes them — active fraction, aggregate network
+    utilization over ``bw_ref``, and each flow's share of the aggregate —
+    so sim-trained fleet params transfer unchanged (live/sim parity is
+    pinned in tests/test_fleet.py)."""
+
+    def __init__(self, policy_params, *, n_flows, n_max=100, bw_ref=None,
+                 deterministic=True, seed=0,
+                 obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0,
+                 policy="mlp"):
+        self.n_flows = n_flows
+        self.n_max = n_max
+        self.bw_ref = bw_ref
+        self.obs_spec = obs_spec
+        self._builders = [
+            _FrameBuilder(n_max=n_max, bw_ref=bw_ref, obs_spec=obs_spec,
+                          interval=interval)
+            for _ in range(n_flows)]
+        self.fleet_policy = FleetPolicy(policy_params, n_max=n_max,
+                                        deterministic=deterministic,
+                                        seed=seed, obs_spec=obs_spec,
+                                        policy=policy)
+
+    def reset(self):
+        for b in self._builders:
+            b.reset()
+        self.fleet_policy.reset()
+
+    def _fleet_bw(self):
+        # the aggregate-utilization normalization: the explicit reference
+        # when given, else the largest running max any flow has seen
+        return self.bw_ref or max(max(b._bw_seen for b in self._builders),
+                                  1e-9)
+
+    def frames(self, obs_list, active=None):
+        """(F, frame_dim) matrix from the engines' observe() dicts.
+        ``active``: optional (F,) 0/1 mask of flows currently transferring
+        (default: all) — inactive flows are masked out of the aggregate and
+        share features, as in the sim."""
+        if self.bw_ref is None:
+            # ONE shared normalization reference across the whole fleet —
+            # the sim divides every flow by the same schedule peak, so a
+            # flow that only ever ran under contention must not see its
+            # throughputs ~2x larger than a flow that once held the link
+            shared = max(self._fleet_bw(),
+                         *(max(o["throughputs"]) for o in obs_list))
+            for b in self._builders:
+                b._bw_seen = shared
+        base = np.stack([b.frame(o)
+                         for b, o in zip(self._builders, obs_list)])
+        if self.obs_spec.fleet:
+            act = (np.ones(self.n_flows) if active is None
+                   else np.asarray(active, float))
+            net = np.asarray([o["throughputs"][1] for o in obs_list],
+                             float) * act
+            agg = net.sum()
+            rows = np.stack([
+                np.full(self.n_flows, act.sum() / self.n_flows),
+                np.full(self.n_flows, agg / self._fleet_bw()),
+                net / max(agg, 1e-9),
+            ], axis=-1)
+            base = np.concatenate([base, rows], axis=-1)
+        return base.astype(np.float32)
+
+    def step(self, obs_list, active=None):
+        """List of observe() dicts -> list of (n_r, n_n, n_w) tuples."""
+        acts = self.fleet_policy.act(self.frames(obs_list, active))
+        return [tuple(int(x) for x in row) for row in acts]
+
+    def run(self, engines, *, interval=1.0, max_steps=None, total_bytes=None,
+            on_step=None):
+        """Drive N live engines until every one reports done() or is closed
+        (or ``total_bytes`` moved fleet-wide / ``max_steps`` elapsed).
+        Engines that finish early — or are torn down mid-run — keep being
+        observed but are masked inactive and no longer steered.
+        Returns the trace [(t, [n3 per flow], [goodput per flow])]."""
+        import time
+
+        def settled(e):
+            return e.done() or not getattr(e, "alive", True)
+
+        trace = []
+        t0 = time.time()
+        steps = 0
+        while True:
+            obs = [e.observe() for e in engines]
+            active = np.asarray([0.0 if settled(e) else 1.0
+                                 for e in engines])
+            for e, n in zip(engines,
+                            self.step(obs, active)):
+                if not settled(e):
+                    e.set_concurrency(n)
+            time.sleep(interval)
+            obs2 = [e.observe() for e in engines]
+            trace.append((time.time() - t0,
+                          [tuple(o["threads"]) for o in obs2],
+                          [o["throughputs"][2] for o in obs2]))
+            if on_step:
+                on_step(trace[-1])
+            steps += 1
+            moved = sum(e.bytes_written() for e in engines)
+            if total_bytes is not None and moved >= total_bytes:
+                break
+            if all(settled(e) for e in engines):
                 break
             if max_steps is not None and steps >= max_steps:
                 break

@@ -20,11 +20,22 @@ episodes pass without improvement.
 Beyond-paper: the rollout is vmapped over ``cfg.n_envs`` parallel simulator
 environments and the whole episode+update is one jitted call — this is what
 makes offline training take seconds here vs the paper's 45 minutes (their
-simulator is a Python heap; see DESIGN.md §4). ``cfg.obs_spec`` selects the
+simulator is a Python heap, popping one event at a time; ours advances every
+environment one dense interval per fused step). ``cfg.obs_spec`` selects the
 observation (schedule context on/off; the network widths follow spec.dim),
 ``cfg.policy`` the temporal policy ("mlp" | "stacked" frame-stacking |
 "gru" recurrent carry), and ``cfg.backend`` the inner substep-loop
 implementation ("jnp" | "pallas").
+
+Fleet training (``cfg.n_flows > 1``): ONE shared policy is applied to every
+flow's observation row (the networks broadcast over the F axis — no extra
+parameters), the env is the contention model of :mod:`repro.core.fleet`,
+and the per-step reward is shared across the fleet: aggregate utility +
+``cfg.fairness_coef`` * Jain's index over active flows' goodput. Each
+(step, flow) pair becomes one PPO sample against the shared return —
+flows join/leave mid-episode via ``flows=``/``resample_flows=`` (batched
+``FlowSchedule``, the arrival twin of ``tables=``/``resample=``).
+``n_flows=1`` is the single-flow trainer, bit-for-bit.
 """
 
 from __future__ import annotations
@@ -37,6 +48,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks as nets
+from repro.core.fleet import (fleet_reset, fleet_step, fleet_observe,
+                              always_on)
 from repro.core.schedule import constant_table
 from repro.core.simulator import (env_reset, env_step, observe, ACT_DIM,
                                   ObservationSpec, DEFAULT_OBS,
@@ -76,6 +89,16 @@ class PPOConfig:
     history: int = 4             # frames stacked when policy="stacked"
     rnn_hidden: int = 64         # GRU carry width when policy="gru"
     backend: str = "jnp"         # inner substep loop: "jnp" | "pallas"
+    n_flows: int = 1             # >1: fleet training — ONE shared policy
+    # stepped per-flow through the repro.core.fleet contention model (the
+    # scheduled stage capacity splits across active flows in proportion to
+    # their thread counts); obs_spec usually adds the cross-flow features
+    # (ObservationSpec(fleet=True) / FLEET_OBS). n_flows=1 is the
+    # single-flow trainer, bit-for-bit.
+    fairness_coef: float = 0.0   # weight of the Jain's-fairness reward term
+    # (fleet only): reward = sum_f utility_f + fairness_coef * Jain(active
+    # flows' goodput) — pushes the shared policy toward an even split of the
+    # bottleneck instead of starving late arrivals.
     param_selection: str = "best_episode"  # | "batch_mean": under domain
     # randomization a single episode's reward mostly measures how lucky the
     # sampled scenario was; the mean over the whole randomized batch is a
@@ -183,6 +206,60 @@ def _rollout(policy_params, env_params, table, key, *, M, substeps, spec,
     return traj  # obs (M,D), act (M,3), rew (M,), logp (M,)
 
 
+def _rollout_fleet(policy_params, env_params, table, flows, key, *, M,
+                   substeps, spec, backend, randomize_t0, policy,
+                   n_flows, fairness_coef):
+    """One fleet episode: F flows contend for the scheduled capacity, ONE
+    shared policy maps each flow's observation row to that flow's action
+    (the networks broadcast over the F axis), and every step's reward is
+    the shared fleet objective. History windows and the GRU carry get a
+    leading flow axis; the per-flow contracts (zero-padded reset, zero
+    carry) are unchanged, so fleet-trained params drop into the per-flow
+    live controller. Returns per-step (obs (F, D), action (F, 3),
+    reward (), logp (F,))."""
+    if randomize_t0:
+        k_reset, k_t0, k_steps = jax.random.split(key, 3)
+        horizon = table.tpt.shape[0] * table.bin_seconds
+        span = jnp.maximum(horizon - (M + 1) * env_params.duration, 0.0)
+        t0 = jax.random.uniform(k_t0, ()) * span
+    else:
+        k_reset, k_steps = jax.random.split(key)
+        t0 = 0.0
+    fspec = spec._replace(history=1)
+    state = fleet_reset(env_params, k_reset, n_flows, t0, flows=flows,
+                        table=table, substeps=substeps, spec=fspec,
+                        backend=backend)
+    obs0 = fleet_observe(env_params, state, flows=flows, table=table,
+                         spec=fspec)
+    hist0 = jax.vmap(lambda f: history_init(spec, f))(obs0)  # (F, K, D)
+    recurrent = policy == "gru"
+
+    def step(carry, k):
+        if recurrent:
+            state, hist, h = carry
+            obs = jax.vmap(history_flatten)(hist)
+            h, mean, std = nets.rnn_policy_apply(policy_params, h, obs)
+        else:
+            state, hist = carry
+            obs = jax.vmap(history_flatten)(hist)
+            mean, std = nets.policy_apply(policy_params, obs)
+        action = mean + std * jax.random.normal(k, mean.shape)
+        logp = nets.gaussian_logp(mean, std, action)
+        state, obs_next, reward = fleet_step(
+            env_params, state, action, flows=flows, table=table,
+            substeps=substeps, spec=fspec, backend=backend,
+            fairness_coef=fairness_coef)
+        hist = jax.vmap(history_push)(hist, obs_next)
+        out = (state, hist, h) if recurrent else (state, hist)
+        return out, (obs, action, reward, logp)
+
+    init = ((state, hist0, nets.rnn_carry(policy_params, (n_flows,)))
+            if recurrent else (state, hist0))
+    keys = jax.random.split(k_steps, M)
+    _, traj = jax.lax.scan(step, init, keys)
+    return traj  # obs (M,F,D), act (M,F,3), rew (M,), logp (M,F)
+
+
 def _returns(rew, gamma):
     def back(g, r):
         g = r + gamma * g
@@ -244,24 +321,53 @@ def _loss_recurrent(params, batch, cfg: PPOConfig):
 def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0):
     """One jitted call = n_envs episodes + ppo_epochs updates — the single
     episode fn in the repo. ``tables`` (batched ScheduleTable, leading axis
-    n_envs) is traced, so new schedule VALUES never retrace."""
+    n_envs) and ``flows`` (batched FlowSchedule, fleet mode) are traced, so
+    new schedule VALUES never retrace."""
     spec = effective_obs_spec(cfg)
     recurrent = cfg.policy == "gru"
+    fleet = cfg.n_flows > 1
     loss_fn = _loss_recurrent if recurrent else _loss
 
-    def episode(train_state, tables, key):
+    def episode(train_state, tables, flows, key):
         params, opt = train_state["params"], train_state["opt"]
         k_roll, _ = jax.random.split(key)
         roll_keys = jax.random.split(k_roll, cfg.n_envs)
-        obs, act, rew, logp = jax.vmap(
-            lambda tab, k: _rollout(params["policy"], env_params, tab, k,
-                                    M=cfg.max_steps, substeps=cfg.substeps,
-                                    spec=spec, backend=cfg.backend,
-                                    randomize_t0=randomize_t0,
-                                    policy=cfg.policy)
-        )(tables, roll_keys)  # (E, M, ...)
+        if fleet:
+            obs, act, rew, logp = jax.vmap(
+                lambda tab, fl, k: _rollout_fleet(
+                    params["policy"], env_params, tab, fl, k,
+                    M=cfg.max_steps, substeps=cfg.substeps, spec=spec,
+                    backend=cfg.backend, randomize_t0=randomize_t0,
+                    policy=cfg.policy, n_flows=cfg.n_flows,
+                    fairness_coef=cfg.fairness_coef)
+            )(tables, flows, roll_keys)  # (E, M, F, ...) / rew (E, M)
+        else:
+            obs, act, rew, logp = jax.vmap(
+                lambda tab, k: _rollout(params["policy"], env_params, tab, k,
+                                        M=cfg.max_steps,
+                                        substeps=cfg.substeps,
+                                        spec=spec, backend=cfg.backend,
+                                        randomize_t0=randomize_t0,
+                                        policy=cfg.policy)
+            )(tables, roll_keys)  # (E, M, ...)
         ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
-        if recurrent:  # the loss replays carries over episode sequences
+        if fleet:
+            # every (env, step, flow) sample trains against the SHARED
+            # fleet return of its step; recurrent replay treats each
+            # (env, flow) pair as one carry sequence
+            ret = jnp.broadcast_to(ret[:, :, None], logp.shape)  # (E, M, F)
+            if recurrent:
+                batch = (obs.transpose(0, 2, 1, 3)
+                            .reshape(-1, cfg.max_steps, spec.dim),
+                         act.transpose(0, 2, 1, 3)
+                            .reshape(-1, cfg.max_steps, ACT_DIM),
+                         ret.transpose(0, 2, 1).reshape(-1, cfg.max_steps),
+                         logp.transpose(0, 2, 1).reshape(-1, cfg.max_steps))
+            else:
+                batch = (obs.reshape(-1, spec.dim),
+                         act.reshape(-1, ACT_DIM),
+                         ret.reshape(-1), logp.reshape(-1))
+        elif recurrent:  # the loss replays carries over episode sequences
             batch = (obs, act, ret, logp)
         else:
             batch = (obs.reshape(-1, spec.dim), act.reshape(-1, ACT_DIM),
@@ -290,7 +396,8 @@ def _broadcast_table(table, n_envs):
 
 
 def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
-              resample=None, r_max=None, key=None):
+              resample=None, flows=None, resample_flows=None, r_max=None,
+              key=None):
     """Algorithm 2, schedule-native. Returns TrainResult with the BEST (not
     last) params.
 
@@ -301,7 +408,12 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
     ``resample``: optional ``fn(round_index) -> batched tables`` called
     before every episode batch to redraw the scenario distribution (same
     shapes => no retrace); explicitly passed ``tables`` are honored for
-    round 0, resampling starts at round 1."""
+    round 0, resampling starts at round 1.
+    ``flows`` / ``resample_flows``: the fleet twins (cfg.n_flows > 1) — a
+    batched FlowSchedule (leading axis cfg.n_envs) of per-flow activity
+    windows, and the per-round redraw over arrival families
+    (repro.scenarios.sample_fleet_batch). None = every flow active the whole
+    episode."""
     cfg = cfg or PPOConfig()
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
@@ -311,6 +423,8 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
         tables = _broadcast_table(
             constant_table(env_params.tpt, env_params.bw, env_params.duration),
             cfg.n_envs)
+    if cfg.n_flows > 1 and flows is None and resample_flows is None:
+        flows = _broadcast_table(always_on(cfg.n_flows), cfg.n_envs)
     episode_fn = _make_episode_fn(env_params, cfg, randomize_t0=scheduled)
 
     best_r = -jnp.inf
@@ -327,9 +441,12 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
     while n_episodes < cfg.max_episodes:
         if resample is not None and (tables is None or rnd > 0):
             tables = resample(rnd)
+        if resample_flows is not None and (flows is None or rnd > 0):
+            flows = resample_flows(rnd)
         rnd += 1
         key, k = jax.random.split(key)
-        train_state, ep_rewards, loss = episode_fn(train_state, tables, k)
+        train_state, ep_rewards, loss = episode_fn(train_state, tables,
+                                                   flows, k)
         ep_rewards = jax.device_get(ep_rewards)
         if by_batch_mean:
             batch_mean = float(ep_rewards.mean())
@@ -364,10 +481,6 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
                        converged_at=converged_at, best_reward=float(best_r),
                        r_max=r_max)
 
-
-def train_ppo_vectorized(env_params, cfg: PPOConfig = None, *, r_max=None,
-                         key=None, n_envs=64, **kw):
-    """Beyond-paper fast path: identical algorithm, vmapped envs."""
-    cfg = cfg or PPOConfig()
-    cfg = PPOConfig(**{**cfg.__dict__, "n_envs": n_envs, **kw})
-    return train_ppo(env_params, cfg, r_max=r_max, key=key)
+# train_ppo_vectorized was removed after its one-cycle deprecation horizon:
+# train_ppo(env_params, PPOConfig(n_envs=...)) is the same fast path
+# (removal pinned in tests/test_fleet.py).

@@ -77,6 +77,7 @@ def make_env_params(*, tpt, bw, cap, n_max=100, duration=1.0, k=K_DEFAULT):
 
 OBS_DIM = 8       # the paper's base observation (§IV-D-1)
 CONTEXT_DIM = 5   # schedule context: 3 throughput deltas + 2 drain rates
+FLEET_DIM = 3     # cross-flow: active fraction, aggregate util, my share
 ACT_DIM = 3
 
 
@@ -104,14 +105,25 @@ class ObservationSpec(NamedTuple):
     rollout and the live AutoMDTController each maintain the buffer via
     ``history_init``/``history_push`` so sim-trained params transfer
     unchanged. ``dim`` is the stacked network-input width.
+
+    fleet=True: 3 extra CROSS-FLOW dims for multi-flow fleets
+    (repro.core.fleet) — the fraction of flows currently active, the
+    aggregate network-link utilization summed over the fleet, and this
+    flow's share of the aggregate. They are what let ONE shared policy
+    reason about contention ("the link is already full, and I hold half of
+    it") instead of each flow seeing only its own pipe. Single-flow
+    ``observe`` never emits them; ``fleet_observe`` (sim) and
+    ``FleetController`` (live) both do, identically.
     """
 
     context: bool = False
     history: int = 1
+    fleet: bool = False
 
     @property
     def frame_dim(self) -> int:
-        return OBS_DIM + (CONTEXT_DIM if self.context else 0)
+        return (OBS_DIM + (CONTEXT_DIM if self.context else 0)
+                + (FLEET_DIM if self.fleet else 0))
 
     @property
     def dim(self) -> int:
@@ -126,6 +138,7 @@ def HistorySpec(history: int = 4, *, context: bool = False) -> ObservationSpec:
 
 DEFAULT_OBS = ObservationSpec()
 CONTEXT_OBS = ObservationSpec(context=True)
+FLEET_OBS = ObservationSpec(context=True, fleet=True)
 
 
 def history_init(spec: ObservationSpec, frame):

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_config, get_smoke_config
 from repro.core import (AutoMDTController, GlobusController, MarlinOptimizer,
-                        PPOConfig, train_ppo_vectorized, make_env_params,
+                        PPOConfig, train_ppo, make_env_params,
                         SimEnv, explore)
 from repro.data import InputPipeline
 from repro.launch.steps import make_train_step, init_state
@@ -38,9 +38,9 @@ def make_controller(kind, *, seed=0, n_max=32):
     env = SimEnv(params, seed=seed)
     env.reset()
     ex = explore(env.probe, n_samples=100, n_max=n_max, seed=seed)
-    res = train_ppo_vectorized(params, PPOConfig(max_episodes=1500, seed=seed,
-                                                 action_scale=n_max / 4),
-                               r_max=ex.r_max, n_envs=32)
+    res = train_ppo(params, PPOConfig(max_episodes=1500, seed=seed,
+                                      action_scale=n_max / 4, n_envs=32),
+                    r_max=ex.r_max)
     return AutoMDTController(res.params["policy"], n_max=n_max,
                              bw_ref=float(ex.bandwidth.max()))
 

@@ -1,8 +1,9 @@
 """Encoder-decoder backbone (seamless-m4t-large-v2). Per the assignment the
 speech/audio frontend is a STUB: ``input_specs()`` supplies precomputed frame
 embeddings (batch, src_len, d_model); the backbone is a 24L bidirectional
-encoder + 24L causal decoder with cross-attention. RoPE on self-attention
-(deviation from m4t's learned positions — noted in DESIGN.md), none on cross.
+encoder + 24L causal decoder with cross-attention. RoPE on self-attention — a
+deliberate deviation from m4t's learned positions (one rotation instead of a
+position table; decode caches stay position-independent), none on cross.
 """
 
 from __future__ import annotations

@@ -4,25 +4,32 @@ conditions, driven from ONE definition into all three layers —
   schedule.py   re-export of repro.core.schedule (the env core is
                 schedule-native; the table type lives in core)
   families.py   the generators: static, step, diurnal, bursty, square_wave,
-                brownout, random_walk
+                brownout, random_walk — plus the FLOW-ARRIVAL families
+                (always_on, staggered_start, poisson_arrivals, flash_crowd)
+                that populate a multi-flow fleet over time
   spec.py       ScenarioSpec (JSON scenario files) + domain-randomized
-                batch sampling
+                batch sampling (conditions and fleet arrivals)
   driver.py     ScenarioDriver: replay against the live TransferEngine
-  evaluate.py   scoring harness vs static / exploration-only baselines
+                (or a SharedLink — anything with retunable ``throttles``)
+  evaluate.py   scoring harness vs static / exploration-only baselines,
+                single-flow and fleet (aggregate utilization + Jain)
 
-Sim side: repro.core.simulator.env_step(..., table=...);
-training side: repro.core.ppo.train_ppo(..., tables=..., resample=...).
+Sim side: repro.core.simulator.env_step(..., table=...) and the fleet twin
+repro.core.fleet.fleet_step(..., flows=...); training side:
+repro.core.ppo.train_ppo(..., tables=..., flows=..., resample=...).
 """
 
 from repro.scenarios.schedule import (ScheduleTable, make_table,
                                       constant_table, schedule_at,
                                       stack_tables, table_to_numpy, peak_bw,
                                       bottleneck_trace, horizon_seconds)
-from repro.scenarios.families import FAMILIES
+from repro.scenarios.families import FAMILIES, ARRIVAL_FAMILIES
 from repro.scenarios.spec import (ScenarioSpec, default_specs,
-                                  sample_scenario_batch)
+                                  sample_scenario_batch, arrival_schedule,
+                                  sample_fleet_batch)
 from repro.scenarios.driver import ScenarioDriver
 from repro.scenarios.evaluate import (StaticController, exploration_baseline,
                                       static_baseline, run_in_dynamic_sim,
                                       evaluate_scenario, default_params,
-                                      EvalResult)
+                                      EvalResult, run_fleet_in_dynamic_sim,
+                                      FleetEvalResult)

@@ -11,6 +11,15 @@ scenarios) map to engine bytes/s through ``bytes_per_unit``.
     eng = TransferEngine(src, sink, throttles=(StageThrottle(), ...))
     with ScenarioDriver(eng, spec, bytes_per_unit=4 << 20, time_scale=10):
         controller.run(eng, ...)
+
+The target only needs a retunable ``throttles`` triple, so a fleet's
+``SharedLink`` drives the same way — one driver retunes the conditions
+every attached engine contends under:
+
+    link = SharedLink()
+    engines = [link.attach(src_i, sink_i) for ...]
+    with ScenarioDriver(link, spec, bytes_per_unit=4 << 20, time_scale=10):
+        fleet_controller.run(engines, ...)
 """
 
 from __future__ import annotations

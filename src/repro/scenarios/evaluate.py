@@ -14,18 +14,31 @@ simulator and scores, per scenario:
 The baselines the ISSUE asks for: ``static_baseline`` (Globus-style frozen
 config) and ``exploration_baseline`` (probe once under the schedule's t=0
 conditions, then hold n* forever — perfect for a frozen world, blind to
-change)."""
+change).
+
+FLEET scoring (``run_fleet_in_dynamic_sim``): F contending flows through the
+``repro.core.fleet`` contention model under a condition table AND a
+flow-arrival schedule. The actor is either a shared ``FleetPolicy`` (sees
+the whole fleet observation matrix) or a list of F INDEPENDENT per-flow
+controllers (Globus/Marlin/AutoMDT, each blind to the others — the
+baselines the fleet bench compares against). Scored on aggregate
+utilization — total delivered over the integral of the fleet-aware
+achievable bottleneck — and the time-mean Jain fairness index over steps
+where flows actually contend."""
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from types import SimpleNamespace
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.core import GlobusController, explore
-from repro.core.controller import AutoMDTController
+from repro.core.controller import AutoMDTController, FleetPolicy
+from repro.core.fleet import (FlowSchedule, jain_index, fleet_reset,
+                              fleet_step, fleet_observe, fleet_achievable)
 from repro.core.simulator import (SimParams, make_env_params, env_reset,
                                   env_step, SimEnv)
 from repro.core.utility import utility as utility_fn, K_DEFAULT
@@ -82,7 +95,10 @@ class EvalResult:
     tput: np.ndarray = field(repr=False)
 
 
-def _obs_dict(params, table, st):
+def _obs_dict(params, st):
+    """The engine observe()-dict contract from one flow's (threads,
+    throughputs, buffers) slice — shared by the single-flow and fleet
+    evaluation paths (ONE definition of the key names / free derivation)."""
     return {"threads": list(np.asarray(st.threads)),
             "throughputs": list(np.asarray(st.throughputs)),
             "sender_free": float(params.cap[0] - st.buffers[0]),
@@ -109,7 +125,7 @@ def run_in_dynamic_sim(spec, params, controller, *, steps=None, seed=7,
     delivered = 0.0
     completion = None
     for i in range(steps):
-        o = _obs_dict(params, table, st)
+        o = _obs_dict(params, st)
         if isinstance(controller, AutoMDTController):
             n = controller.step(o)
         else:
@@ -141,6 +157,97 @@ def run_in_dynamic_sim(spec, params, controller, *, steps=None, seed=7,
         completion_s=completion,
         threads=np.asarray(threads_hist),
         tput=tput,
+    )
+
+
+@dataclass
+class FleetEvalResult:
+    scenario: str
+    arrival: str
+    controller: str
+    utilization: float   # total delivered / integrated achievable bottleneck
+    jain: float          # time-mean Jain index over contended steps
+    delivered: float     # Gbit, summed over flows
+    mean_active: float   # mean number of active flows per step
+    goodput: np.ndarray = field(repr=False)   # (steps, F) per-flow write tps
+    threads: np.ndarray = field(repr=False)   # (steps, F, 3)
+
+
+def _flow_obs_dict(params, st, f):
+    """Flow ``f``'s slice of the FleetState through the one observe()-dict
+    contract in ``_obs_dict``."""
+    return _obs_dict(params, SimpleNamespace(threads=st.threads[f],
+                                             throughputs=st.throughputs[f],
+                                             buffers=st.buffers[f]))
+
+
+def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
+                             steps=None, seed=7, label=None,
+                             arrival="always_on"):
+    """F flows through one scenario under one arrival schedule. ``actor``
+    is a shared ``FleetPolicy`` (acts on the fleet observation matrix) or a
+    list of F independent per-flow controllers (``.step(obs_dict)`` or
+    ``.update(throughputs)``, each seeing only its own flow). Utilization is
+    total delivered over the integrated fleet-achievable bottleneck; the
+    Jain index averages over steps where ≥ 2 flows are active (there is
+    nothing to share out otherwise)."""
+    table = spec.table()
+    n_flows = flows.n_flows
+    duration = float(params.duration)
+    steps = steps or int(round(spec.horizon / duration))
+    t_start = np.asarray(flows.t_start)
+    t_end = np.asarray(flows.t_end)
+
+    st = fleet_reset(params, jax.random.PRNGKey(seed), n_flows, flows=flows,
+                     table=table)
+    shared = isinstance(actor, FleetPolicy)
+    if shared:
+        actor.reset()
+    else:
+        for c in actor:
+            if hasattr(c, "reset"):
+                c.reset()
+    goodput, threads_hist, jains, achs = [], [], [], []
+    n_active_hist = []
+    for _ in range(steps):
+        if shared:
+            obs = fleet_observe(params, st, flows=flows, table=table,
+                                spec=actor.obs_spec._replace(history=1))
+            acts = actor.act(np.asarray(obs))
+        else:
+            acts = []
+            for f, ctrl in enumerate(actor):
+                o = _flow_obs_dict(params, st, f)
+                if isinstance(ctrl, AutoMDTController):
+                    acts.append(ctrl.step(o))
+                else:
+                    acts.append(ctrl.update(o["throughputs"]))
+            acts = np.asarray(acts, float)
+        st, _, _ = fleet_step(params, st, jnp.asarray(acts, jnp.float32),
+                              flows=flows, table=table)
+        t_mid = float(st.t) - 0.5 * duration
+        active = ((t_mid >= t_start) & (t_mid < t_end)).astype(float)
+        g = np.asarray(st.throughputs[:, 2])
+        goodput.append(g)
+        threads_hist.append(np.asarray(st.threads))
+        achs.append(float(fleet_achievable(params, table, flows, t_mid)))
+        n_active_hist.append(active.sum())
+        if active.sum() >= 2:
+            jains.append(float(jain_index(g, active)))
+    goodput = np.asarray(goodput)
+    delivered = float(goodput.sum() * duration)
+    achievable = float(np.sum(achs) * duration)
+    return FleetEvalResult(
+        scenario=spec.name,
+        arrival=arrival,
+        controller=label or (type(actor).__name__ if shared
+                             else type(actor[0]).__name__),
+        utilization=min(delivered / max(achievable, 1e-9), 1.0),
+        jain=float(np.mean(jains)) if jains else 1.0,
+        delivered=delivered,
+        mean_active=float(np.mean(n_active_hist)),
+        goodput=goodput,
+        threads=np.asarray(threads_hist),
     )
 
 

@@ -15,11 +15,26 @@ Families (ISSUE tentpole set):
   square_wave   the bottleneck migrates read -> network -> write cyclically
   brownout      transient near-zero brown-outs of a random stage
   random_walk   seeded multiplicative random walk of every stage's bandwidth
+
+FLOW-ARRIVAL families (the fleet layer) are a second axis: instead of moving
+the conditions, they move the POPULATION — per-flow [t_start, t_end)
+activity windows over the horizon, consumed as a
+``repro.core.fleet.FlowSchedule``. Same determinism contract; each returns
+``(t_start[F], t_end[F])`` with ``np.inf`` meaning "stays until the end":
+
+  always_on        every flow active for the whole run (F=1: single-flow)
+  staggered_start  flow i joins at i * spacing (rolling user arrivals)
+  poisson_arrivals seeded exponential inter-arrival gaps (flow 0 anchors
+                   the run at t=0 so the fleet is never empty)
+  flash_crowd      one long-running flow; the rest pile on together
+                   mid-run and leave together (the Globus-endpoint rush)
 """
 
 from __future__ import annotations
 
 import numpy as np
+
+from repro.core.fleet import always_on as _core_always_on
 
 R, N, W = 0, 1, 2
 
@@ -151,4 +166,69 @@ FAMILIES = {
     "square_wave": square_wave,
     "brownout": brownout,
     "random_walk": random_walk,
+}
+
+
+# ---------------------------------------------------------------------------
+# Flow-arrival families (the fleet layer): when do flows join and leave?
+# ---------------------------------------------------------------------------
+
+def always_on(n_flows, horizon, seed=0):
+    """All flows run start to finish (F=1 is the single-flow world) — the
+    family-contract wrapper over ``repro.core.fleet.always_on`` (ONE
+    definition of "always active")."""
+    sched = _core_always_on(n_flows)
+    return (np.asarray(sched.t_start, np.float32),
+            np.asarray(sched.t_end, np.float32))
+
+
+def staggered_start(n_flows, horizon, seed=0, *, spacing_frac=0.15,
+                    hold_frac=None):
+    """Flow i joins at ``i * spacing_frac * horizon`` and stays (or holds for
+    ``hold_frac * horizon`` when given) — the rolling-arrival regime where
+    the early flow must first fill the link alone, then yield share. Late
+    flows are clipped to 0.9*horizon (same guard as poisson_arrivals) so a
+    large fleet never schedules permanently-inactive flows."""
+    t_start = np.minimum(np.arange(n_flows) * spacing_frac * horizon,
+                         0.9 * horizon).astype(np.float32)
+    if hold_frac is None:
+        t_end = np.full(n_flows, np.inf, np.float32)
+    else:
+        t_end = (t_start + hold_frac * horizon).astype(np.float32)
+    return t_start, t_end
+
+
+def poisson_arrivals(n_flows, horizon, seed=0, *, rate=None, hold_frac=None):
+    """Seeded Poisson process: exponential inter-arrival gaps at ``rate``
+    flows/second (default: the fleet arrives over ~the first 60% of the
+    horizon). Flow 0 anchors the run at t=0 so the bottleneck always has at
+    least one customer; late stragglers are clipped into the horizon."""
+    rng = np.random.default_rng(seed)
+    rate = rate if rate is not None else n_flows / max(0.6 * horizon, 1e-9)
+    gaps = rng.exponential(1.0 / rate, size=n_flows)
+    t_start = np.cumsum(gaps) - gaps[0]  # flow 0 at t=0
+    t_start = np.minimum(t_start, 0.9 * horizon).astype(np.float32)
+    if hold_frac is None:
+        t_end = np.full(n_flows, np.inf, np.float32)
+    else:
+        t_end = (t_start + hold_frac * horizon).astype(np.float32)
+    return t_start, t_end
+
+
+def flash_crowd(n_flows, horizon, seed=0, *, at_frac=0.4, leave_frac=0.85):
+    """One long-running flow; at ``at_frac`` of the horizon the remaining
+    F-1 flows all pile on AT ONCE, then leave together at ``leave_frac`` —
+    the shared-endpoint rush hour the Globus service reports."""
+    t_start = np.full(n_flows, at_frac * horizon, np.float32)
+    t_end = np.full(n_flows, leave_frac * horizon, np.float32)
+    t_start[0] = 0.0
+    t_end[0] = np.inf
+    return t_start, t_end
+
+
+ARRIVAL_FAMILIES = {
+    "always_on": always_on,
+    "staggered_start": staggered_start,
+    "poisson_arrivals": poisson_arrivals,
+    "flash_crowd": flash_crowd,
 }

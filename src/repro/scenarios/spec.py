@@ -22,7 +22,8 @@ from dataclasses import dataclass, field, asdict
 
 import numpy as np
 
-from repro.scenarios.families import FAMILIES
+from repro.core.fleet import make_flow_schedule, stack_flow_schedules
+from repro.scenarios.families import FAMILIES, ARRIVAL_FAMILIES
 from repro.scenarios.schedule import ScheduleTable, make_table, stack_tables
 
 DEFAULT_TPT = (0.2, 0.15, 0.2)   # per-thread Gbit/s (benchmarks/common.py
@@ -95,6 +96,40 @@ def default_specs(*, horizon=60.0, bin_seconds=1.0, seed=0,
                          bin_seconds=bin_seconds, base_tpt=base_tpt,
                          base_bw=base_bw)
             for f in FAMILIES]
+
+
+def arrival_schedule(family, n_flows, *, horizon=60.0, seed=0, **params):
+    """One flow-arrival family compiled to a ``FlowSchedule`` — the fleet
+    twin of ``ScenarioSpec.table()``. Deterministic in ``seed``."""
+    if family not in ARRIVAL_FAMILIES:
+        raise ValueError(f"unknown arrival family {family!r}; "
+                         f"have {sorted(ARRIVAL_FAMILIES)}")
+    t_start, t_end = ARRIVAL_FAMILIES[family](n_flows, horizon, seed=seed,
+                                              **params)
+    return make_flow_schedule(t_start, t_end)
+
+
+def sample_fleet_batch(n, n_flows, *, arrival_families=None,
+                       families=("static",), seed=0, horizon=60.0,
+                       bin_seconds=1.0, base_tpt=DEFAULT_TPT,
+                       base_bw=DEFAULT_BW, jitter=0.25):
+    """Domain randomization for fleet training: ``n`` (condition table,
+    arrival schedule) pairs — conditions drawn like ``sample_scenario_batch``
+    (default: static, so contention is the thing being randomized), arrivals
+    drawn over ``arrival_families`` with randomized seeds. Both batched
+    outputs have a leading env axis and a single shape for any n, so the
+    training step never retraces. Deterministic in ``seed``."""
+    specs, tables = sample_scenario_batch(
+        n, families=families, seed=seed, horizon=horizon,
+        bin_seconds=bin_seconds, base_tpt=base_tpt, base_bw=base_bw,
+        jitter=jitter)
+    arrivals = list(arrival_families or ARRIVAL_FAMILIES)
+    rng = np.random.default_rng(seed + 0x5EED)  # distinct from the tables'
+    flows = [arrival_schedule(arrivals[int(rng.integers(0, len(arrivals)))],
+                              n_flows, horizon=horizon,
+                              seed=int(rng.integers(0, 2 ** 31 - 1)))
+             for _ in range(n)]
+    return specs, tables, stack_flow_schedules(flows)
 
 
 def sample_scenario_batch(n, *, families=None, seed=0, horizon=60.0,

@@ -6,4 +6,5 @@ from repro.transfer.engine import (
     ChecksumSink,
     FileSink,
     StageThrottle,
+    SharedLink,
 )

@@ -469,10 +469,12 @@ class TransferEngine:
 
     def probe(self, threads):
         """Exploration-phase interface: set threads, wait one interval,
-        return per-stage throughputs."""
+        return per-stage throughputs. The wait is the abort-aware ``_sleep``
+        so ``close()`` mid-probe returns within one slice instead of hanging
+        a full metric_interval."""
         self.set_concurrency([int(x) for x in threads])
         before = self._snapshot()
-        time.sleep(self.metric_interval)
+        self._sleep(self.metric_interval)
         after = self._snapshot()
         return [(a - b) / self.metric_interval for a, b in zip(after, before)]
 
@@ -493,6 +495,13 @@ class TransferEngine:
         return (self.source.exhausted() and self.buffers[0].used == 0
                 and self.buffers[1].used == 0 and inflight == 0)
 
+    @property
+    def alive(self):
+        """False once close() has been called. A closed-but-unfinished
+        engine never reports done(), so controller run loops must also
+        check liveness or they spin forever after a mid-run teardown."""
+        return self._alive
+
     def close(self):
         """Terminate all workers, including those parked in an outage bin or
         a throttle token wait (acquire observes shutdown via should_abort)."""
@@ -500,3 +509,49 @@ class TransferEngine:
         for p in self._pools:
             for t in p:
                 t.join(timeout=1.0)
+
+
+class SharedLink:
+    """One bottleneck, many transfers: a single pool of per-stage
+    StageThrottles shared by every TransferEngine attached to it. The token
+    buckets ARE the live contention model — N flows' workers draw from the
+    same aggregate budget, so each flow's share of a stage follows its
+    thread count, exactly like the simulator's thread-proportional split in
+    ``repro.core.fleet`` (sim-trained fleet policies drop onto a SharedLink
+    unchanged).
+
+        link = SharedLink(aggregate_bps=(cap, cap, cap))
+        engines = [link.attach(src_i, sink_i, n_max=40) for ...]
+        FleetController(params, n_flows=len(engines), ...).run(engines)
+
+    A ScenarioDriver retunes a SharedLink directly (it only needs the
+    ``throttles`` attribute), replaying time-varying conditions against the
+    whole fleet at once."""
+
+    def __init__(self, aggregate_bps=(None, None, None),
+                 per_thread_bps=(None, None, None)):
+        self.throttles = tuple(
+            StageThrottle(a, p)
+            for a, p in zip(aggregate_bps, per_thread_bps))
+        self.engines = []
+
+    def attach(self, source, sink, **engine_kw):
+        """Create a TransferEngine whose three stages draw from this link's
+        shared throttles. Per-engine knobs (buffers, n_max, concurrency,
+        metric_interval) pass through."""
+        eng = TransferEngine(source, sink, throttles=self.throttles,
+                             **engine_kw)
+        self.engines.append(eng)
+        return eng
+
+    def observe(self):
+        """Per-flow observe() dicts, in attach order — the input shape
+        FleetController.step expects."""
+        return [e.observe() for e in self.engines]
+
+    def bytes_written(self):
+        return sum(e.bytes_written() for e in self.engines)
+
+    def close(self):
+        for e in self.engines:
+            e.close()

@@ -294,3 +294,113 @@ def test_buffer_backpressure():
     assert obs["receiver_free"] < 0.6 * obs["receiver_capacity"], obs
     # read rate collapses to ~write rate despite 16 MB/s per-thread capacity
     assert obs["throughputs"][0] < 2.5 * MB, obs["throughputs"]
+
+
+def test_close_interrupts_probe():
+    """probe() waits metric_interval with the abort-aware _sleep — close()
+    mid-probe must return within a slice, not hang the full interval (the
+    old blocking time.sleep held exploration hostage for metric_interval
+    seconds after shutdown)."""
+    src = SyntheticSource(64 * MB, chunk_bytes=128 * 1024)
+    eng = TransferEngine(src, ChecksumSink(), metric_interval=30.0,
+                         initial_concurrency=(1, 1, 1))
+    out = {}
+
+    def runner():
+        t0 = time.monotonic()
+        out["tps"] = eng.probe([2, 2, 2])
+        out["elapsed"] = time.monotonic() - t0
+
+    th = threading.Thread(target=runner, daemon=True)
+    th.start()
+    time.sleep(0.3)
+    eng.close()
+    th.join(timeout=5.0)
+    assert not th.is_alive()  # probe unwound instead of sleeping 30 s
+    assert out["elapsed"] < 5.0, out["elapsed"]
+
+
+def test_observe_stale_window_returns_last_tps():
+    """Re-polling observe() inside half a metric_interval must return the
+    LAST measured throughputs unchanged (a near-zero dt would turn the
+    byte-counter diff into garbage rates), and must not re-prime the
+    sampling clock; a poll past the window takes a fresh sample."""
+    src = SyntheticSource(256 * MB, chunk_bytes=128 * 1024)
+    eng = TransferEngine(src, ChecksumSink(), metric_interval=1.0,
+                         initial_concurrency=(2, 2, 2))
+    try:
+        time.sleep(0.6)
+        o1 = eng.observe()            # dt >= interval/2: fresh sample
+        t1 = eng._last_obs_t
+        o2 = eng.observe()            # immediate re-poll: stale window
+        assert o2["throughputs"] == o1["throughputs"]
+        assert eng._last_obs_t == t1  # fallback kept the sampling clock
+        time.sleep(0.6)
+        eng.observe()                 # past the window again
+        assert eng._last_obs_t > t1   # fresh sample re-primed the clock
+    finally:
+        eng.close()
+
+
+def test_shared_link_is_one_bottleneck_for_many_engines():
+    """Two engines on one SharedLink draw network tokens from the SAME
+    bucket: the aggregate network rate respects the link cap (each flow gets
+    a share, not a full copy), both flows make progress, and one close()
+    tears the whole fleet down."""
+    from repro.transfer import SharedLink
+    cap = 8 * MB
+    link = SharedLink(aggregate_bps=(None, cap, None))
+    sinks = [ChecksumSink(), ChecksumSink()]
+    for sink in sinks:
+        link.attach(SyntheticSource(256 * MB, chunk_bytes=128 * 1024), sink,
+                    sender_buf=2 * MB, receiver_buf=2 * MB,
+                    initial_concurrency=(2, 2, 2), metric_interval=0.25)
+    assert all(tuple(e.throttles) == link.throttles for e in link.engines)
+    time.sleep(0.5)
+    link.observe()       # primes each engine's sampling window
+    time.sleep(1.5)
+    obs = link.observe()
+    link.close()
+    assert len(obs) == 2
+    net = [o["throughputs"][1] for o in obs]
+    assert all(t > 0 for t in net)  # both flows make progress
+    # steady-state: the SUM of the flows' network rates respects the ONE
+    # link cap (per-engine buckets would allow ~2x); token-bucket burst
+    # tolerance as in test_engine_respects_aggregate_throttle
+    assert sum(net) <= cap * 1.35, net
+    assert all(s.nbytes > 0 for s in sinks)
+
+
+def test_fleet_controller_run_unblocks_when_engines_close_mid_run():
+    """FleetController.run must terminate when its engines are torn down
+    mid-run: a closed-but-unfinished engine never turns done(), so without
+    the liveness check the loop would steer dead engines forever."""
+    import jax
+    from repro.core import networks as nets
+    from repro.core.controller import FleetController
+    from repro.core.simulator import DEFAULT_OBS
+    from repro.transfer import SharedLink
+
+    link = SharedLink(aggregate_bps=(None, 4 * MB, None))
+    for _ in range(2):
+        link.attach(SyntheticSource(512 * MB, chunk_bytes=128 * 1024),
+                    ChecksumSink(), initial_concurrency=(2, 2, 2),
+                    metric_interval=0.25)
+    ctrl = FleetController(
+        nets.policy_init(jax.random.PRNGKey(0), obs_dim=DEFAULT_OBS.dim),
+        n_flows=2, n_max=8, bw_ref=4.0 * MB, obs_spec=DEFAULT_OBS)
+    out = {}
+
+    def runner():
+        t0 = time.monotonic()
+        out["trace"] = ctrl.run(link.engines, interval=0.2)
+        out["elapsed"] = time.monotonic() - t0
+
+    th = threading.Thread(target=runner, daemon=True)
+    th.start()
+    time.sleep(0.6)  # a couple of control steps in
+    link.close()     # 512 MB nowhere near done: only liveness can stop it
+    th.join(timeout=5.0)
+    assert not th.is_alive(), "run() kept spinning after the fleet closed"
+    assert out["elapsed"] < 6.0, out["elapsed"]
+    assert all(not e.alive for e in link.engines)
