@@ -12,6 +12,12 @@ the live engine via ScenarioDriver (the sim-trained domain-randomized agent
 driving the real pipeline while the schedule retunes its throttles) and
 records per-family utilization = delivered / achievable bytes — the live
 counterpart of the sim-side numbers in bench_scenarios (ROADMAP open item).
+
+``live_fleet_rows`` is the FLEET twin: a sim-trained shared fleet policy
+(FleetController) drives N real TransferEngines contending on ONE
+SharedLink while a ScenarioDriver retunes the shared pool, recording
+aggregate utilization and the Jain index over the flows' delivered bytes —
+the live counterpart of bench_fleet (ROADMAP fleet natural extension).
 """
 
 from __future__ import annotations
@@ -143,6 +149,86 @@ def live_scenario_rows(rows=None, *, families=None, time_scale=10.0,
     return rows
 
 
+def live_fleet_rows(rows=None, *, families=("static", "step"), n_flows=3,
+                    time_scale=10.0, horizon=30.0, episodes=300, seed=5):
+    """Run a sim-trained shared fleet policy against N REAL engines on one
+    SharedLink: the same spec that scores the fleet in the dense sim
+    retunes the link's shared throttle pool on a wall-clock ticker
+    (time-compressed), the FleetController re-allocates every flow live,
+    and the rows record aggregate utilization (delivered bytes over the
+    schedule's integrated fleet bottleneck) and the Jain index over the
+    flows' delivered bytes — the live twin of bench_fleet, mirroring
+    live_scenario_rows."""
+    from benchmarks.bench_fleet import (train_fleet_agent, BASE_TPT, BASE_BW,
+                                        N_MAX)
+    from repro.core import FleetController, jain_index
+    from repro.core.schedule import bottleneck_trace
+    from repro.scenarios import ScenarioSpec, ScenarioDriver
+    from repro.transfer import SharedLink
+
+    rows = rows if rows is not None else []
+    params = make_env_params(tpt=list(BASE_TPT), bw=list(BASE_BW),
+                             cap=[2.0, 2.0], n_max=N_MAX)
+    fleet, res = train_fleet_agent(params, seed=seed, episodes=episodes,
+                                   n_envs=8, n_flows=n_flows,
+                                   horizon=horizon)
+    rows.append(("end_to_end.fleet_live.train_wall_s", res.wall_s * 1e6,
+                 f"{res.episodes} fleet episodes in {res.wall_s:.1f}s"))
+    bytes_per_unit = 4 * MB  # 1.0 sim Gbit/s -> 4 MB/s on the live engine
+    for family in families:
+        spec = ScenarioSpec(family=family, seed=11, horizon=horizon,
+                            base_tpt=BASE_TPT, base_bw=BASE_BW)
+        link = SharedLink()
+        engines = [link.attach(
+            SyntheticSource(1 << 40, chunk_bytes=128 * 1024, seed=f),
+            ChecksumSink(),
+            sender_buf=int(2.0 * bytes_per_unit),
+            receiver_buf=int(2.0 * bytes_per_unit),
+            initial_concurrency=(2, 2, 2), n_max=N_MAX,
+            metric_interval=0.2) for f in range(n_flows)]
+        ctrl = FleetController(
+            fleet.params, n_flows=n_flows, n_max=N_MAX,
+            bw_ref=float(max(BASE_BW)) * bytes_per_unit,
+            obs_spec=fleet.obs_spec, interval=1.0 / time_scale,
+            deterministic=True)
+        wall = horizon / time_scale
+        try:
+            with ScenarioDriver(link, spec, bytes_per_unit=bytes_per_unit,
+                                time_scale=time_scale):
+                t0 = time.time()
+                while time.time() - t0 < wall:
+                    for eng, n in zip(engines, ctrl.step(link.observe())):
+                        eng.set_concurrency(n)
+                    time.sleep(0.2)
+                elapsed = time.time() - t0
+                per_flow = np.asarray([e.bytes_written() for e in engines],
+                                      float)
+        finally:
+            link.close()
+        # achievable bytes over the replayed window (the fleet shares ONE
+        # link, so the bottleneck integral is the single-link trace at the
+        # fleet's total thread budget), partial last bin pro-rated
+        ach = np.asarray(bottleneck_trace(spec.table(),
+                                          float(n_flows * N_MAX)))
+        bin_s = float(spec.bin_seconds)
+        sim_elapsed = elapsed * time_scale
+        play = np.clip(sim_elapsed - np.arange(len(ach)) * bin_s, 0.0, bin_s)
+        units = float((ach * play).sum())
+        units += float(ach[-1]) * max(sim_elapsed - len(ach) * bin_s, 0.0)
+        achievable = units * bytes_per_unit / time_scale
+        util = min(per_flow.sum() / max(achievable, 1e-9), 1.0)
+        jain = float(jain_index(per_flow))
+        rows.append((f"end_to_end.fleet_live.{family}.utilization",
+                     util * 1e6,
+                     f"{util:.3f} fleet delivered/achievable on a live "
+                     f"SharedLink (F={n_flows}, "
+                     f"{per_flow.sum() / MB:.1f} MB in {elapsed:.1f}s)"))
+        rows.append((f"end_to_end.fleet_live.{family}.jain",
+                     jain * 1e6,
+                     f"{jain:.3f} Jain over per-flow delivered bytes"))
+    return rows
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     # train AutoMDT offline against the matching sim profile (MB/s -> "Gbit")
@@ -175,6 +261,7 @@ def main(rows=None):
              "(paper: 6.6-7.3x)"),
         ]
     live_scenario_rows(rows)
+    live_fleet_rows(rows)
     return rows
 
 

@@ -60,7 +60,7 @@ def train_fleet_agent(params, *, seed=0, episodes=1500, n_envs=16,
             cache.clear()  # train_ppo asks tables then flows for the same rnd
             cache[rnd] = sample_fleet_batch(
                 n_envs, n_flows, seed=seed * 7919 + rnd, horizon=horizon,
-                base_tpt=BASE_TPT, base_bw=BASE_BW)[1:]
+                base_tpt=BASE_TPT, base_bw=BASE_BW)[1:3]
         return cache[rnd]
 
     cfg = PPOConfig(max_episodes=episodes, n_envs=n_envs,

@@ -20,6 +20,12 @@ Prints ``name,us_per_call,derived`` CSV rows.
                                     policy vs per-flow-independent AutoMDT/
                                     static/Marlin across arrival families —
                                     aggregate utilization + Jain index)
+  beyond  -> bench_objectives      (heterogeneous flow objectives: the
+                                    objective-aware shared policy + enforced
+                                    rate floors vs objective-blind AutoMDT/
+                                    static/Marlin on mixed gold/bronze
+                                    scenarios — deadline-hit-rate + weighted
+                                    utilization)
 
 ``--quick`` runs the CI smoke subset: the substep-backend and per-policy
 episode-cost microbenches plus bench_scenarios and bench_fleet in quick
@@ -59,7 +65,7 @@ def main(argv=None) -> None:
     from benchmarks import (bench_training_time, bench_convergence,
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
-                            bench_scenarios, bench_fleet)
+                            bench_scenarios, bench_fleet, bench_objectives)
     if quick:
         suites = [
             ("training_time_backends",
@@ -72,6 +78,8 @@ def main(argv=None) -> None:
              lambda rows: bench_scenarios.main(rows, quick=True)),
             ("fleet_quick",
              lambda rows: bench_fleet.main(rows, quick=True)),
+            ("objectives_quick",
+             lambda rows: bench_objectives.main(rows, quick=True)),
         ]
     else:
         suites = [
@@ -84,6 +92,7 @@ def main(argv=None) -> None:
             ("roofline", roofline.main),
             ("scenarios", bench_scenarios.main),
             ("fleet", bench_fleet.main),
+            ("objectives", bench_objectives.main),
         ]
     print("name,us_per_call,derived")
     failures = 0

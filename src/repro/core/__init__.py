@@ -9,8 +9,12 @@
   fleet.py       multi-flow fleet core: F contending flows share the
                  scheduled capacity (thread-proportional contention,
                  FlowSchedule arrivals, Jain-fairness reward); F=1 is the
-                 single-flow path bit-for-bit
-  utility.py     U = sum_i t_i / k^{n_i}; R_max; k = 1.02
+                 single-flow path bit-for-bit. FlowObjective adds per-flow
+                 goals: priority tiers (gold/silver/bronze weights),
+                 deadlines, and rate floors/caps the contention model
+                 enforces — defaults are the objective-free path bit-for-bit
+  utility.py     U = sum_i t_i / k^{n_i}; R_max; k = 1.02; flow_utility +
+                 smooth deadline-miss penalty (the objective layer)
   exploration.py random-threads logging phase -> B_i, TPT_i, b, n_i*, R_max
   networks.py    residual actor/critic exactly as §IV-D (widths follow
                  ObservationSpec.dim) + the recurrent GRU actor-critic
@@ -24,18 +28,22 @@
                  engines sharing a SharedLink
 """
 
-from repro.core.utility import utility, stage_utility, r_max, K_DEFAULT
+from repro.core.utility import (utility, stage_utility, r_max, K_DEFAULT,
+                                flow_utility, needed_rate, deadline_penalty)
 from repro.core.schedule import (ScheduleTable, make_table, constant_table,
                                  schedule_at, stack_tables, peak_bw,
                                  bottleneck_trace)
 from repro.core.simulator import (SimParams, SimEnv, make_env_params,
                                   ObservationSpec, HistorySpec, DEFAULT_OBS,
-                                  CONTEXT_OBS, FLEET_OBS, history_init,
-                                  history_push, history_flatten)
+                                  CONTEXT_OBS, FLEET_OBS, OBJECTIVE_OBS,
+                                  history_init, history_push, history_flatten)
 from repro.core.fleet import (FleetState, FlowSchedule, make_flow_schedule,
                               always_on, stack_flow_schedules, active_at,
                               fleet_reset, fleet_step, fleet_observe,
-                              fleet_interval, fleet_achievable, jain_index)
+                              fleet_interval, fleet_achievable, jain_index,
+                              FlowObjective, make_flow_objective,
+                              default_objectives, stack_flow_objectives,
+                              objective_features, PRIORITY_TIERS)
 from repro.core.simref import EventSimulator
 from repro.core.networks import (policy_init, policy_apply, value_init,
                                  value_apply, rnn_policy_init,

@@ -29,7 +29,15 @@ per-flow frame (the same ``_FrameBuilder`` the single-flow controller
 uses), the cross-flow features (active fraction, aggregate utilization,
 my-share) are appended exactly as ``repro.core.fleet.fleet_observe``
 derives them, and ``FleetPolicy`` applies the policy to the whole
-(F, frame_dim) matrix at once (the networks broadcast over leading axes)."""
+(F, frame_dim) matrix at once (the networks broadcast over leading axes).
+
+Heterogeneous objectives transfer the same way: hand ``FleetController`` a
+``FlowObjective`` (in ENGINE units — bytes and wall seconds) and an
+objective-aware spec, and it appends the identical per-flow
+priority/slack/urgency block ``fleet_observe`` emits — literally the same
+``objective_features`` function, fed the controller's run clock and the
+engines' delivered-byte counters — so a policy trained against sim
+objectives steers live flows with deadlines unchanged."""
 
 from __future__ import annotations
 
@@ -39,6 +47,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks as nets
+from repro.core.fleet import (FlowObjective, objective_features,
+                              default_objectives)
 from repro.core.simulator import ObservationSpec, DEFAULT_OBS
 
 
@@ -254,11 +264,16 @@ class FleetController:
     def __init__(self, policy_params, *, n_flows, n_max=100, bw_ref=None,
                  deterministic=True, seed=0,
                  obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0,
-                 policy="mlp"):
+                 policy="mlp", objectives: FlowObjective = None):
         self.n_flows = n_flows
         self.n_max = n_max
         self.bw_ref = bw_ref
         self.obs_spec = obs_spec
+        self.interval = interval
+        # per-flow objectives in ENGINE units (deadline in seconds on the
+        # controller's run clock, demand in the engines' byte counters'
+        # units) — only consulted when the spec carries the objective dims
+        self.objectives = objectives
         self._builders = [
             _FrameBuilder(n_max=n_max, bw_ref=bw_ref, obs_spec=obs_spec,
                           interval=interval)
@@ -279,11 +294,14 @@ class FleetController:
         return self.bw_ref or max(max(b._bw_seen for b in self._builders),
                                   1e-9)
 
-    def frames(self, obs_list, active=None):
+    def frames(self, obs_list, active=None, t=0.0, delivered=None):
         """(F, frame_dim) matrix from the engines' observe() dicts.
         ``active``: optional (F,) 0/1 mask of flows currently transferring
         (default: all) — inactive flows are masked out of the aggregate and
-        share features, as in the sim."""
+        share features, as in the sim. When the spec carries the objective
+        dims, ``t`` (seconds on the run clock) and ``delivered`` ((F,)
+        bytes written per flow, default zeros) feed the same
+        ``objective_features`` block the sim emits."""
         if self.bw_ref is None:
             # ONE shared normalization reference across the whole fleet —
             # the sim divides every flow by the same schedule peak, so a
@@ -307,11 +325,22 @@ class FleetController:
                 net / max(agg, 1e-9),
             ], axis=-1)
             base = np.concatenate([base, rows], axis=-1)
+        if self.obs_spec.objectives:
+            obj = (self.objectives if self.objectives is not None
+                   else default_objectives(self.n_flows))
+            dlv = (np.zeros(self.n_flows) if delivered is None
+                   else np.asarray(delivered, float))
+            # literally the sim's feature block — ONE definition
+            rows = np.asarray(objective_features(
+                obj, float(t), jnp.asarray(dlv, jnp.float32),
+                bw_ref=self._fleet_bw(), duration=self.interval))
+            base = np.concatenate([base, rows], axis=-1)
         return base.astype(np.float32)
 
-    def step(self, obs_list, active=None):
+    def step(self, obs_list, active=None, t=0.0, delivered=None):
         """List of observe() dicts -> list of (n_r, n_n, n_w) tuples."""
-        acts = self.fleet_policy.act(self.frames(obs_list, active))
+        acts = self.fleet_policy.act(
+            self.frames(obs_list, active, t=t, delivered=delivered))
         return [tuple(int(x) for x in row) for row in acts]
 
     def run(self, engines, *, interval=1.0, max_steps=None, total_bytes=None,
@@ -333,8 +362,12 @@ class FleetController:
             obs = [e.observe() for e in engines]
             active = np.asarray([0.0 if settled(e) else 1.0
                                  for e in engines])
+            # the objective inputs: run-clock seconds + per-flow delivered
+            # bytes — the live twins of FleetState.t / .delivered
+            delivered = [e.bytes_written() for e in engines]
             for e, n in zip(engines,
-                            self.step(obs, active)):
+                            self.step(obs, active, t=time.time() - t0,
+                                      delivered=delivered)):
                 if not settled(e):
                     e.set_concurrency(n)
             time.sleep(interval)

@@ -36,6 +36,15 @@ and the per-step reward is shared across the fleet: aggregate utility +
 flows join/leave mid-episode via ``flows=``/``resample_flows=`` (batched
 ``FlowSchedule``, the arrival twin of ``tables=``/``resample=``).
 ``n_flows=1`` is the single-flow trainer, bit-for-bit.
+
+Heterogeneous objectives (``objectives=``/``resample_objectives=``, batched
+``FlowObjective``): each flow carries a priority weight, optional deadline,
+and optional rate floor/cap — the reward becomes Σ weight_f·utility_f −
+``cfg.deadline_coef``·Σ weight_f·miss_penalty_f + ``cfg.fairness_coef``·
+weighted-Jain, and ``ObservationSpec(objectives=True)`` exposes each flow's
+priority/slack/urgency so ONE shared policy learns to starve bronze flows
+to save a gold deadline. ``objectives=None`` is the objective-free fleet,
+bit-for-bit.
 """
 
 from __future__ import annotations
@@ -98,7 +107,14 @@ class PPOConfig:
     fairness_coef: float = 0.0   # weight of the Jain's-fairness reward term
     # (fleet only): reward = sum_f utility_f + fairness_coef * Jain(active
     # flows' goodput) — pushes the shared policy toward an even split of the
-    # bottleneck instead of starving late arrivals.
+    # bottleneck instead of starving late arrivals. With per-flow
+    # objectives the Jain term is priority-weighted (goodput_f / weight_f).
+    deadline_coef: float = 1.0   # weight of the smooth deadline-miss
+    # penalty (fleet only, traced): how hard the shared policy is punished
+    # for letting a deadline flow's goodput fall below the rate it still
+    # needs. Irrelevant without objectives — the penalty is masked to
+    # exactly 0.0 for flows with no finite deadline+demand, which keeps the
+    # objective-free path bit-identical.
     param_selection: str = "best_episode"  # | "batch_mean": under domain
     # randomization a single episode's reward mostly measures how lucky the
     # sampled scenario was; the mean over the whole randomized batch is a
@@ -206,9 +222,9 @@ def _rollout(policy_params, env_params, table, key, *, M, substeps, spec,
     return traj  # obs (M,D), act (M,3), rew (M,), logp (M,)
 
 
-def _rollout_fleet(policy_params, env_params, table, flows, key, *, M,
-                   substeps, spec, backend, randomize_t0, policy,
-                   n_flows, fairness_coef):
+def _rollout_fleet(policy_params, env_params, table, flows, objectives, key,
+                   *, M, substeps, spec, backend, randomize_t0, policy,
+                   n_flows, fairness_coef, deadline_coef):
     """One fleet episode: F flows contend for the scheduled capacity, ONE
     shared policy maps each flow's observation row to that flow's action
     (the networks broadcast over the F axis), and every step's reward is
@@ -228,9 +244,9 @@ def _rollout_fleet(policy_params, env_params, table, flows, key, *, M,
     fspec = spec._replace(history=1)
     state = fleet_reset(env_params, k_reset, n_flows, t0, flows=flows,
                         table=table, substeps=substeps, spec=fspec,
-                        backend=backend)
+                        backend=backend, objectives=objectives)
     obs0 = fleet_observe(env_params, state, flows=flows, table=table,
-                         spec=fspec)
+                         spec=fspec, objectives=objectives)
     hist0 = jax.vmap(lambda f: history_init(spec, f))(obs0)  # (F, K, D)
     recurrent = policy == "gru"
 
@@ -248,7 +264,8 @@ def _rollout_fleet(policy_params, env_params, table, flows, key, *, M,
         state, obs_next, reward = fleet_step(
             env_params, state, action, flows=flows, table=table,
             substeps=substeps, spec=fspec, backend=backend,
-            fairness_coef=fairness_coef)
+            fairness_coef=fairness_coef, objectives=objectives,
+            deadline_coef=deadline_coef)
         hist = jax.vmap(history_push)(hist, obs_next)
         out = (state, hist, h) if recurrent else (state, hist)
         return out, (obs, action, reward, logp)
@@ -328,19 +345,21 @@ def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0):
     fleet = cfg.n_flows > 1
     loss_fn = _loss_recurrent if recurrent else _loss
 
-    def episode(train_state, tables, flows, key):
+    def episode(train_state, tables, flows, objectives, key):
         params, opt = train_state["params"], train_state["opt"]
         k_roll, _ = jax.random.split(key)
         roll_keys = jax.random.split(k_roll, cfg.n_envs)
         if fleet:
             obs, act, rew, logp = jax.vmap(
-                lambda tab, fl, k: _rollout_fleet(
-                    params["policy"], env_params, tab, fl, k,
+                lambda tab, fl, ob, k: _rollout_fleet(
+                    params["policy"], env_params, tab, fl, ob, k,
                     M=cfg.max_steps, substeps=cfg.substeps, spec=spec,
                     backend=cfg.backend, randomize_t0=randomize_t0,
                     policy=cfg.policy, n_flows=cfg.n_flows,
-                    fairness_coef=cfg.fairness_coef)
-            )(tables, flows, roll_keys)  # (E, M, F, ...) / rew (E, M)
+                    fairness_coef=cfg.fairness_coef,
+                    deadline_coef=cfg.deadline_coef)
+            )(tables, flows, objectives, roll_keys)
+            # (E, M, F, ...) / rew (E, M)
         else:
             obs, act, rew, logp = jax.vmap(
                 lambda tab, k: _rollout(params["policy"], env_params, tab, k,
@@ -396,7 +415,8 @@ def _broadcast_table(table, n_envs):
 
 
 def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
-              resample=None, flows=None, resample_flows=None, r_max=None,
+              resample=None, flows=None, resample_flows=None,
+              objectives=None, resample_objectives=None, r_max=None,
               key=None):
     """Algorithm 2, schedule-native. Returns TrainResult with the BEST (not
     last) params.
@@ -413,7 +433,13 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
     batched FlowSchedule (leading axis cfg.n_envs) of per-flow activity
     windows, and the per-round redraw over arrival families
     (repro.scenarios.sample_fleet_batch). None = every flow active the whole
-    episode."""
+    episode.
+    ``objectives`` / ``resample_objectives``: per-flow objectives (batched
+    FlowObjective, leading axis cfg.n_envs) and their per-round redraw —
+    priority tiers, deadlines, rate floors/caps
+    (repro.scenarios.sample_fleet_batch(objective_mix=...)). None = the
+    default objective for every flow (the objective-free reward,
+    bit-for-bit)."""
     cfg = cfg or PPOConfig()
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
@@ -425,6 +451,9 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
             cfg.n_envs)
     if cfg.n_flows > 1 and flows is None and resample_flows is None:
         flows = _broadcast_table(always_on(cfg.n_flows), cfg.n_envs)
+    # objectives=None stays None (an empty pytree vmaps fine): the
+    # objective-blind fleet keeps the exact PR 4 trace instead of a
+    # broadcast default — fleet_step folds the defaults in-graph
     episode_fn = _make_episode_fn(env_params, cfg, randomize_t0=scheduled)
 
     best_r = -jnp.inf
@@ -443,10 +472,13 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
             tables = resample(rnd)
         if resample_flows is not None and (flows is None or rnd > 0):
             flows = resample_flows(rnd)
+        if resample_objectives is not None and (objectives is None
+                                                or rnd > 0):
+            objectives = resample_objectives(rnd)
         rnd += 1
         key, k = jax.random.split(key)
         train_state, ep_rewards, loss = episode_fn(train_state, tables,
-                                                   flows, k)
+                                                   flows, objectives, k)
         ep_rewards = jax.device_get(ep_rewards)
         if by_batch_mean:
             batch_mean = float(ep_rewards.mean())

@@ -78,6 +78,8 @@ def make_env_params(*, tpt, bw, cap, n_max=100, duration=1.0, k=K_DEFAULT):
 OBS_DIM = 8       # the paper's base observation (§IV-D-1)
 CONTEXT_DIM = 5   # schedule context: 3 throughput deltas + 2 drain rates
 FLEET_DIM = 3     # cross-flow: active fraction, aggregate util, my share
+OBJ_DIM = 3       # per-flow objective: priority weight, deadline slack,
+                  # needed-rate urgency (repro.core.fleet.FlowObjective)
 ACT_DIM = 3
 
 
@@ -114,16 +116,27 @@ class ObservationSpec(NamedTuple):
     it") instead of each flow seeing only its own pipe. Single-flow
     ``observe`` never emits them; ``fleet_observe`` (sim) and
     ``FleetController`` (live) both do, identically.
+
+    objectives=True: 3 extra PER-FLOW OBJECTIVE dims (FlowObjective) — the
+    flow's normalized priority weight, its deadline slack (tanh of the time
+    remaining; saturates at 1.0 for flows without a deadline), and its
+    needed-rate urgency (the rate it must sustain to finish its demand on
+    time, over the schedule peak). They are what lets ONE shared policy
+    treat a gold flow racing a deadline differently from a patient bronze
+    flow. ``fleet_observe`` (sim) and ``FleetController`` (live) emit them
+    identically; single-flow ``observe`` never does.
     """
 
     context: bool = False
     history: int = 1
     fleet: bool = False
+    objectives: bool = False
 
     @property
     def frame_dim(self) -> int:
         return (OBS_DIM + (CONTEXT_DIM if self.context else 0)
-                + (FLEET_DIM if self.fleet else 0))
+                + (FLEET_DIM if self.fleet else 0)
+                + (OBJ_DIM if self.objectives else 0))
 
     @property
     def dim(self) -> int:
@@ -139,6 +152,7 @@ def HistorySpec(history: int = 4, *, context: bool = False) -> ObservationSpec:
 DEFAULT_OBS = ObservationSpec()
 CONTEXT_OBS = ObservationSpec(context=True)
 FLEET_OBS = ObservationSpec(context=True, fleet=True)
+OBJECTIVE_OBS = ObservationSpec(context=True, fleet=True, objectives=True)
 
 
 def history_init(spec: ObservationSpec, frame):

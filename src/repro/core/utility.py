@@ -1,14 +1,27 @@
-"""The paper's utility function (§IV-B):
+"""The paper's utility function (§IV-B) — plus the per-flow OBJECTIVE layer.
 
     U(n, t) = U_read + U_network + U_write,   U_i = t_i / k^{n_i}
 
 Higher throughput raises utility; thread count is penalized exponentially so
 a global maximum exists. k balances resource usage vs throughput; the paper's
 sweep over 1-25 Gbps links found k = 1.02 and fixes it for all results.
+
+Heterogeneous fleets extend this with per-flow objectives
+(``repro.core.fleet.FlowObjective``): each flow's utility is scaled by its
+priority WEIGHT (gold/silver/bronze tiers), and flows carrying a deadline
+pay a SMOOTH deadline-miss penalty — a softplus hinge on how far the flow's
+goodput falls below the rate it still needs to finish its demand on time.
+The hinge is smooth in both rate and time (no reward cliff at the deadline
+instant), so PPO gets a usable gradient signal long before the miss is
+irrevocable. With the default objective (weight = 1, no deadline) both
+terms are bit-exact no-ops: ``1.0 * u == u`` and the penalty is masked to
+``0.0`` — which is what keeps the objective-free fleet path pinned
+bit-identical to the PR 4 goldens.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 K_DEFAULT = 1.02
@@ -31,3 +44,45 @@ def r_max(bottleneck, n_star, *, k=K_DEFAULT):
     R_max = b * (k^-n_r* + k^-n_n* + k^-n_w*)."""
     n_star = jnp.asarray(n_star, dtype=jnp.float32)
     return float(bottleneck * jnp.sum(jnp.power(k, -n_star)))
+
+
+# ---------------------------------------------------------------------------
+# Per-flow objectives: priority-weighted utility + smooth deadline penalty
+# ---------------------------------------------------------------------------
+
+def needed_rate(demand, delivered, deadline, t, *, min_horizon=1.0):
+    """Rate a flow still NEEDS to finish ``demand`` by ``deadline``:
+    (demand - delivered) / (deadline - t), with the time window clamped to
+    ``min_horizon`` (you can never need faster than "finish within one
+    control step", and a passed deadline must not divide by ~0). Flows
+    without a finite deadline AND demand need exactly 0.0 — the mask keeps
+    inf/inf out of the value path."""
+    demand = jnp.asarray(demand, jnp.float32)
+    deadline = jnp.asarray(deadline, jnp.float32)
+    remaining = jnp.maximum(demand - delivered, 0.0)
+    time_left = jnp.maximum(deadline - t, min_horizon)
+    finite = jnp.isfinite(deadline) & jnp.isfinite(demand)
+    return jnp.where(finite, jnp.where(finite, remaining, 0.0) / time_left,
+                     0.0)
+
+
+def deadline_penalty(goodput, needed, *, scale=1.0, sharp=8.0):
+    """Smooth deadline-miss hinge: ~0 while goodput comfortably exceeds the
+    rate still needed to finish on time, ramping toward linear-in-deficit
+    once the flow falls behind — ``scale * softplus(sharp * deficit/scale)
+    / sharp`` (softplus, not relu: the gradient turns on BEFORE the flow is
+    actually behind, which is what lets PPO steer away from the cliff).
+    ``scale`` is the rate normalization (the schedule's peak bandwidth);
+    ``sharp`` sets how quickly the hinge saturates to linear."""
+    x = (needed - goodput) / scale
+    return scale * jax.nn.softplus(sharp * x) / sharp
+
+
+def flow_utility(throughputs, threads, *, weight=None, k=K_DEFAULT):
+    """(F,) per-flow paper utility, optionally priority-weighted. With
+    ``weight=None`` (or all-ones) this is exactly ``utility`` per flow —
+    ``1.0 * u`` is bit-exact, the objective-free pin relies on it."""
+    u = utility(throughputs, threads, k=k)
+    if weight is None:
+        return u
+    return jnp.asarray(weight, jnp.float32) * u

@@ -8,7 +8,8 @@ conditions, driven from ONE definition into all three layers —
                 (always_on, staggered_start, poisson_arrivals, flash_crowd)
                 that populate a multi-flow fleet over time
   spec.py       ScenarioSpec (JSON scenario files) + domain-randomized
-                batch sampling (conditions and fleet arrivals)
+                batch sampling (conditions, fleet arrivals, and per-flow
+                objectives: priority tiers / deadlines / rate floors)
   driver.py     ScenarioDriver: replay against the live TransferEngine
                 (or a SharedLink — anything with retunable ``throttles``)
   evaluate.py   scoring harness vs static / exploration-only baselines,
@@ -26,7 +27,7 @@ from repro.scenarios.schedule import (ScheduleTable, make_table,
 from repro.scenarios.families import FAMILIES, ARRIVAL_FAMILIES
 from repro.scenarios.spec import (ScenarioSpec, default_specs,
                                   sample_scenario_batch, arrival_schedule,
-                                  sample_fleet_batch)
+                                  sample_fleet_batch, sample_objectives)
 from repro.scenarios.driver import ScenarioDriver
 from repro.scenarios.evaluate import (StaticController, exploration_baseline,
                                       static_baseline, run_in_dynamic_sim,

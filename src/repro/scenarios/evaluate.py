@@ -37,8 +37,9 @@ import jax.numpy as jnp
 
 from repro.core import GlobusController, explore
 from repro.core.controller import AutoMDTController, FleetPolicy
-from repro.core.fleet import (FlowSchedule, jain_index, fleet_reset,
-                              fleet_step, fleet_observe, fleet_achievable)
+from repro.core.fleet import (FlowSchedule, FlowObjective, jain_index,
+                              fleet_reset, fleet_step, fleet_observe,
+                              fleet_achievable)
 from repro.core.simulator import (SimParams, make_env_params, env_reset,
                                   env_step, SimEnv)
 from repro.core.utility import utility as utility_fn, K_DEFAULT
@@ -166,11 +167,16 @@ class FleetEvalResult:
     arrival: str
     controller: str
     utilization: float   # total delivered / integrated achievable bottleneck
-    jain: float          # time-mean Jain index over contended steps
+    jain: float          # time-mean (weighted) Jain index over contended steps
     delivered: float     # Gbit, summed over flows
     mean_active: float   # mean number of active flows per step
     goodput: np.ndarray = field(repr=False)   # (steps, F) per-flow write tps
     threads: np.ndarray = field(repr=False)   # (steps, F, 3)
+    # objective scoring (all trivial when no flow carries an objective):
+    deadline_hits: int = 0        # deadline flows whose demand landed on time
+    deadline_total: int = 0       # flows carrying a finite deadline+demand
+    deadline_hit_rate: float = 1.0   # hits/total (1.0 when no deadlines)
+    weighted_utilization: float = 0.0  # Σ w_f·delivered_f / (mean_w · achievable)
 
 
 def _flow_obs_dict(params, st, f):
@@ -183,23 +189,38 @@ def _flow_obs_dict(params, st, f):
 
 def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
                              steps=None, seed=7, label=None,
-                             arrival="always_on"):
+                             arrival="always_on",
+                             objectives: FlowObjective = None,
+                             apply_floors=True):
     """F flows through one scenario under one arrival schedule. ``actor``
     is a shared ``FleetPolicy`` (acts on the fleet observation matrix) or a
     list of F independent per-flow controllers (``.step(obs_dict)`` or
     ``.update(throughputs)``, each seeing only its own flow). Utilization is
     total delivered over the integrated fleet-achievable bottleneck; the
     Jain index averages over steps where ≥ 2 flows are active (there is
-    nothing to share out otherwise)."""
+    nothing to share out otherwise).
+
+    ``objectives``: optional per-flow FlowObjective. Scoring then also
+    reports deadline hits (demand delivered by deadline), the hit rate, the
+    priority-WEIGHTED utilization, and a priority-weighted Jain index. With
+    ``apply_floors`` (default) the contention model enforces the
+    objectives' rate floors/caps — the deployed objective-aware system;
+    ``apply_floors=False`` scores an objective-BLIND system against the
+    same objectives (the world never heard of them, only the scorer did)."""
     table = spec.table()
     n_flows = flows.n_flows
     duration = float(params.duration)
     steps = steps or int(round(spec.horizon / duration))
     t_start = np.asarray(flows.t_start)
     t_end = np.asarray(flows.t_end)
+    world_obj = objectives if apply_floors else None
+    weights = (np.asarray(objectives.weight) if objectives is not None
+               else np.ones(n_flows))
+    jain_w = (jnp.asarray(objectives.weight) if objectives is not None
+              else None)
 
     st = fleet_reset(params, jax.random.PRNGKey(seed), n_flows, flows=flows,
-                     table=table)
+                     table=table, objectives=world_obj)
     shared = isinstance(actor, FleetPolicy)
     if shared:
         actor.reset()
@@ -212,7 +233,8 @@ def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
     for _ in range(steps):
         if shared:
             obs = fleet_observe(params, st, flows=flows, table=table,
-                                spec=actor.obs_spec._replace(history=1))
+                                spec=actor.obs_spec._replace(history=1),
+                                objectives=objectives)
             acts = actor.act(np.asarray(obs))
         else:
             acts = []
@@ -224,7 +246,8 @@ def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
                     acts.append(ctrl.update(o["throughputs"]))
             acts = np.asarray(acts, float)
         st, _, _ = fleet_step(params, st, jnp.asarray(acts, jnp.float32),
-                              flows=flows, table=table)
+                              flows=flows, table=table,
+                              objectives=world_obj)
         t_mid = float(st.t) - 0.5 * duration
         active = ((t_mid >= t_start) & (t_mid < t_end)).astype(float)
         g = np.asarray(st.throughputs[:, 2])
@@ -233,10 +256,14 @@ def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
         achs.append(float(fleet_achievable(params, table, flows, t_mid)))
         n_active_hist.append(active.sum())
         if active.sum() >= 2:
-            jains.append(float(jain_index(g, active)))
+            jains.append(float(jain_index(g, active, weights=jain_w)))
     goodput = np.asarray(goodput)
     delivered = float(goodput.sum() * duration)
     achievable = float(np.sum(achs) * duration)
+    per_flow = goodput.sum(axis=0) * duration                   # (F,) Gbit
+    hits, total = _deadline_hits(goodput, objectives, duration)
+    w_util = float((weights * per_flow).sum()
+                   / max(weights.mean() * achievable, 1e-9))
     return FleetEvalResult(
         scenario=spec.name,
         arrival=arrival,
@@ -248,7 +275,40 @@ def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
         mean_active=float(np.mean(n_active_hist)),
         goodput=goodput,
         threads=np.asarray(threads_hist),
+        deadline_hits=hits,
+        deadline_total=total,
+        deadline_hit_rate=hits / total if total else 1.0,
+        weighted_utilization=min(w_util, 1.0),
     )
+
+
+def _deadline_hits(goodput, objectives: FlowObjective, duration):
+    """(hits, total) over the flows carrying a finite deadline+demand: a hit
+    is the flow's cumulative goodput reaching its demand by the last step
+    that ENDS on or before the deadline. Recorded row ``j`` covers sim time
+    ``[(j+1)*duration, (j+2)*duration)`` — the reset warm-up advances the
+    clock one interval before the first scored step — so the rows counted
+    toward deadline ``D`` are the first ``floor(D/duration) - 1``, matching
+    the clock ``fleet_step``'s miss penalty is scored on (no grace step)."""
+    if objectives is None:
+        return 0, 0
+    deadline = np.asarray(objectives.deadline)
+    demand = np.asarray(objectives.demand)
+    cum = np.cumsum(goodput, axis=0) * duration   # (steps, F)
+    hits = total = 0
+    for f in range(goodput.shape[1]):
+        if not (np.isfinite(deadline[f]) and np.isfinite(demand[f])):
+            continue
+        k = int(deadline[f] / duration) - 1
+        if k > cum.shape[0]:
+            # the deadline lies beyond the evaluated window: the flow had
+            # time left, so neither a hit nor a miss can be scored — leave
+            # it out of the total instead of recording a spurious miss
+            continue
+        total += 1
+        if k > 0 and cum[k - 1, f] >= demand[f] - 1e-6:
+            hits += 1
+    return hits, total
 
 
 def evaluate_scenario(spec, agent_controller, *, params=None, steps=None,

@@ -203,6 +203,8 @@ def poisson_arrivals(n_flows, horizon, seed=0, *, rate=None, hold_frac=None):
     flows/second (default: the fleet arrives over ~the first 60% of the
     horizon). Flow 0 anchors the run at t=0 so the bottleneck always has at
     least one customer; late stragglers are clipped into the horizon."""
+    if n_flows == 0:  # an empty fleet is a valid (if quiet) arrival plan
+        return (np.zeros(0, np.float32), np.zeros(0, np.float32))
     rng = np.random.default_rng(seed)
     rate = rate if rate is not None else n_flows / max(0.6 * horizon, 1e-9)
     gaps = rng.exponential(1.0 / rate, size=n_flows)
@@ -221,8 +223,9 @@ def flash_crowd(n_flows, horizon, seed=0, *, at_frac=0.4, leave_frac=0.85):
     the shared-endpoint rush hour the Globus service reports."""
     t_start = np.full(n_flows, at_frac * horizon, np.float32)
     t_end = np.full(n_flows, leave_frac * horizon, np.float32)
-    t_start[0] = 0.0
-    t_end[0] = np.inf
+    if n_flows:  # the anchor flow only exists in a non-empty fleet
+        t_start[0] = 0.0
+        t_end[0] = np.inf
     return t_start, t_end
 
 

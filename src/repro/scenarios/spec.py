@@ -22,7 +22,9 @@ from dataclasses import dataclass, field, asdict
 
 import numpy as np
 
-from repro.core.fleet import make_flow_schedule, stack_flow_schedules
+from repro.core.fleet import (make_flow_schedule, stack_flow_schedules,
+                              make_flow_objective, default_objectives,
+                              stack_flow_objectives, PRIORITY_TIERS)
 from repro.scenarios.families import FAMILIES, ARRIVAL_FAMILIES
 from repro.scenarios.schedule import ScheduleTable, make_table, stack_tables
 
@@ -109,16 +111,57 @@ def arrival_schedule(family, n_flows, *, horizon=60.0, seed=0, **params):
     return make_flow_schedule(t_start, t_end)
 
 
+def sample_objectives(n_flows, *, seed=0, horizon=60.0, base_bw=DEFAULT_BW,
+                      tier_probs=(0.25, 0.25, 0.5), deadline_prob=0.5,
+                      deadline_frac=(0.4, 0.9), demand_frac=(0.25, 0.6),
+                      floor_deadline_frac=0.0):
+    """One random heterogeneous objective set — the objective twin of
+    ``arrival_schedule``. Tiers are drawn gold/silver/bronze with
+    ``tier_probs``; each flow independently carries a deadline with
+    probability ``deadline_prob``: the deadline lands uniformly in
+    ``deadline_frac`` of the horizon and the demand in ``demand_frac`` of
+    what the link could deliver by then (sized so a deadline flow must hold
+    MORE than an even share of a busy link — the regime where priorities
+    matter). ``floor_deadline_frac`` > 0 additionally reserves that
+    fraction of the link as a rate floor for every deadline flow (the
+    operator-provisioned guarantee the live SharedLink enforces with
+    per-engine token buckets). Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    tiers = list(PRIORITY_TIERS)
+    names = [tiers[i] for i in rng.choice(len(tiers), size=n_flows,
+                                          p=list(tier_probs))]
+    link = float(min(base_bw))
+    deadline = np.full(n_flows, np.inf, np.float32)
+    demand = np.full(n_flows, np.inf, np.float32)
+    floor = np.zeros(n_flows, np.float32)
+    for f in range(n_flows):
+        if rng.random() >= deadline_prob:
+            continue
+        d = rng.uniform(*deadline_frac) * horizon
+        deadline[f] = d
+        demand[f] = rng.uniform(*demand_frac) * link * d
+        floor[f] = floor_deadline_frac * link
+    return make_flow_objective(tiers=names, deadline=deadline,
+                               demand=demand, rate_floor=floor)
+
+
 def sample_fleet_batch(n, n_flows, *, arrival_families=None,
                        families=("static",), seed=0, horizon=60.0,
                        bin_seconds=1.0, base_tpt=DEFAULT_TPT,
-                       base_bw=DEFAULT_BW, jitter=0.25):
+                       base_bw=DEFAULT_BW, jitter=0.25, objective_mix=None):
     """Domain randomization for fleet training: ``n`` (condition table,
-    arrival schedule) pairs — conditions drawn like ``sample_scenario_batch``
-    (default: static, so contention is the thing being randomized), arrivals
-    drawn over ``arrival_families`` with randomized seeds. Both batched
-    outputs have a leading env axis and a single shape for any n, so the
-    training step never retraces. Deterministic in ``seed``."""
+    arrival schedule, objective set) triples — conditions drawn like
+    ``sample_scenario_batch`` (default: static, so contention is the thing
+    being randomized), arrivals drawn over ``arrival_families`` with
+    randomized seeds, objectives drawn by ``sample_objectives`` when
+    ``objective_mix`` is given (a kwargs dict for it, or ``True`` for its
+    defaults; None = the default objective for every flow — the
+    objective-blind PR 4 distribution, with tables and flows byte-identical
+    for any given seed). All batched outputs have a leading env axis and a
+    single shape for any n, so the training step never retraces.
+    Deterministic in ``seed``.
+
+    Returns ``(specs, tables, flows, objectives)``."""
     specs, tables = sample_scenario_batch(
         n, families=families, seed=seed, horizon=horizon,
         bin_seconds=bin_seconds, base_tpt=base_tpt, base_bw=base_bw,
@@ -129,7 +172,18 @@ def sample_fleet_batch(n, n_flows, *, arrival_families=None,
                               n_flows, horizon=horizon,
                               seed=int(rng.integers(0, 2 ** 31 - 1)))
              for _ in range(n)]
-    return specs, tables, stack_flow_schedules(flows)
+    if objective_mix is None:
+        objectives = [default_objectives(n_flows) for _ in range(n)]
+    else:
+        kw = {} if objective_mix is True else dict(objective_mix)
+        # a third independent stream: adding objectives must not perturb
+        # the tables/flows any objective-blind consumer already pinned
+        orng = np.random.default_rng(seed + 0x0BB1)
+        objectives = [sample_objectives(
+            n_flows, seed=int(orng.integers(0, 2 ** 31 - 1)),
+            horizon=horizon, base_bw=base_bw, **kw) for _ in range(n)]
+    return specs, tables, stack_flow_schedules(flows), \
+        stack_flow_objectives(objectives)
 
 
 def sample_scenario_batch(n, *, families=None, seed=0, horizon=60.0,

@@ -6,5 +6,6 @@ from repro.transfer.engine import (
     ChecksumSink,
     FileSink,
     StageThrottle,
+    FlowGate,
     SharedLink,
 )

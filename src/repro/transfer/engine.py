@@ -76,6 +76,42 @@ class StageThrottle:
         with self._lock:
             return self.aggregate_bps, self.per_thread_bps
 
+    def _try_withdraw(self, nbytes):
+        """The ONE definition of the token-bucket accounting (refill, burst
+        clamp, debt rule) shared by ``acquire`` and ``try_acquire``.
+        Returns ``(granted, wait_s)``: granted True means the tokens were
+        withdrawn; wait_s is how long a blocked caller should wait before
+        retrying (None when the bucket is in an outage — wait for a retune).
+
+        A chunk larger than one second of aggregate tokens (nbytes > cap)
+        can never accumulate enough: it runs on DEBT — the bucket only needs
+        to be full, the withdrawal may drive it negative, and subsequent
+        withdrawals wait the deficit out. Average rate stays at the cap; the
+        oversized chunk passes within ~1 s instead of parking forever."""
+        with self._lock:
+            agg = self.aggregate_bps
+            per_thread = self.per_thread_bps
+            if agg == 0 or per_thread == 0:  # 0, not None: outage bin
+                return False, None
+            if agg is None:
+                return True, None
+            now = time.monotonic()
+            cap = float(agg)  # burst = 1 second
+            self._tokens = min(self._tokens + (now - self._t) * agg, cap)
+            self._t = now
+            need_tokens = min(float(nbytes), cap)
+            if self._tokens >= need_tokens:
+                self._tokens -= nbytes  # may go negative: debt
+                return True, None
+            return False, (need_tokens - self._tokens) / agg
+
+    def _per_thread_sleep(self, nbytes):
+        with self._lock:
+            per_thread = self.per_thread_bps
+        if per_thread:
+            return nbytes / per_thread
+        return 0.0
+
     def acquire(self, nbytes, should_abort=None):
         """Blocks to enforce the aggregate cap. Returns per-thread sleep that
         the caller must additionally honor for its own chunk, or None when
@@ -83,41 +119,94 @@ class StageThrottle:
         and token waits would otherwise never observe it). Rates are re-read
         every iteration so a live retune is honored mid-wait — a zero rate
         (outage) parks here instead of sleeping nbytes/0 forever in the
-        caller.
-
-        A chunk larger than one second of aggregate tokens (nbytes > cap)
-        can never accumulate enough: it runs on DEBT — the bucket only needs
-        to be full, the withdrawal may drive it negative, and subsequent
-        acquires wait the deficit out. Average rate stays at the cap; the
-        oversized chunk passes within ~1 s instead of parking forever."""
+        caller."""
         while True:
             if should_abort is not None and should_abort():
                 return None
-            with self._lock:
-                agg = self.aggregate_bps
-                per_thread = self.per_thread_bps
-                blocked = agg == 0 or per_thread == 0  # 0, not None: outage
-                if not blocked:
-                    if agg is None:
-                        break
-                    now = time.monotonic()
-                    cap = float(agg)  # burst = 1 second
-                    self._tokens = min(self._tokens + (now - self._t) * agg,
-                                       cap)
-                    self._t = now
-                    need_tokens = min(float(nbytes), cap)
-                    if self._tokens >= need_tokens:
-                        self._tokens -= nbytes  # may go negative: debt
-                        break
-                    need = (need_tokens - self._tokens) / agg
-                else:
-                    need = 0.05  # wait for a retune to lift the outage
-            time.sleep(min(max(need, 1e-4), 0.05))
-        with self._lock:
-            per_thread = self.per_thread_bps
-        if per_thread:
-            return nbytes / per_thread
-        return 0.0
+            granted, wait = self._try_withdraw(nbytes)
+            if granted:
+                break
+            if wait is None:
+                wait = 0.05  # outage: wait for a retune to lift it
+            time.sleep(min(max(wait, 1e-4), 0.05))
+        return self._per_thread_sleep(nbytes)
+
+    def try_acquire(self, nbytes):
+        """Non-blocking acquire: withdraw the tokens if the bucket can grant
+        them RIGHT NOW (same accounting as ``acquire``, including the
+        oversized-chunk debt rule), else return None without waiting.
+        Returns the per-thread pacing sleep on success. Used by ``FlowGate``
+        to poll a reserved floor bucket and the shared pool side by side."""
+        granted, _ = self._try_withdraw(nbytes)
+        if not granted:
+            return None
+        return self._per_thread_sleep(nbytes)
+
+
+class FlowGate:
+    """One flow's view of a shared stage pool: the per-engine throttle that
+    makes a ``SharedLink`` honor a FlowObjective's rate floor and cap.
+
+    cap   a PRIVATE token bucket the flow must also clear — waiting here is
+          the flow's own problem and starves nobody (min of the two caps,
+          exactly like the simulator clamping demand to rate_cap).
+    floor a PRIVATE reserved bucket refilled at the floor rate that grants
+          tokens ahead of the shared pool: while the shared pool is drained
+          by competitors, the floored flow still advances at >= floor.
+          The reserve is additive — the link's true capacity is the shared
+          pool PLUS the attached floors (provision the pool net of floors
+          to keep the total exact; ``SharedLink.reserved_bps`` reports the
+          outstanding total). Grants from either bucket honor the SHARED
+          pool's per-thread pacing rate, matching how the sim applies
+          per-thread rates independently of the floor carve-out."""
+
+    def __init__(self, shared: StageThrottle, *, floor_bps=None,
+                 cap_bps=None):
+        self.shared = shared
+        self.floor = StageThrottle(floor_bps) if floor_bps else None
+        self.cap = StageThrottle(cap_bps) if cap_bps else None
+
+    def set_rates(self, **kw):
+        """Retunes the SHARED pool (floor/cap are per-flow constants)."""
+        self.shared.set_rates(**kw)
+
+    def rates(self):
+        return self.shared.rates()
+
+    def acquire(self, nbytes, should_abort=None):
+        sleep_cap = 0.0
+        if self.cap is not None:
+            sleep_cap = self.cap.acquire(nbytes, should_abort)
+            if sleep_cap is None:
+                return None
+        if self.floor is None:
+            sleep = self.shared.acquire(nbytes, should_abort)
+            if sleep is None:
+                return None
+            return max(sleep, sleep_cap)
+        while True:
+            if should_abort is not None and should_abort():
+                return None
+            agg, per_thread = self.shared.rates()
+            if agg == 0 or per_thread == 0:
+                # a replayed OUTAGE bin zeroes the shared pool; the sim
+                # scales floors inside the scheduled capacity, so zero
+                # capacity suspends the floor too — matching parity. (A
+                # partial brownout still leaves the provisioned floor
+                # whole; see the README live-twin caveats.)
+                time.sleep(0.05)
+                continue
+            granted, wait_f = self.floor._try_withdraw(nbytes)
+            if not granted:
+                granted, wait_s = self.shared._try_withdraw(nbytes)
+                if not granted:
+                    # sleep the shorter of the two buckets' computed
+                    # deficits instead of busy-polling at a fixed tick
+                    waits = [w for w in (wait_f, wait_s) if w is not None]
+                    time.sleep(min(max(min(waits, default=0.05), 1e-4),
+                                   0.05))
+                    continue
+            return max(self.shared._per_thread_sleep(nbytes), sleep_cap)
 
 
 class BoundedBuffer:
@@ -526,7 +615,15 @@ class SharedLink:
 
     A ScenarioDriver retunes a SharedLink directly (it only needs the
     ``throttles`` attribute), replaying time-varying conditions against the
-    whole fleet at once."""
+    whole fleet at once.
+
+    Heterogeneous objectives: ``attach(..., rate_floor=..., rate_cap=...)``
+    wraps the shared throttles in a per-engine ``FlowGate`` — the cap is a
+    private bucket the flow must also clear, the floor a private reserved
+    bucket that keeps the flow advancing at >= floor while competitors
+    drain the shared pool. Floors are ADDITIVE reserves: provision the
+    shared pool net of the floors you intend to grant (``reserved_bps``
+    reports the outstanding total per stage)."""
 
     def __init__(self, aggregate_bps=(None, None, None),
                  per_thread_bps=(None, None, None)):
@@ -534,12 +631,30 @@ class SharedLink:
             StageThrottle(a, p)
             for a, p in zip(aggregate_bps, per_thread_bps))
         self.engines = []
+        self.reserved_bps = [0.0, 0.0, 0.0]  # floors granted so far
 
-    def attach(self, source, sink, **engine_kw):
+    def attach(self, source, sink, *, rate_floor=None, rate_cap=None,
+               **engine_kw):
         """Create a TransferEngine whose three stages draw from this link's
         shared throttles. Per-engine knobs (buffers, n_max, concurrency,
-        metric_interval) pass through."""
-        eng = TransferEngine(source, sink, throttles=self.throttles,
+        metric_interval) pass through. ``rate_floor`` / ``rate_cap``:
+        optional per-flow guaranteed / maximum rates in bytes/s — a scalar
+        applies to all three stages, a 3-tuple sets them per stage (None
+        entries disable)."""
+        if rate_floor is None and rate_cap is None:
+            throttles = self.throttles
+        else:
+            def _per_stage(v):
+                if v is None or isinstance(v, (int, float)):
+                    return (v, v, v)
+                return tuple(v)
+            floors, caps = _per_stage(rate_floor), _per_stage(rate_cap)
+            throttles = tuple(
+                FlowGate(shared, floor_bps=f, cap_bps=c)
+                for shared, f, c in zip(self.throttles, floors, caps))
+            for stage, f in enumerate(floors):
+                self.reserved_bps[stage] += f or 0.0
+        eng = TransferEngine(source, sink, throttles=throttles,
                              **engine_kw)
         self.engines.append(eng)
         return eng

@@ -285,9 +285,12 @@ def test_staggered_start_clips_late_flows_into_horizon():
 
 def test_sample_fleet_batch_shapes_and_determinism():
     from repro.scenarios import sample_fleet_batch
-    specs, tables, flows = sample_fleet_batch(6, 4, seed=3, horizon=30.0)
+    specs, tables, flows, objs = sample_fleet_batch(6, 4, seed=3,
+                                                    horizon=30.0)
     assert tables.tpt.shape[0] == 6 and flows.t_start.shape == (6, 4)
-    _, t2, f2 = sample_fleet_batch(6, 4, seed=3, horizon=30.0)
+    assert objs.weight.shape == (6, 4)
+    assert np.array_equal(np.asarray(objs.weight), np.ones((6, 4)))
+    _, t2, f2, _ = sample_fleet_batch(6, 4, seed=3, horizon=30.0)
     assert np.array_equal(np.asarray(flows.t_start), np.asarray(f2.t_start))
     assert np.array_equal(np.asarray(tables.tpt), np.asarray(t2.tpt))
 
@@ -312,7 +315,7 @@ def test_fleet_training_smoke_all_policies(policy):
 def test_fleet_training_with_arrival_randomization():
     from repro.scenarios import sample_fleet_batch
     p = _params_base()
-    _, tables, flows = sample_fleet_batch(2, 3, seed=0, horizon=30.0)
+    _, tables, flows, _ = sample_fleet_batch(2, 3, seed=0, horizon=30.0)
     cfg = PPOConfig(max_episodes=4, n_envs=2, max_steps=4, seed=0, n_flows=3,
                     fairness_coef=0.5, obs_spec=FLEET_OBS)
     res = train_ppo(p, cfg, tables=tables, flows=flows)
@@ -403,7 +406,7 @@ def test_fleet_eval_shared_policy_beats_static_on_arrivals():
     from repro.scenarios import (ScenarioSpec, arrival_schedule,
                                  run_fleet_in_dynamic_sim, sample_fleet_batch)
     p = _params_base()
-    _, tables, flows_b = sample_fleet_batch(4, 3, seed=1, horizon=30.0)
+    _, tables, flows_b, _ = sample_fleet_batch(4, 3, seed=1, horizon=30.0)
     cfg = PPOConfig(max_episodes=24, n_envs=4, max_steps=8, seed=1,
                     n_flows=3, fairness_coef=0.5, obs_spec=FLEET_OBS,
                     action_scale=12.5, param_selection="batch_mean")

@@ -1,0 +1,241 @@
+"""Property-based fleet invariants (hypothesis): the contention model must
+CONSERVE capacity for any fleet/schedule/objective draw, inactive flows must
+deliver exactly nothing, the F=1 fleet must equal the single-flow env
+bit-for-bit across randomized parameters (not just the fixed goldens), the
+Jain index must live in (0, 1], and the shared policy must be equivariant
+under any permutation of the flows. These are the invariants the fleet
+goldens pin by example — here they are pinned for 200+ random draws each
+(the fleet invariant gate; auto-skips where hypothesis is absent)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")  # not baked into every CI image
+from hypothesis import given, settings, strategies as st
+
+from repro.core import networks as nets
+from repro.core.fleet import (FleetState, make_flow_schedule, always_on,
+                              make_flow_objective, active_at, fleet_reset,
+                              fleet_step, fleet_observe, fleet_interval,
+                              jain_index, _fleet_substep_rates)
+from repro.core.schedule import make_table
+from repro.core.simulator import (make_env_params, env_reset, env_step,
+                                  FLEET_OBS)
+
+# small, fixed shape pools keep the jitted paths to a handful of compiles
+# across all 200+ examples (values are traced, shapes are static)
+SUBSTEPS = 6
+rate_st = st.floats(0.02, 0.5)
+bw_st = st.floats(0.1, 2.0)
+n_flows_st = st.integers(1, 3)
+
+
+@st.composite
+def fleet_world(draw, n_flows=None):
+    """A random (params, table, flows, threads) fleet configuration with a
+    2-bin schedule and per-flow activity windows around the simulated
+    interval [0, 1)."""
+    F = n_flows if n_flows is not None else draw(n_flows_st)
+    params = make_env_params(
+        tpt=[draw(rate_st) for _ in range(3)],
+        bw=[draw(bw_st) for _ in range(3)],
+        cap=[draw(st.floats(0.5, 3.0))] * 2, n_max=50)
+    table = make_table(
+        np.asarray([[draw(rate_st) for _ in range(3)] for _ in range(2)],
+                   np.float32),
+        np.asarray([[draw(bw_st) for _ in range(3)] for _ in range(2)],
+                   np.float32), bin_seconds=0.5)
+    t_start = [draw(st.floats(0.0, 1.5)) for _ in range(F)]
+    t_end = [s + draw(st.floats(0.1, 2.0)) for s in t_start]
+    flows = make_flow_schedule(t_start, t_end)
+    threads = jnp.asarray(
+        [[draw(st.integers(1, 30)) for _ in range(3)] for _ in range(F)],
+        jnp.float32)
+    return params, table, flows, threads
+
+
+@st.composite
+def objectives_for(draw, n_flows):
+    """Random floors/caps/weights (possibly oversubscribed floors — the
+    model must scale them, never over-commit)."""
+    floors = [draw(st.floats(0.0, 1.5)) for _ in range(n_flows)]
+    caps = [draw(st.one_of(st.just(np.inf), st.floats(0.05, 1.5)))
+            for _ in range(n_flows)]
+    weights = [draw(st.sampled_from([1.0, 2.0, 4.0]))
+               for _ in range(n_flows)]
+    return make_flow_objective(weight=weights, rate_floor=floors,
+                               rate_cap=caps)
+
+
+# ---------------------------------------------------------------------------
+# Conservation: the fleet never outruns the scheduled capacity
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_substep_rates_conserve_scheduled_bandwidth(data):
+    """At every substep, the per-stage sum of per-flow rates is bounded by
+    that substep's scheduled aggregate bandwidth — for any fleet size,
+    schedule, activity pattern, and (floored/capped/oversubscribed)
+    objectives."""
+    params, table, flows, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    obj = data.draw(st.one_of(st.none(), objectives_for(F)))
+    rates = np.asarray(_fleet_substep_rates(
+        params, table, threads, flows, jnp.zeros(()), SUBSTEPS, obj))
+    assert rates.shape == (SUBSTEPS, F, 3)
+    assert (rates >= 0.0).all()
+    dt = float(params.duration) / SUBSTEPS
+    ts = dt * np.arange(SUBSTEPS)
+    idx = np.clip((ts / float(np.asarray(table.bin_seconds))).astype(int),
+                  0, table.bw.shape[0] - 1)
+    bw = np.asarray(table.bw)[idx]                      # (S, 3)
+    assert (rates.sum(axis=1) <= bw * (1 + 1e-5) + 1e-6).all(), \
+        (rates.sum(axis=1), bw)
+
+
+@given(data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_inactive_flows_deliver_exactly_zero(data):
+    """A flow whose window misses the simulated interval entirely moves not
+    one byte: zero throughput, zero buffer occupancy — exactly, not
+    approximately."""
+    params, table, _, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    # flow 0 active, the rest strictly after the interval [0, duration)
+    t_start = [0.0] + [float(params.duration) + 0.5] * (F - 1)
+    flows = make_flow_schedule(t_start, [np.inf] * F)
+    bufs, tps = fleet_interval(params, jnp.zeros((F, 2)), threads, 0.0,
+                               flows=flows, table=table, substeps=SUBSTEPS)
+    if F > 1:
+        assert np.asarray(tps[1:]).max() == 0.0
+        assert np.asarray(bufs[1:]).max() == 0.0
+    assert np.isfinite(np.asarray(tps)).all()
+
+
+# ---------------------------------------------------------------------------
+# F=1 fleet == single-flow env, bit-for-bit, across randomized params
+# ---------------------------------------------------------------------------
+
+@given(tpt=st.tuples(*[rate_st] * 3), bw=st.tuples(*[bw_st] * 3),
+       cap=st.floats(0.5, 3.0), seed=st.integers(0, 2 ** 16),
+       action=st.tuples(*[st.floats(1.0, 40.0)] * 3))
+@settings(max_examples=200, deadline=None)
+def test_f1_fleet_step_equals_env_step_randomized(tpt, bw, cap, seed,
+                                                  action):
+    """The PR 4 pin, universally quantified: for ANY static parameters,
+    reset key, and action, the F=1 fleet path reproduces the single-flow
+    env bit-for-bit (share = n/n = 1.0 exactly)."""
+    params = make_env_params(tpt=list(tpt), bw=list(bw), cap=[cap, cap],
+                             n_max=50)
+    key = jax.random.PRNGKey(seed)
+    st_env = env_reset(params, key)
+    st_fleet = fleet_reset(params, key, 1)
+    a = jnp.asarray(action, jnp.float32)
+    st_env2, obs, r = env_step(params, st_env, a)
+    st_fleet2, fobs, fr = fleet_step(params, st_fleet, a[None])
+    assert np.array_equal(np.asarray(st_env2.buffers),
+                          np.asarray(st_fleet2.buffers[0]))
+    assert np.array_equal(np.asarray(st_env2.throughputs),
+                          np.asarray(st_fleet2.throughputs[0]))
+    assert np.array_equal(np.asarray(obs), np.asarray(fobs[0]))
+    assert float(r) == float(fr)
+
+
+# ---------------------------------------------------------------------------
+# Jain's index stays in (0, 1]
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_jain_index_in_unit_interval(data):
+    """For any goodput vector, activity mask, and priority weights, the
+    (weighted) Jain index is finite and lives in (0, 1] — empty and
+    all-zero fleets score exactly 1.0."""
+    n = data.draw(st.integers(1, 6))
+    x = jnp.asarray(data.draw(
+        st.lists(st.floats(0.0, 5.0), min_size=n, max_size=n)), jnp.float32)
+    active = data.draw(st.one_of(st.none(), st.lists(
+        st.sampled_from([0.0, 1.0]), min_size=n, max_size=n)))
+    weights = data.draw(st.one_of(st.none(), st.lists(
+        st.sampled_from([1.0, 2.0, 4.0]), min_size=n, max_size=n)))
+    j = float(jain_index(
+        x, None if active is None else jnp.asarray(active, jnp.float32),
+        None if weights is None else jnp.asarray(weights, jnp.float32)))
+    assert np.isfinite(j)
+    assert 0.0 < j <= 1.0 + 1e-6, j
+    if float(jnp.asarray(x).sum()) == 0.0:
+        assert j == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Permutation equivariance of the shared policy
+# ---------------------------------------------------------------------------
+
+_POLICY = None
+
+
+def _policy():
+    global _POLICY
+    if _POLICY is None:
+        _POLICY = nets.policy_init(jax.random.PRNGKey(7),
+                                   obs_dim=FLEET_OBS.dim)
+    return _POLICY
+
+
+@given(data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_fleet_is_permutation_equivariant(data):
+    """Relabeling the flows relabels the outputs and changes nothing else:
+    observation rows, next-state rows, and the shared policy's action rows
+    permute with the fleet; the shared reward is invariant. (Float sums
+    reassociate under permutation, hence tolerance instead of atol=0.)"""
+    F = 3
+    params, table, flows, threads = data.draw(fleet_world(n_flows=F))
+    perm = data.draw(st.permutations(list(range(F))))
+    perm = np.asarray(perm)
+    buffers = jnp.asarray(
+        [[data.draw(st.floats(0.0, 0.4)) for _ in range(2)]
+         for _ in range(F)], jnp.float32)
+    tps0 = jnp.asarray(
+        [[data.draw(st.floats(0.0, 1.0)) for _ in range(3)]
+         for _ in range(F)], jnp.float32)
+    state = FleetState(buffers=buffers, threads=threads, throughputs=tps0,
+                       t=jnp.asarray(0.0, jnp.float32),
+                       prev_throughputs=tps0,
+                       delivered=jnp.zeros((F,), jnp.float32))
+    state_p = FleetState(buffers=buffers[perm], threads=threads[perm],
+                         throughputs=tps0[perm], t=state.t,
+                         prev_throughputs=tps0[perm],
+                         delivered=state.delivered[perm])
+    flows_p = make_flow_schedule(np.asarray(flows.t_start)[perm],
+                                 np.asarray(flows.t_end)[perm])
+
+    obs = np.asarray(fleet_observe(params, state, flows=flows, table=table,
+                                   spec=FLEET_OBS))
+    obs_p = np.asarray(fleet_observe(params, state_p, flows=flows_p,
+                                     table=table, spec=FLEET_OBS))
+    np.testing.assert_allclose(obs_p, obs[perm], atol=1e-5, rtol=1e-5)
+
+    # the shared policy maps row f of the observation to row f of the
+    # action — permuting its input permutes its output
+    mean, _ = nets.policy_apply(_policy(), jnp.asarray(obs))
+    mean_p, _ = nets.policy_apply(_policy(), jnp.asarray(obs[perm]))
+    np.testing.assert_allclose(np.asarray(mean_p), np.asarray(mean)[perm],
+                               atol=1e-4, rtol=1e-4)
+
+    actions = jnp.clip(mean, 1.0, 50.0)
+    s2, o2, r = fleet_step(params, state, actions, flows=flows, table=table,
+                           substeps=SUBSTEPS, fairness_coef=0.5)
+    s2p, o2p, rp = fleet_step(params, state_p, actions[perm], flows=flows_p,
+                              table=table, substeps=SUBSTEPS,
+                              fairness_coef=0.5)
+    np.testing.assert_allclose(np.asarray(s2p.throughputs),
+                               np.asarray(s2.throughputs)[perm],
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2p.delivered),
+                               np.asarray(s2.delivered)[perm],
+                               atol=1e-5, rtol=1e-5)
+    assert float(rp) == pytest.approx(float(r), abs=1e-4)
