@@ -1,0 +1,172 @@
+"""Topology suite: flows traversing multi-link paths with per-link
+contention.
+
+ONE topology-aware shared policy (PPO on TOPOLOGY_OBS — the fleet
+observation plus bottleneck-link utilization, path length, and
+my-share-on-bottleneck — domain-randomized over the topology families) is
+scored per family against:
+
+  fleet_1link   the PR 5 shared fleet policy, trained on a SINGLE
+                bottleneck (FLEET_OBS): what happens when you deploy the
+                one-link agent onto a link graph — it never sees which
+                link binds
+  static        Globus-style fixed configuration per flow
+
+Topology families (repro.scenarios.families.TOPOLOGY_FAMILIES):
+regional_diurnal (per-link out-of-phase diurnal cycles), link_failover
+(the primary link collapses mid-transfer and routes fail over to cold
+standbys), cross_traffic (an external burst steals one segment).
+
+Rows per family: aggregate utilization (delivered over the integrated
+path-aware achievable), time-mean Jain over contended steps, and — on
+link_failover — recovery time (sim-seconds from the failure back to 70%
+of the post-failure achievable). The ISSUE acceptance bar: the
+topology-aware policy beats the single-bottleneck fleet policy on
+link_failover, at Jain >= 0.95.
+
+  PYTHONPATH=src python benchmarks/bench_topology.py          # full
+  PYTHONPATH=src python benchmarks/bench_topology.py --quick  # CI smoke
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+# standalone `python benchmarks/bench_topology.py` puts benchmarks/ (not
+# the repo root) on sys.path; add the root so the sibling import resolves
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from benchmarks.bench_fleet import train_fleet_agent
+from repro.core import GlobusController
+from repro.core.controller import FleetPolicy
+from repro.core.ppo import PPOConfig, train_ppo, effective_obs_spec
+from repro.core.simulator import make_env_params, TOPOLOGY_OBS
+from repro.scenarios import (TopologySpec, sample_topology_batch,
+                             run_topology_in_dynamic_sim)
+
+N_MAX = 50
+BASE_TPT = (0.2, 0.15, 0.2)
+BASE_BW = (1.0, 1.0, 1.0)
+N_FLOWS = 4
+N_LINKS = 3
+FAIRNESS_COEF = 0.5
+FAMILIES = ("regional_diurnal", "link_failover", "cross_traffic")
+
+
+def train_topology_agent(params, *, seed=0, episodes=1500, n_envs=16,
+                         n_flows=N_FLOWS, n_links=N_LINKS, horizon=60.0,
+                         fairness_coef=FAIRNESS_COEF, policy="mlp"):
+    """Domain-randomized topology PPO: every episode batch redraws n_envs
+    (link graph + routes, arrival schedule) pairs over all topology
+    families — out-of-phase weather, mid-run failovers, cross-traffic
+    theft — so the ONE shared policy learns to read WHICH link binds.
+    Returns (FleetPolicy, TrainResult); the params drop into
+    TopologyController unchanged for the live MultiLink."""
+    cache = {}
+
+    def draw(rnd):
+        if rnd not in cache:
+            cache.clear()  # train_ppo asks topology then flows per rnd
+            cache[rnd] = sample_topology_batch(
+                n_envs, n_flows, n_links=n_links, seed=seed * 7919 + rnd,
+                horizon=horizon, base_tpt=BASE_TPT, base_bw=BASE_BW)[1:3]
+        return cache[rnd]
+
+    cfg = PPOConfig(max_episodes=episodes, n_envs=n_envs,
+                    action_scale=N_MAX / 4, seed=seed,
+                    obs_spec=TOPOLOGY_OBS, param_selection="batch_mean",
+                    policy=policy, n_flows=n_flows,
+                    fairness_coef=fairness_coef)
+    topology, flows = draw(0)
+    res = train_ppo(params, cfg, topology=topology, flows=flows,
+                    resample_topology=lambda rnd: draw(rnd)[0],
+                    resample_flows=lambda rnd: draw(rnd)[1])
+    pol = FleetPolicy(res.params["policy"], n_max=N_MAX, deterministic=True,
+                      obs_spec=effective_obs_spec(cfg), policy=policy)
+    return pol, res
+
+
+def main(rows=None, quick=False):
+    """``quick``: tiny training budgets — the CI smoke mode (exercises the
+    topology training + evaluation path end-to-end; the acceptance
+    comparison still runs, on the same families)."""
+    rows = rows if rows is not None else []
+    episodes = 96 if quick else 1500
+    n_envs = 8 if quick else 16
+    horizon = 40.0 if quick else 60.0
+    n_flows = 3 if quick else N_FLOWS
+    n_links = 2 if quick else N_LINKS
+    params = make_env_params(tpt=list(BASE_TPT), bw=list(BASE_BW),
+                             cap=[2.0, 2.0], n_max=N_MAX)
+
+    topo_pol, res = train_topology_agent(params, seed=1, episodes=episodes,
+                                         n_envs=n_envs, n_flows=n_flows,
+                                         n_links=n_links, horizon=horizon)
+    rows.append(("topology.train.wall_s", res.wall_s * 1e6,
+                 f"{res.episodes} topology episodes (F={n_flows}, "
+                 f"E={n_links}) in {res.wall_s:.1f}s"))
+    # the single-bottleneck fleet baseline: same budget, one link, FLEET_OBS
+    fleet_pol, fres = train_fleet_agent(params, seed=1, episodes=episodes,
+                                        n_envs=n_envs, n_flows=n_flows,
+                                        horizon=horizon)
+    rows.append(("topology.train_fleet_1link.wall_s", fres.wall_s * 1e6,
+                 f"{fres.episodes} single-link fleet episodes in "
+                 f"{fres.wall_s:.1f}s"))
+
+    for family in FAMILIES:
+        tspec = TopologySpec(family=family, seed=11, n_links=n_links,
+                             n_flows=n_flows, horizon=horizon,
+                             base_tpt=BASE_TPT, base_bw=BASE_BW)
+        flows = tspec_flows(n_flows, horizon)
+        evals = {
+            "topology": run_topology_in_dynamic_sim(
+                tspec, flows, params, topo_pol, seed=7, label="topology"),
+            "fleet_1link": run_topology_in_dynamic_sim(
+                tspec, flows, params, fleet_pol, seed=7,
+                label="fleet_1link"),
+            "static": run_topology_in_dynamic_sim(
+                tspec, flows, params,
+                [GlobusController() for _ in range(n_flows)],
+                seed=7, label="static"),
+        }
+        for label, ev in evals.items():
+            rows.append((f"topology.{family}.utilization_{label}",
+                         ev.utilization * 1e6,
+                         f"{ev.utilization:.3f} aggregate "
+                         f"delivered/achievable (F={n_flows}, "
+                         f"E={n_links})"))
+            rows.append((f"topology.{family}.jain_{label}",
+                         ev.jain * 1e6,
+                         f"{ev.jain:.3f} time-mean Jain fairness"))
+            if family == "link_failover" and ev.recovery_s is not None:
+                rows.append((f"topology.{family}.recovery_s_{label}",
+                             ev.recovery_s * 1e6,
+                             f"{ev.recovery_s:.1f}s back to 70% of "
+                             "post-failure achievable"))
+        for base in ("fleet_1link", "static"):
+            ratio = (evals["topology"].utilization
+                     / max(evals[base].utilization, 1e-9))
+            rows.append((f"topology.{family}.topology_vs_{base}",
+                         ratio * 1e6,
+                         f"{ratio:.2f}x topology-aware policy over "
+                         f"{base}"))
+    return rows
+
+
+def tspec_flows(n_flows, horizon):
+    """Staggered arrivals: the contended-from-t0-but-not-static population
+    that separates path-aware allocation from one-number policies."""
+    from repro.scenarios import arrival_schedule
+    return arrival_schedule("staggered_start", n_flows, horizon=horizon,
+                            seed=11)
+
+
+if __name__ == "__main__":
+    import sys
+    for r in main(quick="--quick" in sys.argv[1:]):
+        print(",".join(str(x) for x in r))

@@ -78,12 +78,12 @@ def policy_rows(rows, *, n_envs=16, iters=8):
         key = jax.random.PRNGKey(0)
         state = init_agent(key, cfg)
         episode = _make_episode_fn(p, cfg, randomize_t0=False)
-        # flows/objectives None: the single-flow episode path
-        state, _, _ = episode(state, tables, None, None, key)  # compile
+        # flows/objectives/topo None: the single-flow episode path
+        state, _, _ = episode(state, tables, None, None, None, key)  # compile
         jax.block_until_ready(state["params"])
         t0 = time.perf_counter()
         for _ in range(iters):
-            state, _, _ = episode(state, tables, None, None, key)
+            state, _, _ = episode(state, tables, None, None, None, key)
         jax.block_until_ready(state["params"])
         per = (time.perf_counter() - t0) / iters
         per_policy[policy] = per

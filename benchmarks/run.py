@@ -26,11 +26,18 @@ Prints ``name,us_per_call,derived`` CSV rows.
                                     static/Marlin on mixed gold/bronze
                                     scenarios — deadline-hit-rate + weighted
                                     utilization)
+  beyond  -> bench_topology        (multi-link topology: the topology-aware
+                                    shared policy vs the single-bottleneck
+                                    fleet policy and per-flow static across
+                                    regional_diurnal / link_failover /
+                                    cross_traffic — aggregate utilization +
+                                    Jain + failover recovery time)
 
 ``--quick`` runs the CI smoke subset: the substep-backend and per-policy
-episode-cost microbenches plus bench_scenarios and bench_fleet in quick
-mode (tiny training budgets) — minutes, not the full suite, so CI catches
-perf entry points that rot without paying for the real numbers.
+episode-cost microbenches plus bench_scenarios, bench_fleet,
+bench_objectives, and bench_topology in quick mode (tiny training
+budgets) — minutes, not the full suite, so CI catches perf entry points
+that rot without paying for the real numbers.
 
 ``--json PATH`` additionally writes every row to PATH as JSON — CI uploads
 the quick rows as a ``BENCH_<pr>.json`` artifact per PR, the repo's
@@ -65,7 +72,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_training_time, bench_convergence,
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
-                            bench_scenarios, bench_fleet, bench_objectives)
+                            bench_scenarios, bench_fleet, bench_objectives,
+                            bench_topology)
     if quick:
         suites = [
             ("training_time_backends",
@@ -80,6 +88,8 @@ def main(argv=None) -> None:
              lambda rows: bench_fleet.main(rows, quick=True)),
             ("objectives_quick",
              lambda rows: bench_objectives.main(rows, quick=True)),
+            ("topology_quick",
+             lambda rows: bench_topology.main(rows, quick=True)),
         ]
     else:
         suites = [
@@ -93,19 +103,28 @@ def main(argv=None) -> None:
             ("scenarios", bench_scenarios.main),
             ("fleet", bench_fleet.main),
             ("objectives", bench_objectives.main),
+            ("topology", bench_topology.main),
         ]
     print("name,us_per_call,derived")
-    failures = 0
+    failed = []
     all_rows = []
+
+    def emit(rows):
+        for r in rows:
+            n, us, derived = r
+            print(f"{n},{us:.1f},{str(derived).replace(',', ';')}")
+            all_rows.append({"name": n, "us_per_call": float(us),
+                             "derived": str(derived)})
+
     for name, fn in suites:
         t0 = time.time()
+        # the sub-bench MUTATES this list, so the rows it produced before
+        # an exception survive — a crash mid-suite loses the suite, not
+        # the measurements already taken
+        rows = []
         try:
-            rows = fn([])
-            for r in rows:
-                n, us, derived = r
-                print(f"{n},{us:.1f},{str(derived).replace(',', ';')}")
-                all_rows.append({"name": n, "us_per_call": float(us),
-                                 "derived": str(derived)})
+            ret = fn(rows)
+            emit(ret if ret is not None else rows)
             wall = time.time() - t0
             print(f"suite.{name}.wall_s,{wall * 1e6:.0f},{wall:.1f}s",
                   flush=True)
@@ -113,18 +132,22 @@ def main(argv=None) -> None:
                              "us_per_call": wall * 1e6,
                              "derived": f"{wall:.1f}s"})
         except Exception:
-            failures += 1
+            failed.append(name)
+            emit(rows)  # partial rows, loudly marked below
             print(f"suite.{name}.FAILED,0,{traceback.format_exc(limit=1)!r}",
                   flush=True)
             all_rows.append({"name": f"suite.{name}.FAILED",
                              "us_per_call": 0.0,
                              "derived": traceback.format_exc(limit=1)})
+            traceback.print_exc(file=sys.stderr)
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"quick": quick, "failures": failures,
+            json.dump({"quick": quick, "failures": len(failed),
                        "rows": all_rows}, f, indent=1)
         print(f"suite.json_written,0,{json_path}", flush=True)
-    if failures:
+    if failed:
+        print(f"run.py: {len(failed)} suite(s) FAILED: {', '.join(failed)}",
+              file=sys.stderr, flush=True)
         sys.exit(1)
 
 

@@ -21,11 +21,16 @@
   ppo.py         Algorithm 2 training: one train_ppo for static /
                  single-schedule / domain-randomized / fleet regimes and the
                  temporal policy stack (policy="mlp" | "stacked" | "gru")
+  topology.py    multi-link topology core: flows traverse PATHS over a
+                 LinkGraph of per-link schedules; per-link contention is
+                 work-conserving under rate caps (water-filled cap headroom);
+                 E=1/no-caps is the fleet path bit-for-bit
   marlin.py      baseline: 3 independent single-variable gradient-descent opts
   globus.py      baseline: static configuration
   controller.py  production phase (§IV-F), ObservationSpec-aware; FleetPolicy
                  + FleetController step ONE trained policy across N live
-                 engines sharing a SharedLink
+                 engines sharing a SharedLink; TopologyController adds the
+                 TOPOLOGY_OBS features over a live MultiLink
 """
 
 from repro.core.utility import (utility, stage_utility, r_max, K_DEFAULT,
@@ -36,7 +41,8 @@ from repro.core.schedule import (ScheduleTable, make_table, constant_table,
 from repro.core.simulator import (SimParams, SimEnv, make_env_params,
                                   ObservationSpec, HistorySpec, DEFAULT_OBS,
                                   CONTEXT_OBS, FLEET_OBS, OBJECTIVE_OBS,
-                                  history_init, history_push, history_flatten)
+                                  TOPOLOGY_OBS, history_init, history_push,
+                                  history_flatten)
 from repro.core.fleet import (FleetState, FlowSchedule, make_flow_schedule,
                               always_on, stack_flow_schedules, active_at,
                               fleet_reset, fleet_step, fleet_observe,
@@ -44,6 +50,15 @@ from repro.core.fleet import (FleetState, FlowSchedule, make_flow_schedule,
                               FlowObjective, make_flow_objective,
                               default_objectives, stack_flow_objectives,
                               objective_features, PRIORITY_TIERS)
+from repro.core.topology import (LinkGraph, PathSpec, Topology,
+                                 make_link_graph, single_link_graph,
+                                 make_path_spec, all_links_path,
+                                 stack_link_graphs, stack_path_specs,
+                                 stack_topologies, routes_at, graph_peak_bw,
+                                 link_peak_bw, TopologyState, topology_reset,
+                                 topology_step, topology_observe,
+                                 topology_interval, topology_features,
+                                 topology_achievable)
 from repro.core.simref import EventSimulator
 from repro.core.networks import (policy_init, policy_apply, value_init,
                                  value_apply, rnn_policy_init,
@@ -54,4 +69,4 @@ from repro.core.marlin import MarlinOptimizer
 from repro.core.globus import GlobusController
 from repro.core.exploration import explore, ExplorationResult
 from repro.core.controller import (AutoMDTController, FleetPolicy,
-                                   FleetController)
+                                   FleetController, TopologyController)

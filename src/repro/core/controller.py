@@ -50,6 +50,7 @@ from repro.core import networks as nets
 from repro.core.fleet import (FlowObjective, objective_features,
                               default_objectives)
 from repro.core.simulator import ObservationSpec, DEFAULT_OBS
+from repro.core.topology import topology_features
 
 
 class _FrameBuilder:
@@ -386,3 +387,54 @@ class FleetController:
             if max_steps is not None and steps >= max_steps:
                 break
         return trace
+
+
+class TopologyController(FleetController):
+    """Production phase over a MULTI-LINK path topology: the shared policy
+    drives N live engines whose stages traverse a ``repro.transfer.MultiLink``
+    (one StageThrottle pool per link). On top of the fleet frames it appends
+    the TOPOLOGY_OBS block — bottleneck-link utilization, path length,
+    my-share-on-bottleneck — via literally the sim's ``topology_features``
+    (live/sim parity is pinned in tests/test_topology.py).
+
+    ``paths``: a static (F, E) 0/1 routing matrix, or a PathSpec-like object
+    (``onpath`` (R, F, E) + ``bin_seconds``) looked up on the controller's
+    run clock — so a mid-run failover moves the features exactly when
+    ``MultiLink.reroute`` moves the tokens (call ``set_paths`` if the
+    re-routing is decided outside a PathSpec). ``link_bw_ref``: (E,)
+    per-link bandwidth reference in ENGINE units (the live twin of the
+    per-link schedule peaks the sim normalizes by)."""
+
+    def __init__(self, policy_params, *, paths, link_bw_ref, **kwargs):
+        super().__init__(policy_params, **kwargs)
+        self.link_bw_ref = np.asarray(link_bw_ref, float)
+        self.set_paths(paths)
+
+    def set_paths(self, paths):
+        if hasattr(paths, "onpath"):
+            self._onpath = np.asarray(paths.onpath, float)
+            self._route_bin = float(np.asarray(paths.bin_seconds))
+        else:
+            self._onpath = np.asarray(paths, float)[None]
+            self._route_bin = np.inf
+        if self._onpath.ndim != 3 or self._onpath.shape[1] != self.n_flows:
+            raise ValueError(f"paths must route {self.n_flows} flows: "
+                             f"{self._onpath.shape}")
+
+    def routes(self, t=0.0):
+        """(F, E) routing matrix at run-clock time ``t``."""
+        r = (0 if not np.isfinite(self._route_bin)
+             else min(int(t / self._route_bin), self._onpath.shape[0] - 1))
+        return self._onpath[r]
+
+    def frames(self, obs_list, active=None, t=0.0, delivered=None):
+        base = super().frames(obs_list, active, t=t, delivered=delivered)
+        if not getattr(self.obs_spec, "topology", False):
+            return base
+        act = (np.ones(self.n_flows) if active is None
+               else np.asarray(active, float))
+        net = np.asarray([o["throughputs"][1] for o in obs_list], float)
+        # literally the sim's feature block — ONE definition
+        rows = np.asarray(topology_features(self.routes(t), net, act,
+                                            self.link_bw_ref))
+        return np.concatenate([base, rows], axis=-1).astype(np.float32)

@@ -59,6 +59,8 @@ import jax.numpy as jnp
 from repro.core import networks as nets
 from repro.core.fleet import (fleet_reset, fleet_step, fleet_observe,
                               always_on)
+from repro.core.topology import (topology_reset, topology_step,
+                                 topology_observe)
 from repro.core.schedule import constant_table
 from repro.core.simulator import (env_reset, env_step, observe, ACT_DIM,
                                   ObservationSpec, DEFAULT_OBS,
@@ -74,6 +76,13 @@ class PPOConfig:
     max_episodes: int = 30000    # N
     lr: float = 3e-4
     gamma: float = 0.99
+    gae_lambda: float = 1.0      # GAE(lambda) advantage estimation: 1.0 is
+    # plain discounted Monte-Carlo returns (the paper's estimator — kept as
+    # a STATIC branch so the default stays bit-identical to the pre-GAE
+    # trainer, pinned in tests/test_gae.py); < 1.0 bootstraps on the critic
+    # (from the PRE-update params — a fixed baseline across the ppo_epochs)
+    # for lower-variance credit assignment on slow-trending and failover
+    # schedules, where a 10-step Monte-Carlo return is mostly scenario luck.
     clip_eps: float = 0.2
     entropy_coef: float = 0.1
     critic_coef: float = 0.5
@@ -277,12 +286,87 @@ def _rollout_fleet(policy_params, env_params, table, flows, objectives, key,
     return traj  # obs (M,F,D), act (M,F,3), rew (M,), logp (M,F)
 
 
+def _rollout_topology(policy_params, env_params, topo, flows, objectives,
+                      key, *, M, substeps, spec, backend, randomize_t0,
+                      policy, n_flows, fairness_coef, deadline_coef):
+    """One topology episode: the fleet rollout's multi-link twin. Flows
+    traverse the link paths of ``topo`` (a Topology bundle) and contend
+    per-link via the work-conserving solve; the per-flow policy/history/
+    carry contracts are exactly the fleet ones, so topology-trained params
+    drop into the same live controller. Returns per-step (obs (F, D),
+    action (F, 3), reward (), logp (F,))."""
+    graph, paths = topo.graph, topo.paths
+    if randomize_t0:
+        k_reset, k_t0, k_steps = jax.random.split(key, 3)
+        horizon = graph.tpt.shape[1] * graph.bin_seconds
+        span = jnp.maximum(horizon - (M + 1) * env_params.duration, 0.0)
+        t0 = jax.random.uniform(k_t0, ()) * span
+    else:
+        k_reset, k_steps = jax.random.split(key)
+        t0 = 0.0
+    fspec = spec._replace(history=1)
+    state = topology_reset(env_params, k_reset, n_flows, t0, graph=graph,
+                           paths=paths, flows=flows, substeps=substeps,
+                           spec=fspec, backend=backend, objectives=objectives)
+    obs0 = topology_observe(env_params, state, graph=graph, paths=paths,
+                            flows=flows, spec=fspec, objectives=objectives)
+    hist0 = jax.vmap(lambda f: history_init(spec, f))(obs0)  # (F, K, D)
+    recurrent = policy == "gru"
+
+    def step(carry, k):
+        if recurrent:
+            state, hist, h = carry
+            obs = jax.vmap(history_flatten)(hist)
+            h, mean, std = nets.rnn_policy_apply(policy_params, h, obs)
+        else:
+            state, hist = carry
+            obs = jax.vmap(history_flatten)(hist)
+            mean, std = nets.policy_apply(policy_params, obs)
+        action = mean + std * jax.random.normal(k, mean.shape)
+        logp = nets.gaussian_logp(mean, std, action)
+        state, obs_next, reward = topology_step(
+            env_params, state, action, graph=graph, paths=paths, flows=flows,
+            substeps=substeps, spec=fspec, backend=backend,
+            fairness_coef=fairness_coef, objectives=objectives,
+            deadline_coef=deadline_coef)
+        hist = jax.vmap(history_push)(hist, obs_next)
+        out = (state, hist, h) if recurrent else (state, hist)
+        return out, (obs, action, reward, logp)
+
+    init = ((state, hist0, nets.rnn_carry(policy_params, (n_flows,)))
+            if recurrent else (state, hist0))
+    keys = jax.random.split(k_steps, M)
+    _, traj = jax.lax.scan(step, init, keys)
+    return traj  # obs (M,F,D), act (M,F,3), rew (M,), logp (M,F)
+
+
 def _returns(rew, gamma):
     def back(g, r):
         g = r + gamma * g
         return g, g
     _, gs = jax.lax.scan(back, jnp.zeros(()), rew, reverse=True)
     return gs
+
+
+def _gae_returns(rew, values, gamma, lam):
+    """GAE(lambda) targets for ONE episode: advantage a_t = delta_t +
+    gamma*lam*a_{t+1} with delta_t = r_t + gamma*V(s_{t+1}) - V(s_t) and
+    V = 0 past the horizon, returned as a_t + V(s_t) (the lambda-return,
+    drop-in for _returns as the critic target / advantage source). At
+    lam=1 this telescopes to the discounted Monte-Carlo return for ANY
+    values (property-pinned in tests/test_gae.py) — but only up to float
+    associativity, which is why the trainer keeps lam==1.0 on a static
+    _returns branch."""
+    v_next = jnp.concatenate([values[1:], jnp.zeros_like(values[:1])])
+
+    def back(a, xs):
+        r, v, vn = xs
+        a = (r + gamma * vn - v) + gamma * lam * a
+        return a, a + v
+
+    _, ret = jax.lax.scan(back, jnp.zeros(()), (rew, values, v_next),
+                          reverse=True)
+    return ret
 
 
 def _surrogate(logp, logp_old, v, ret, entropy, cfg: PPOConfig):
@@ -335,21 +419,37 @@ def _loss_recurrent(params, batch, cfg: PPOConfig):
     return _surrogate(logp, logp_old, v, ret, ent, cfg)
 
 
-def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0):
+def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0,
+                     topology=False):
     """One jitted call = n_envs episodes + ppo_epochs updates — the single
     episode fn in the repo. ``tables`` (batched ScheduleTable, leading axis
     n_envs) and ``flows`` (batched FlowSchedule, fleet mode) are traced, so
-    new schedule VALUES never retrace."""
+    new schedule VALUES never retrace. ``topology`` (static flag) swaps the
+    rollout for the multi-link twin: the ``topo`` arg (batched Topology,
+    leading axis n_envs) replaces ``tables`` as the world, and the fleet
+    batch shaping applies for any n_flows >= 1."""
     spec = effective_obs_spec(cfg)
     recurrent = cfg.policy == "gru"
-    fleet = cfg.n_flows > 1
+    fleet = cfg.n_flows > 1 and not topology
+    multi = fleet or topology  # per-flow sample axis in the update batch
     loss_fn = _loss_recurrent if recurrent else _loss
 
-    def episode(train_state, tables, flows, objectives, key):
+    def episode(train_state, tables, flows, objectives, topo, key):
         params, opt = train_state["params"], train_state["opt"]
         k_roll, _ = jax.random.split(key)
         roll_keys = jax.random.split(k_roll, cfg.n_envs)
-        if fleet:
+        if topology:
+            obs, act, rew, logp = jax.vmap(
+                lambda tp, fl, ob, k: _rollout_topology(
+                    params["policy"], env_params, tp, fl, ob, k,
+                    M=cfg.max_steps, substeps=cfg.substeps, spec=spec,
+                    backend=cfg.backend, randomize_t0=randomize_t0,
+                    policy=cfg.policy, n_flows=cfg.n_flows,
+                    fairness_coef=cfg.fairness_coef,
+                    deadline_coef=cfg.deadline_coef)
+            )(topo, flows, objectives, roll_keys)
+            # (E, M, F, ...) / rew (E, M)
+        elif fleet:
             obs, act, rew, logp = jax.vmap(
                 lambda tab, fl, ob, k: _rollout_fleet(
                     params["policy"], env_params, tab, fl, ob, k,
@@ -369,12 +469,44 @@ def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0):
                                         randomize_t0=randomize_t0,
                                         policy=cfg.policy)
             )(tables, roll_keys)  # (E, M, ...)
-        ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
-        if fleet:
-            # every (env, step, flow) sample trains against the SHARED
-            # fleet return of its step; recurrent replay treats each
-            # (env, flow) pair as one carry sequence
-            ret = jnp.broadcast_to(ret[:, :, None], logp.shape)  # (E, M, F)
+        if cfg.gae_lambda == 1.0:  # static: the paper's Monte-Carlo path
+            ret = jax.vmap(_returns, in_axes=(0, None))(rew, cfg.gamma)
+            if multi:
+                # every (env, step, flow) sample trains against the SHARED
+                # fleet return of its step; recurrent replay treats each
+                # (env, flow) pair as one carry sequence
+                ret = jnp.broadcast_to(ret[:, :, None], logp.shape)
+                # (E, M, F)
+        else:
+            # lambda-returns bootstrap on the PRE-update critic: a fixed
+            # baseline (data, not a differentiated graph) shared by all
+            # ppo_epochs, matching how logp_old freezes the behavior policy
+            if recurrent:
+                def vseq(obs_seq):  # one episode from the zero carry
+                    def stepfn(hv, o):
+                        hv, v = nets.rnn_value_apply(params["value"], hv, o)
+                        return hv, v
+                    _, v = jax.lax.scan(stepfn,
+                                        nets.rnn_carry(params["value"]),
+                                        obs_seq)
+                    return v
+                if multi:  # (E,M,F,D) -> per-(env,flow) sequences
+                    v = jax.vmap(jax.vmap(vseq))(obs.transpose(0, 2, 1, 3))
+                    v = v.transpose(0, 2, 1)  # (E, M, F)
+                else:
+                    v = jax.vmap(vseq)(obs)  # (E, M)
+            else:
+                v = nets.value_apply(params["value"], obs)
+            if multi:  # shared reward, per-flow baselines
+                ret = jax.vmap(lambda r_e, v_e: jax.vmap(
+                    lambda v_f: _gae_returns(r_e, v_f, cfg.gamma,
+                                             cfg.gae_lambda),
+                    in_axes=1, out_axes=1)(v_e))(rew, v)  # (E, M, F)
+            else:
+                ret = jax.vmap(
+                    lambda r_e, v_e: _gae_returns(r_e, v_e, cfg.gamma,
+                                                  cfg.gae_lambda))(rew, v)
+        if multi:
             if recurrent:
                 batch = (obs.transpose(0, 2, 1, 3)
                             .reshape(-1, cfg.max_steps, spec.dim),
@@ -416,8 +548,8 @@ def _broadcast_table(table, n_envs):
 
 def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
               resample=None, flows=None, resample_flows=None,
-              objectives=None, resample_objectives=None, r_max=None,
-              key=None):
+              objectives=None, resample_objectives=None, topology=None,
+              resample_topology=None, r_max=None, key=None):
     """Algorithm 2, schedule-native. Returns TrainResult with the BEST (not
     last) params.
 
@@ -439,22 +571,31 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
     priority tiers, deadlines, rate floors/caps
     (repro.scenarios.sample_fleet_batch(objective_mix=...)). None = the
     default objective for every flow (the objective-free reward,
-    bit-for-bit)."""
+    bit-for-bit).
+    ``topology`` / ``resample_topology``: the multi-link world — a batched
+    Topology (leading axis cfg.n_envs; LinkGraph + PathSpec, see
+    repro.scenarios.sample_topology_batch) and its per-round redraw. When
+    either is given the rollout swaps to the per-link work-conserving
+    contention solve (topology_step); ``tables``/``resample`` are ignored
+    and episode start times randomize over the graph horizon."""
     cfg = cfg or PPOConfig()
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
     train_state = init_agent(k_init, cfg)
-    scheduled = tables is not None or resample is not None
-    if tables is None and resample is None:
+    topo_mode = topology is not None or resample_topology is not None
+    scheduled = tables is not None or resample is not None or topo_mode
+    if tables is None and resample is None and not topo_mode:
         tables = _broadcast_table(
             constant_table(env_params.tpt, env_params.bw, env_params.duration),
             cfg.n_envs)
-    if cfg.n_flows > 1 and flows is None and resample_flows is None:
+    if ((cfg.n_flows > 1 or topo_mode) and flows is None
+            and resample_flows is None):
         flows = _broadcast_table(always_on(cfg.n_flows), cfg.n_envs)
     # objectives=None stays None (an empty pytree vmaps fine): the
     # objective-blind fleet keeps the exact PR 4 trace instead of a
     # broadcast default — fleet_step folds the defaults in-graph
-    episode_fn = _make_episode_fn(env_params, cfg, randomize_t0=scheduled)
+    episode_fn = _make_episode_fn(env_params, cfg, randomize_t0=scheduled,
+                                  topology=topo_mode)
 
     best_r = -jnp.inf
     best_sel = -jnp.inf  # selection metric (batch_mean mode)
@@ -475,10 +616,13 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
         if resample_objectives is not None and (objectives is None
                                                 or rnd > 0):
             objectives = resample_objectives(rnd)
+        if resample_topology is not None and (topology is None or rnd > 0):
+            topology = resample_topology(rnd)
         rnd += 1
         key, k = jax.random.split(key)
         train_state, ep_rewards, loss = episode_fn(train_state, tables,
-                                                   flows, objectives, k)
+                                                   flows, objectives,
+                                                   topology, k)
         ep_rewards = jax.device_get(ep_rewards)
         if by_batch_mean:
             batch_mean = float(ep_rewards.mean())

@@ -80,6 +80,8 @@ CONTEXT_DIM = 5   # schedule context: 3 throughput deltas + 2 drain rates
 FLEET_DIM = 3     # cross-flow: active fraction, aggregate util, my share
 OBJ_DIM = 3       # per-flow objective: priority weight, deadline slack,
                   # needed-rate urgency (repro.core.fleet.FlowObjective)
+TOPO_DIM = 3      # per-flow topology: bottleneck-link utilization, path
+                  # length, my-share-on-bottleneck (repro.core.topology)
 ACT_DIM = 3
 
 
@@ -125,18 +127,30 @@ class ObservationSpec(NamedTuple):
     treat a gold flow racing a deadline differently from a patient bronze
     flow. ``fleet_observe`` (sim) and ``FleetController`` (live) emit them
     identically; single-flow ``observe`` never does.
+
+    topology=True: 3 extra PER-FLOW TOPOLOGY dims (repro.core.topology) —
+    the utilization of the most-loaded link on MY path (which link is
+    binding, and how hard), my path length over the graph size, and my
+    share of the aggregate on that bottleneck link. They are what lets ONE
+    shared policy reason about a MOVING bottleneck ("my path's narrow
+    segment just failed over; the other flows' didn't") instead of the
+    single aggregate-utilization the fleet dims carry.
+    ``topology_observe`` (sim) and ``TopologyController`` (live) emit them
+    identically; ``fleet_observe`` never does.
     """
 
     context: bool = False
     history: int = 1
     fleet: bool = False
     objectives: bool = False
+    topology: bool = False
 
     @property
     def frame_dim(self) -> int:
         return (OBS_DIM + (CONTEXT_DIM if self.context else 0)
                 + (FLEET_DIM if self.fleet else 0)
-                + (OBJ_DIM if self.objectives else 0))
+                + (OBJ_DIM if self.objectives else 0)
+                + (TOPO_DIM if self.topology else 0))
 
     @property
     def dim(self) -> int:
@@ -153,6 +167,7 @@ DEFAULT_OBS = ObservationSpec()
 CONTEXT_OBS = ObservationSpec(context=True)
 FLEET_OBS = ObservationSpec(context=True, fleet=True)
 OBJECTIVE_OBS = ObservationSpec(context=True, fleet=True, objectives=True)
+TOPOLOGY_OBS = ObservationSpec(context=True, fleet=True, topology=True)
 
 
 def history_init(spec: ObservationSpec, frame):

@@ -1,0 +1,396 @@
+"""Multi-link topology core: flows traverse PATHS of links.
+
+Everything in :mod:`repro.core.fleet` contends for ONE bottleneck. The
+paper's target regime — geographically dispersed transfers between Globus
+endpoints — is a path of links (source site, one or more WAN segments,
+destination site) whose binding constraint moves over time: the diurnal dip
+hits the European segment hours before the US one, a failed link reroutes
+traffic onto a narrower backup, cross traffic steals one segment while the
+rest of the path idles. This module generalizes the fleet core to a
+``LinkGraph`` of E links, each carrying its OWN ScheduleTable, plus a
+``PathSpec`` routing each of the F flows over a subset of links
+(piecewise-constant in time, so a failover can re-route flows mid-run):
+
+    rate[f] = min over links e on f's path of  rate_on_link[f, e]
+
+where each link splits its scheduled capacity across the flows ROUTED over
+it exactly as the single-bottleneck fleet model does (thread-proportional
+shares, floors guaranteed first), with one fidelity upgrade the ROADMAP
+demanded: the per-link split is WORK-CONSERVING under rate caps. When a
+capped flow cannot use its thread-proportional share, the unused capacity
+is redistributed to the uncapped flows on that link (iterated water-fill
+over the cap headroom — at most F rounds saturate every cap, so the loop
+is a fixed F-round scan). The single-bottleneck model stranded that share
+in the sim while the live token buckets redistributed it; here Σ flow
+rates on a saturated link == the link's scheduled capacity whenever demand
+suffices (property-pinned in tests/test_fleet_properties.py).
+
+BIT-IDENTITY CONTRACT: E=1 with every flow routed over the one link and no
+finite rate cap is the PR 5 fleet path at atol=0. Every term of the
+redistribution is an exact float no-op when caps are infinite
+(max(x - inf, 0) == 0, min(x, inf) == x, x + share*0.0 == x), the min over
+a single-link axis is an identity slice, and the base allocation is the
+same expression tree ``guaranteed + share * residual`` the fleet solve
+compiles — so the topology solve REPLACES ``_fleet_substep_rates`` as the
+general case without perturbing a single pinned golden.
+
+The live twin is ``repro.transfer.MultiLink``: one StageThrottle pool per
+link; an engine's stage worker acquires tokens from EVERY pool on its path
+(all-or-refund, so a blocked downstream link never strands tokens already
+drawn upstream), reproducing the min-over-path rate with real token
+buckets. ``TopologyController`` appends the ``TOPOLOGY_OBS`` features —
+bottleneck-link utilization, path length, my-share-on-bottleneck — from
+engine observe() dicts exactly as ``topology_observe`` derives them
+(parity-pinned in tests/test_topology.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import ScheduleTable
+from repro.core.simulator import (SimParams, ObservationSpec, DEFAULT_OBS,
+                                  TOPO_DIM)
+from repro.core.fleet import (FlowSchedule, FlowObjective, FleetState,
+                              always_on, active_at, default_objectives,
+                              fleet_observe, _delivered_or_zeros,
+                              _integrate_fleet_rates, _fleet_reward)
+
+# The topology state is the fleet state: per-flow buffers/threads/
+# throughputs, one shared sim clock, per-flow delivered counters. Only the
+# WORLD around it (graph + paths instead of one table) changes.
+TopologyState = FleetState
+
+
+class LinkGraph(NamedTuple):
+    """E links, each a piecewise-constant 3-stage ScheduleTable sharing one
+    bin grid: ``tpt``/``bw`` are (E, T, 3), ``bin_seconds`` the shared bin
+    width. All leaves are jnp arrays so a batch of graphs (leading env
+    axis) vmaps like a batched ScheduleTable."""
+
+    tpt: jnp.ndarray          # (E, T, 3) per-thread rate per link
+    bw: jnp.ndarray           # (E, T, 3) aggregate cap per link
+    bin_seconds: jnp.ndarray  # scalar
+
+    @property
+    def n_links(self) -> int:
+        return self.tpt.shape[-3]
+
+
+class PathSpec(NamedTuple):
+    """Piecewise-constant routing: ``onpath[r, f, e]`` is 1.0 when flow f
+    traverses link e during route bin r (bins of ``bin_seconds``, the last
+    bin extends forever — the same clipped-gather lookup ScheduleTable
+    uses). R=1 is static routing; a failover scenario uses R=2 with
+    ``bin_seconds`` equal to the failure time."""
+
+    onpath: jnp.ndarray       # (R, F, E) 0/1 routing matrix per route bin
+    bin_seconds: jnp.ndarray  # scalar route-bin width
+
+    @property
+    def n_flows(self) -> int:
+        return self.onpath.shape[-2]
+
+
+class Topology(NamedTuple):
+    """A (graph, paths) bundle — what ``train_ppo(topology=...)`` batches
+    over (one pytree, so a leading env axis vmaps both together)."""
+
+    graph: LinkGraph
+    paths: PathSpec
+
+
+def make_link_graph(tpt, bw, bin_seconds=1.0) -> LinkGraph:
+    tpt = jnp.asarray(tpt, jnp.float32)
+    bw = jnp.asarray(bw, jnp.float32)
+    if tpt.ndim != 3 or tpt.shape[-1] != 3 or tpt.shape != bw.shape:
+        raise ValueError(f"link graph wants matching (E, T, 3) arrays: "
+                         f"{tpt.shape} vs {bw.shape}")
+    if tpt.shape[0] < 1:
+        raise ValueError("a link graph needs at least one link")
+    return LinkGraph(tpt=tpt, bw=bw,
+                     bin_seconds=jnp.asarray(bin_seconds, jnp.float32))
+
+
+def single_link_graph(table: ScheduleTable) -> LinkGraph:
+    """The E=1 embedding of a fleet-world ScheduleTable — the graph on
+    which the topology solve is bit-identical to the fleet solve."""
+    return LinkGraph(tpt=table.tpt[None], bw=table.bw[None],
+                     bin_seconds=jnp.asarray(table.bin_seconds, jnp.float32))
+
+
+def make_path_spec(onpath, bin_seconds=jnp.inf) -> PathSpec:
+    """``onpath``: (F, E) for static routes or (R, F, E) for
+    piecewise-constant routing with bins of ``bin_seconds`` (static routes
+    keep the default inf bin: every time lands in bin 0)."""
+    onpath = jnp.asarray(onpath, jnp.float32)
+    if onpath.ndim == 2:
+        onpath = onpath[None]
+    if onpath.ndim != 3:
+        raise ValueError(f"onpath must be (F, E) or (R, F, E), "
+                         f"got {onpath.shape}")
+    return PathSpec(onpath=onpath,
+                    bin_seconds=jnp.asarray(bin_seconds, jnp.float32))
+
+
+def all_links_path(n_flows: int, n_links: int) -> PathSpec:
+    """Every flow traverses every link, forever — the series-path default
+    (and, at E=1, the exact fleet world)."""
+    return make_path_spec(jnp.ones((n_flows, n_links), jnp.float32))
+
+
+def stack_link_graphs(graphs) -> LinkGraph:
+    """Stack same-shape graphs into one batched LinkGraph (leading env
+    axis) for vmapped training — the graph twin of ``stack_tables``."""
+    graphs = list(graphs)
+    shapes = {g.tpt.shape for g in graphs}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack link graphs of shapes {shapes}")
+    return LinkGraph(tpt=jnp.stack([g.tpt for g in graphs]),
+                     bw=jnp.stack([g.bw for g in graphs]),
+                     bin_seconds=jnp.stack([jnp.asarray(g.bin_seconds,
+                                                        jnp.float32)
+                                            for g in graphs]))
+
+
+def stack_path_specs(paths) -> PathSpec:
+    """Stack same-shape path specs into one batched PathSpec."""
+    paths = list(paths)
+    shapes = {p.onpath.shape for p in paths}
+    if len(shapes) != 1:
+        raise ValueError(f"cannot stack path specs of shapes {shapes}")
+    return PathSpec(onpath=jnp.stack([p.onpath for p in paths]),
+                    bin_seconds=jnp.stack([jnp.asarray(p.bin_seconds,
+                                                       jnp.float32)
+                                           for p in paths]))
+
+
+def stack_topologies(topologies) -> Topology:
+    topologies = list(topologies)
+    return Topology(graph=stack_link_graphs(t.graph for t in topologies),
+                    paths=stack_path_specs(t.paths for t in topologies))
+
+
+def routes_at(paths: PathSpec, t):
+    """(F, E) routing matrix at sim time ``t`` (an (S,) time vector returns
+    (S, F, E)) — the route twin of ``active_at``."""
+    R = paths.onpath.shape[0]
+    idx = jnp.clip(jnp.floor(jnp.asarray(t, jnp.float32)
+                             / paths.bin_seconds), 0, R - 1).astype(jnp.int32)
+    return paths.onpath[idx]
+
+
+def graph_peak_bw(graph: LinkGraph):
+    """Max aggregate bandwidth anywhere in the graph — the observation /
+    reward normalization reference (== ``peak_bw(table)`` at E=1)."""
+    return jnp.maximum(jnp.max(graph.bw), 1e-9)
+
+
+def link_peak_bw(graph: LinkGraph):
+    """(E,) per-link peak bandwidth — the per-link utilization reference of
+    ``topology_features``."""
+    return jnp.maximum(jnp.max(graph.bw, axis=(-2, -1)), 1e-9)
+
+
+def _topology_substep_rates(params: SimParams, graph: LinkGraph,
+                            paths: PathSpec, threads, flows: FlowSchedule,
+                            t0, substeps: int,
+                            objectives: FlowObjective = None):
+    """(substeps, F, 3) per-flow rates over the link graph: each link
+    splits its scheduled capacity across the flows routed over it (the
+    fleet contention model, per link), each flow's rate is the min over
+    the links on its path, and — the work-conserving upgrade — capacity a
+    capped flow cannot use is redistributed to the uncapped flows on that
+    link (at most F water-fill rounds saturate every cap).
+
+    Off-path links never constrain a flow (masked to +inf before the min);
+    a flow with an empty path moves nothing. E=1 / all-routed / no-caps is
+    ``_fleet_substep_rates`` bit-for-bit: the redistribution is an exact
+    float no-op when every cap is infinite, and the min over one link is
+    an identity slice."""
+    dt = params.duration / substeps
+    T = graph.tpt.shape[-2]
+    n_flows = threads.shape[0]
+    ts = t0 + dt * jnp.arange(substeps, dtype=jnp.float32)
+    idx = jnp.clip(jnp.floor(ts / graph.bin_seconds), 0, T - 1)
+    idx = idx.astype(jnp.int32)
+    tpt = jnp.swapaxes(graph.tpt[:, idx], 0, 1)        # (S, E, 3)
+    bw = jnp.swapaxes(graph.bw[:, idx], 0, 1)          # (S, E, 3)
+    act = active_at(flows, ts)                         # (S, F)
+    onpath = routes_at(paths, ts)                      # (S, F, E)
+    # effective threads of flow f ON link e (0 off-path / inactive)
+    eff = (threads[None, :, None, :] * act[:, :, None, None]
+           * onpath[..., None])                        # (S, F, E, 3)
+    total = jnp.maximum(eff.sum(axis=1), 1e-9)         # (S, E, 3)
+    share = eff / total[:, None]                       # (S, F, E, 3)
+    if objectives is None:
+        link_rate = jnp.minimum(eff * tpt[:, None], share * bw[:, None])
+    else:
+        cap = objectives.rate_cap[None, :, None, None]
+        demand = jnp.minimum(eff * tpt[:, None], cap)  # (S, F, E, 3)
+        guaranteed = jnp.minimum(
+            objectives.rate_floor[None, :, None, None], demand)
+        g_tot = guaranteed.sum(axis=1)                 # (S, E, 3)
+        # oversubscribed floors shrink proportionally; sum stays <= bw
+        guaranteed = guaranteed * jnp.minimum(
+            1.0, bw / jnp.maximum(g_tot, 1e-9))[:, None]
+        residual = jnp.maximum(bw - guaranteed.sum(axis=1), 0.0)
+        alloc = share * residual[:, None]              # (S, F, E, 3)
+        # Water-fill the cap headroom: capacity allocated past a flow's cap
+        # spills to the flows still below theirs, thread-proportionally.
+        # Every round saturates at least one more cap while any spill
+        # remains, so F rounds reach the fixed point; with all caps at inf
+        # every term below is an exact float no-op (headroom = inf).
+        headroom = cap - guaranteed                    # inf when uncapped
+        for _ in range(n_flows):
+            spill = jnp.maximum(alloc - headroom, 0.0).sum(axis=1)
+            alloc = jnp.minimum(alloc, headroom)
+            w = eff * (alloc < headroom)
+            w_tot = jnp.maximum(w.sum(axis=1), 1e-9)
+            alloc = alloc + (w / w_tot[:, None]) * spill[:, None]
+        alloc = jnp.minimum(alloc, headroom)
+        link_rate = jnp.minimum(demand, guaranteed + alloc)
+    # a flow's end-to-end rate: min over ITS links; off-path links never
+    # constrain, an empty path moves nothing
+    constraining = jnp.where(onpath[..., None] > 0, link_rate, jnp.inf)
+    rate = jnp.min(constraining, axis=2)               # (S, F, 3)
+    has_path = onpath.sum(axis=2) > 0                  # (S, F)
+    return jnp.where(has_path[..., None], rate, 0.0)
+
+
+def topology_interval(params: SimParams, buffers, threads, t0=0.0, *,
+                      graph: LinkGraph, paths: PathSpec,
+                      flows: FlowSchedule, substeps=50, backend="jnp",
+                      objectives: FlowObjective = None):
+    """Simulate ``duration`` seconds of F flows over the link graph —
+    the topology twin of ``fleet_interval`` (same buffer dynamics, same
+    backends; only the rate solve differs)."""
+    rates = _topology_substep_rates(params, graph, paths, threads, flows,
+                                    jnp.asarray(t0, jnp.float32), substeps,
+                                    objectives)
+    return _integrate_fleet_rates(params, buffers, rates, backend)
+
+
+def topology_features(onpath, net_tps, active, link_bw_ref):
+    """(F, TOPO_DIM) topology observation block — the ONE definition both
+    ``topology_observe`` (sim) and ``TopologyController`` (live) emit:
+
+      [0] bottleneck-link utilization — aggregate network throughput over
+          capacity on the most-loaded link of MY path (0 for empty paths)
+      [1] path length / E — how much of the graph I traverse
+      [2] my share of the aggregate on that bottleneck link
+
+    ``onpath``: (F, E) routing at the current time; ``net_tps``: (F,)
+    network-stage throughputs; ``active``: (F,) 0/1; ``link_bw_ref``: (E,)
+    per-link bandwidth reference (sim: per-link schedule peak; live: the
+    driver-provisioned link capacities in engine units)."""
+    onpath = jnp.asarray(onpath, jnp.float32)
+    net = (jnp.asarray(net_tps, jnp.float32)
+           * jnp.asarray(active, jnp.float32))         # (F,)
+    agg = (onpath * net[:, None]).sum(axis=0)          # (E,) load per link
+    util = agg / jnp.maximum(jnp.asarray(link_bw_ref, jnp.float32), 1e-9)
+    on_util = jnp.where(onpath > 0, util[None, :], -jnp.inf)   # (F, E)
+    bneck = jnp.argmax(on_util, axis=1)                # (F,)
+    has_path = onpath.sum(axis=1) > 0
+    b_util = jnp.where(has_path, jnp.take(util, bneck), 0.0)
+    my_share = jnp.where(
+        has_path, net / jnp.maximum(jnp.take(agg, bneck), 1e-9), 0.0)
+    path_len = onpath.sum(axis=1) / onpath.shape[1]
+    return jnp.stack([b_util, path_len, my_share], axis=-1)
+
+
+def topology_observe(params: SimParams, state: TopologyState, *,
+                     flows: FlowSchedule, graph: LinkGraph, paths: PathSpec,
+                     spec: ObservationSpec = DEFAULT_OBS,
+                     objectives: FlowObjective = None):
+    """(F, spec.frame_dim) observation matrix: the fleet observation
+    normalized by the GRAPH's peak bandwidth, optionally extended
+    (spec.topology) with the ``topology_features`` block. At E=1 the
+    graph peak equals the table peak, so a topology-blind spec reproduces
+    ``fleet_observe`` bit-for-bit."""
+    bw_ref = graph_peak_bw(graph)
+    base = fleet_observe(params, state, flows=flows, spec=spec,
+                         objectives=objectives, bw_ref=bw_ref)
+    if not getattr(spec, "topology", False):
+        return base
+    onpath = routes_at(paths, state.t)                 # (F, E)
+    act = active_at(flows, state.t)
+    topo = topology_features(onpath, state.throughputs[:, 1], act,
+                             link_peak_bw(graph))
+    return jnp.concatenate([base, topo], axis=-1)
+
+
+@partial(jax.jit, static_argnames=("n_flows", "substeps", "spec", "backend"))
+def topology_reset(params: SimParams, key, n_flows: int, t0=0.0, *,
+                   graph: LinkGraph, paths: PathSpec,
+                   flows: FlowSchedule = None, substeps=50,
+                   spec: ObservationSpec = DEFAULT_OBS, backend="jnp",
+                   objectives: FlowObjective = None):
+    """The topology twin of ``fleet_reset``: same key stream (the (F, 3)
+    thread draw), empty buffers, one warm-up interval over the graph."""
+    if flows is None:
+        flows = always_on(n_flows)
+    threads = jax.random.randint(key, (n_flows, 3), 1, 16).astype(jnp.float32)
+    buffers = jnp.zeros((n_flows, 2), jnp.float32)
+    t0 = jnp.asarray(t0, jnp.float32)
+    buffers, tps = topology_interval(params, buffers, threads, t0,
+                                     graph=graph, paths=paths, flows=flows,
+                                     substeps=substeps, backend=backend,
+                                     objectives=objectives)
+    return TopologyState(buffers=buffers, threads=threads, throughputs=tps,
+                         t=t0 + params.duration, prev_throughputs=tps,
+                         delivered=jnp.zeros((n_flows,), jnp.float32))
+
+
+@partial(jax.jit, static_argnames=("substeps", "spec", "backend"))
+def topology_step(params: SimParams, state: TopologyState, actions, *,
+                  graph: LinkGraph, paths: PathSpec,
+                  flows: FlowSchedule = None, substeps=50,
+                  spec: ObservationSpec = DEFAULT_OBS, backend="jnp",
+                  fairness_coef=0.0, objectives: FlowObjective = None,
+                  deadline_coef=1.0):
+    """actions (F, 3) -> round -> clamp [1, n_max]; one ``duration``-second
+    interval over the graph. Returns (state', obs (F, frame_dim), reward).
+    The reward is the shared fleet objective (``_fleet_reward`` — ONE
+    definition), normalized by the graph peak."""
+    if flows is None:
+        flows = always_on(state.threads.shape[0])
+    objs = (default_objectives(state.threads.shape[0])
+            if objectives is None else objectives)
+    threads = jnp.clip(jnp.round(actions), 1.0, params.n_max)
+    buffers, tps = topology_interval(params, state.buffers, threads,
+                                     state.t, graph=graph, paths=paths,
+                                     flows=flows, substeps=substeps,
+                                     backend=backend, objectives=objectives)
+    delivered0 = _delivered_or_zeros(state)
+    new_state = TopologyState(
+        buffers=buffers, threads=threads, throughputs=tps,
+        t=state.t + params.duration, prev_throughputs=state.throughputs,
+        delivered=delivered0 + tps[:, 2] * params.duration)
+    act = active_at(flows, state.t + 0.5 * params.duration)
+    reward = _fleet_reward(params, tps, threads, act, objs, delivered0,
+                           state.t, graph_peak_bw(graph), fairness_coef,
+                           deadline_coef)
+    obs = topology_observe(params, new_state, flows=flows, graph=graph,
+                           paths=paths, spec=spec, objectives=objectives)
+    return new_state, obs, reward
+
+
+def topology_achievable(params: SimParams, graph: LinkGraph,
+                        paths: PathSpec, flows: FlowSchedule, t,
+                        objectives: FlowObjective = None):
+    """Best aggregate end-to-end rate the active fleet could sustain over
+    the graph at sim time ``t``: run the contention solve at full
+    concurrency (every flow at n_max on every stage) and sum the per-flow
+    end-to-end bottlenecks — the topology generalization of
+    ``fleet_achievable`` (0 when no flow is active)."""
+    n_flows = paths.onpath.shape[-2]
+    threads = jnp.full((n_flows, 3), params.n_max, jnp.float32)
+    rates = _topology_substep_rates(params, graph, paths, threads, flows,
+                                    jnp.asarray(t, jnp.float32), 1,
+                                    objectives)                # (1, F, 3)
+    return jnp.min(rates[0], axis=-1).sum()

@@ -6,14 +6,19 @@ conditions, driven from ONE definition into all three layers —
   families.py   the generators: static, step, diurnal, bursty, square_wave,
                 brownout, random_walk — plus the FLOW-ARRIVAL families
                 (always_on, staggered_start, poisson_arrivals, flash_crowd)
-                that populate a multi-flow fleet over time
+                that populate a multi-flow fleet over time, and the
+                TOPOLOGY families (regional_diurnal, link_failover,
+                cross_traffic) that compile to per-link graphs + routes
   spec.py       ScenarioSpec (JSON scenario files) + domain-randomized
                 batch sampling (conditions, fleet arrivals, and per-flow
-                objectives: priority tiers / deadlines / rate floors)
+                objectives: priority tiers / deadlines / rate floors);
+                TopologySpec + sample_topology_batch for the multi-link
+                layer (link graphs, routes)
   driver.py     ScenarioDriver: replay against the live TransferEngine
                 (or a SharedLink — anything with retunable ``throttles``)
   evaluate.py   scoring harness vs static / exploration-only baselines,
-                single-flow and fleet (aggregate utilization + Jain)
+                single-flow, fleet, and topology (aggregate utilization +
+                Jain + failover recovery time)
 
 Sim side: repro.core.simulator.env_step(..., table=...) and the fleet twin
 repro.core.fleet.fleet_step(..., flows=...); training side:
@@ -24,13 +29,17 @@ from repro.scenarios.schedule import (ScheduleTable, make_table,
                                       constant_table, schedule_at,
                                       stack_tables, table_to_numpy, peak_bw,
                                       bottleneck_trace, horizon_seconds)
-from repro.scenarios.families import FAMILIES, ARRIVAL_FAMILIES
+from repro.scenarios.families import (FAMILIES, ARRIVAL_FAMILIES,
+                                      TOPOLOGY_FAMILIES)
 from repro.scenarios.spec import (ScenarioSpec, default_specs,
                                   sample_scenario_batch, arrival_schedule,
-                                  sample_fleet_batch, sample_objectives)
+                                  sample_fleet_batch, sample_objectives,
+                                  TopologySpec, sample_topology_batch)
 from repro.scenarios.driver import ScenarioDriver
 from repro.scenarios.evaluate import (StaticController, exploration_baseline,
                                       static_baseline, run_in_dynamic_sim,
                                       evaluate_scenario, default_params,
                                       EvalResult, run_fleet_in_dynamic_sim,
-                                      FleetEvalResult)
+                                      FleetEvalResult,
+                                      run_topology_in_dynamic_sim,
+                                      TopologyEvalResult)

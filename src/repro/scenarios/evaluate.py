@@ -40,6 +40,8 @@ from repro.core.controller import AutoMDTController, FleetPolicy
 from repro.core.fleet import (FlowSchedule, FlowObjective, jain_index,
                               fleet_reset, fleet_step, fleet_observe,
                               fleet_achievable)
+from repro.core.topology import (topology_reset, topology_step,
+                                 topology_observe, topology_achievable)
 from repro.core.simulator import (SimParams, make_env_params, env_reset,
                                   env_step, SimEnv)
 from repro.core.utility import utility as utility_fn, K_DEFAULT
@@ -309,6 +311,106 @@ def _deadline_hits(goodput, objectives: FlowObjective, duration):
         if k > 0 and cum[k - 1, f] >= demand[f] - 1e-6:
             hits += 1
     return hits, total
+
+
+@dataclass
+class TopologyEvalResult:
+    scenario: str
+    controller: str
+    utilization: float   # total delivered / integrated achievable over paths
+    jain: float          # time-mean Jain index over contended steps
+    delivered: float     # Gbit, summed over flows
+    mean_active: float   # mean number of active flows per step
+    recovery_s: float | None  # link_failover: sim-seconds from the failure
+    #                           to the fleet re-reaching recovery_frac of
+    #                           achievable (None: never / not a failover)
+    goodput: np.ndarray = field(repr=False)   # (steps, F) per-flow write tps
+    threads: np.ndarray = field(repr=False)   # (steps, F, 3)
+
+
+def run_topology_in_dynamic_sim(tspec, flows: FlowSchedule, params, actor, *,
+                                steps=None, seed=7, label=None,
+                                objectives: FlowObjective = None,
+                                recovery_frac=0.7):
+    """F flows over a multi-link TopologySpec. ``actor`` is a shared
+    ``FleetPolicy`` (fed ``topology_observe`` matrices under its own spec —
+    a topology-blind FLEET_OBS policy simply never sees the topo dims) or a
+    list of F independent per-flow controllers. Utilization is total
+    delivered over the integrated path-aware achievable; Jain averages over
+    steps where ≥ 2 flows are active. On the ``link_failover`` family,
+    ``recovery_s`` is how long after the failure the fleet takes to climb
+    back to ``recovery_frac`` of the (post-failure) achievable rate — the
+    metric a re-routing policy is supposed to win."""
+    graph, paths = tspec.compile()
+    n_flows = flows.n_flows
+    duration = float(params.duration)
+    steps = steps or int(round(tspec.horizon / duration))
+    t_start = np.asarray(flows.t_start)
+    t_end = np.asarray(flows.t_end)
+    t_fail = (float(np.asarray(paths.bin_seconds))
+              if tspec.family == "link_failover" else None)
+
+    st = topology_reset(params, jax.random.PRNGKey(seed), n_flows,
+                        flows=flows, graph=graph, paths=paths,
+                        objectives=objectives)
+    shared = isinstance(actor, FleetPolicy)
+    if shared:
+        actor.reset()
+    else:
+        for c in actor:
+            if hasattr(c, "reset"):
+                c.reset()
+    goodput, threads_hist, jains, achs = [], [], [], []
+    n_active_hist = []
+    recovery = None
+    for _ in range(steps):
+        if shared:
+            obs = topology_observe(params, st, flows=flows, graph=graph,
+                                   paths=paths,
+                                   spec=actor.obs_spec._replace(history=1),
+                                   objectives=objectives)
+            acts = actor.act(np.asarray(obs))
+        else:
+            acts = []
+            for f, ctrl in enumerate(actor):
+                o = _flow_obs_dict(params, st, f)
+                if isinstance(ctrl, AutoMDTController):
+                    acts.append(ctrl.step(o))
+                else:
+                    acts.append(ctrl.update(o["throughputs"]))
+            acts = np.asarray(acts, float)
+        st, _, _ = topology_step(params, st, jnp.asarray(acts, jnp.float32),
+                                 flows=flows, graph=graph, paths=paths,
+                                 objectives=objectives)
+        t_mid = float(st.t) - 0.5 * duration
+        active = ((t_mid >= t_start) & (t_mid < t_end)).astype(float)
+        g = np.asarray(st.throughputs[:, 2])
+        ach = float(topology_achievable(params, graph, paths, flows, t_mid,
+                                        objectives=objectives))
+        goodput.append(g)
+        threads_hist.append(np.asarray(st.threads))
+        achs.append(ach)
+        n_active_hist.append(active.sum())
+        if active.sum() >= 2:
+            jains.append(float(jain_index(g, active)))
+        if (t_fail is not None and recovery is None and t_mid >= t_fail
+                and g.sum() >= recovery_frac * max(ach, 1e-9)):
+            recovery = t_mid + 0.5 * duration - t_fail
+    goodput = np.asarray(goodput)
+    delivered = float(goodput.sum() * duration)
+    achievable = float(np.sum(achs) * duration)
+    return TopologyEvalResult(
+        scenario=tspec.name,
+        controller=label or (type(actor).__name__ if shared
+                             else type(actor[0]).__name__),
+        utilization=min(delivered / max(achievable, 1e-9), 1.0),
+        jain=float(np.mean(jains)) if jains else 1.0,
+        delivered=delivered,
+        mean_active=float(np.mean(n_active_hist)),
+        recovery_s=recovery,
+        goodput=goodput,
+        threads=np.asarray(threads_hist),
+    )
 
 
 def evaluate_scenario(spec, agent_controller, *, params=None, steps=None,

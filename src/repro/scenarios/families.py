@@ -28,6 +28,23 @@ activity windows over the horizon, consumed as a
                    the run at t=0 so the fleet is never empty)
   flash_crowd      one long-running flow; the rest pile on together
                    mid-run and leave together (the Globus-endpoint rush)
+
+TOPOLOGY families (the multi-link layer, repro.core.topology) are a third
+axis: the WORLD becomes a LinkGraph of E per-link tables plus a routing
+matrix. Each returns ``(tpt[E,T,3], bw[E,T,3], onpath[2,F,E],
+route_bin_seconds)`` — the canonical TWO route bins (static families repeat
+the same route in both bins so batches of mixed families stack; the lookup
+clips, so semantics are unchanged):
+
+  regional_diurnal  every link runs the diurnal dip OUT OF PHASE (phase
+                    2*pi*e/E — the day reaches each region hours apart);
+                    flows traverse seeded contiguous runs of links
+  link_failover     all flows start on the primary link; at ``at_frac`` it
+                    collapses and the routes move to narrower standby
+                    link(s) — the mid-transfer re-route regime
+  cross_traffic     a series path (every flow crosses every link); seeded
+                    bursts steal one link's capacity while the others get
+                    headroom — the binding constraint MOVES between links
 """
 
 from __future__ import annotations
@@ -234,4 +251,104 @@ ARRIVAL_FAMILIES = {
     "staggered_start": staggered_start,
     "poisson_arrivals": poisson_arrivals,
     "flash_crowd": flash_crowd,
+}
+
+
+# ---------------------------------------------------------------------------
+# Topology families (the multi-link layer): per-link schedules + routes
+# ---------------------------------------------------------------------------
+
+def _static_routes(onpath):
+    """Repeat a static (F, E) route in both canonical route bins."""
+    return np.stack([onpath, onpath]).astype(np.float32)
+
+
+def regional_diurnal(n_links, n_flows, horizon, bin_seconds, base_tpt,
+                     base_bw, seed=0, *, depth=0.6, period_frac=1.0,
+                     path_len=2, mode="tpt"):
+    """E regional links, each running the ``diurnal`` dip OUT OF PHASE
+    (phase 2*pi*e/E): the day reaches each region hours apart, so a path's
+    binding link rotates around the graph. Each flow traverses a seeded
+    contiguous run of ``path_len`` links (routes are static — both route
+    bins identical)."""
+    rng = np.random.default_rng(seed)
+    tables = [diurnal(horizon, bin_seconds, base_tpt, base_bw,
+                      depth=depth, period_frac=period_frac,
+                      phase=2 * np.pi * e / n_links, mode=mode)
+              for e in range(n_links)]
+    tpt = np.stack([t for t, _ in tables])
+    bw = np.stack([b for _, b in tables])
+    L = min(max(int(path_len), 1), n_links)
+    onpath = np.zeros((n_flows, n_links), np.float32)
+    for f in range(n_flows):
+        e0 = int(rng.integers(0, n_links - L + 1))
+        onpath[f, e0:e0 + L] = 1.0
+    return tpt, bw, _static_routes(onpath), horizon / 2.0
+
+
+def link_failover(n_links, n_flows, horizon, bin_seconds, base_tpt,
+                  base_bw, seed=0, *, at_frac=0.5, degrade=0.05,
+                  backup_factor=0.45):
+    """All flows start on the wide primary (link 0); at ``at_frac`` of the
+    horizon the primary collapses to ``degrade`` of its capacity and the
+    routes MOVE to the standby link(s) — each only ``backup_factor`` as
+    wide, so the fleet must re-split a much narrower pool mid-transfer.
+    Route bin 0 is the primary path, bin 1 the failover assignment
+    (round-robin over the standbys); ``route_bin_seconds`` is the failure
+    time. n_links=1 degenerates to a collapse with nowhere to go (both
+    route bins stay on link 0)."""
+    T, tpt0, bw0 = _base(horizon, bin_seconds, base_tpt, base_bw)
+    cut = min(int(round(at_frac * T)), T - 1)
+    tpt = np.stack([tpt0.copy() for _ in range(n_links)])
+    bw = np.stack([bw0.copy() for _ in range(n_links)])
+    # the primary collapses at the cut (capacity loss: everything moves)
+    _scale(tpt[0], bw[0], slice(cut, T), slice(None), degrade, "both")
+    for e in range(1, n_links):  # standbys: narrower, but steady
+        _scale(tpt[e], bw[e], slice(0, T), slice(None), backup_factor,
+               "both")
+    primary = np.zeros((n_flows, n_links), np.float32)
+    backup = np.zeros((n_flows, n_links), np.float32)
+    if n_flows:
+        primary[:, 0] = 1.0
+        if n_links > 1:
+            backup[np.arange(n_flows), 1 + np.arange(n_flows)
+                   % (n_links - 1)] = 1.0
+        else:
+            backup[:, 0] = 1.0
+    routes = np.stack([primary, backup]).astype(np.float32)
+    return tpt, bw, routes, at_frac * horizon
+
+
+def cross_traffic(n_links, n_flows, horizon, bin_seconds, base_tpt,
+                  base_bw, seed=0, *, load=0.6, burst_prob=0.25,
+                  mean_len=3, headroom=1.25, mode="tpt"):
+    """A SERIES path: every flow traverses every link (source site ->
+    WAN -> destination site). One seeded link carries ``bursty`` cross
+    traffic stealing ``load`` of its capacity; the other links get
+    ``headroom`` extra so the binding constraint MOVES onto the congested
+    segment during bursts and off it between them. Routes are static all
+    ones (both route bins identical)."""
+    rng = np.random.default_rng(seed)
+    target = int(rng.integers(0, n_links))
+    T = max(int(round(horizon / bin_seconds)), 1)
+    tpt, bw = [], []
+    for e in range(n_links):
+        if e == target:
+            t_e, b_e = bursty(horizon, bin_seconds, base_tpt, base_bw,
+                              seed=seed + 1, burst_prob=burst_prob,
+                              load=load, mean_len=mean_len, mode=mode)
+        else:
+            _, t_e, b_e = _base(horizon, bin_seconds, base_tpt, base_bw)
+            _scale(t_e, b_e, slice(0, T), slice(None), headroom, "both")
+        tpt.append(t_e)
+        bw.append(b_e)
+    onpath = np.ones((n_flows, n_links), np.float32)
+    return (np.stack(tpt), np.stack(bw), _static_routes(onpath),
+            horizon / 2.0)
+
+
+TOPOLOGY_FAMILIES = {
+    "regional_diurnal": regional_diurnal,
+    "link_failover": link_failover,
+    "cross_traffic": cross_traffic,
 }

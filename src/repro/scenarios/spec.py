@@ -25,7 +25,11 @@ import numpy as np
 from repro.core.fleet import (make_flow_schedule, stack_flow_schedules,
                               make_flow_objective, default_objectives,
                               stack_flow_objectives, PRIORITY_TIERS)
-from repro.scenarios.families import FAMILIES, ARRIVAL_FAMILIES
+from repro.core.topology import (LinkGraph, PathSpec, Topology,
+                                 make_link_graph, make_path_spec,
+                                 stack_topologies)
+from repro.scenarios.families import (FAMILIES, ARRIVAL_FAMILIES,
+                                      TOPOLOGY_FAMILIES)
 from repro.scenarios.schedule import ScheduleTable, make_table, stack_tables
 
 DEFAULT_TPT = (0.2, 0.15, 0.2)   # per-thread Gbit/s (benchmarks/common.py
@@ -183,6 +187,127 @@ def sample_fleet_batch(n, n_flows, *, arrival_families=None,
             n_flows, seed=int(orng.integers(0, 2 ** 31 - 1)),
             horizon=horizon, base_bw=base_bw, **kw) for _ in range(n)]
     return specs, tables, stack_flow_schedules(flows), \
+        stack_flow_objectives(objectives)
+
+
+@dataclass
+class TopologySpec:
+    """The multi-link twin of ScenarioSpec: family + knobs + seed compiles
+    to a (LinkGraph, PathSpec) pair — E per-link condition tables plus the
+    time-varying routing matrix. Same JSON round-trip contract
+    (``.topology.json``); same three consumers (sim, training batches, and
+    the live MultiLink replay via per-link ScenarioDrivers)."""
+
+    family: str
+    name: str = ""
+    seed: int = 0
+    n_links: int = 2
+    n_flows: int = 4
+    horizon: float = 60.0
+    bin_seconds: float = 1.0
+    base_tpt: tuple = DEFAULT_TPT
+    base_bw: tuple = DEFAULT_BW
+    params: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.family not in TOPOLOGY_FAMILIES:
+            raise ValueError(f"unknown topology family {self.family!r}; "
+                             f"have {sorted(TOPOLOGY_FAMILIES)}")
+        if self.n_links < 1:
+            raise ValueError("a topology needs at least one link")
+        if not self.name:
+            self.name = f"{self.family}-{self.seed}"
+
+    def arrays(self):
+        """Raw numpy (tpt[E,T,3], bw[E,T,3], onpath[2,F,E],
+        route_bin_seconds) — oracle & live-replay side."""
+        fn = TOPOLOGY_FAMILIES[self.family]
+        return fn(self.n_links, self.n_flows, self.horizon,
+                  self.bin_seconds, list(self.base_tpt), list(self.base_bw),
+                  seed=self.seed, **self.params)
+
+    def compile(self):
+        """(LinkGraph, PathSpec) jnp pair — the simulator/training side."""
+        tpt, bw, onpath, route_bin = self.arrays()
+        return (make_link_graph(tpt, bw, self.bin_seconds),
+                make_path_spec(onpath, route_bin))
+
+    def topology(self) -> Topology:
+        return Topology(*self.compile())
+
+    # -- topology files ---------------------------------------------------
+    def to_dict(self):
+        d = asdict(self)
+        d["base_tpt"] = list(self.base_tpt)
+        d["base_bw"] = list(self.base_bw)
+        return d
+
+    def to_json(self, path=None):
+        s = json.dumps(self.to_dict(), indent=2, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s
+
+    @classmethod
+    def from_dict(cls, d):
+        d = dict(d)
+        d["base_tpt"] = tuple(d.get("base_tpt", DEFAULT_TPT))
+        d["base_bw"] = tuple(d.get("base_bw", DEFAULT_BW))
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s_or_path):
+        s = s_or_path
+        if not s.lstrip().startswith("{"):
+            with open(s_or_path) as f:
+                s = f.read()
+        return cls.from_dict(json.loads(s))
+
+
+def sample_topology_batch(n, n_flows, *, n_links=2, families=None,
+                          arrival_families=None, seed=0, horizon=60.0,
+                          bin_seconds=1.0, base_tpt=DEFAULT_TPT,
+                          base_bw=DEFAULT_BW, jitter=0.25,
+                          objective_mix=None):
+    """Domain randomization for topology training: ``n`` (link graph +
+    routes, arrival schedule, objective set) triples — graphs drawn over
+    the topology ``families`` with randomized seeds and per-stage jitter
+    (the graph twin of ``sample_scenario_batch``), arrivals and objectives
+    drawn exactly like ``sample_fleet_batch`` from their own independent
+    streams (0x70B0 / 0x5EED / 0x0BB1 offsets — adding any one axis never
+    perturbs the others). All batched outputs share one shape for any n,
+    so the training step never retraces. Deterministic in ``seed``.
+
+    Returns ``(specs, Topology (batched), flows, objectives)``."""
+    families = list(families or TOPOLOGY_FAMILIES)
+    rng = np.random.default_rng(seed + 0x70B0)
+    specs = []
+    for i in range(n):
+        fam = families[int(rng.integers(0, len(families)))]
+        scale = 1.0 + jitter * rng.uniform(-1.0, 1.0, size=3)
+        specs.append(TopologySpec(
+            family=fam, seed=int(rng.integers(0, 2 ** 31 - 1)),
+            name=f"{fam}-dr{i}", n_links=n_links, n_flows=n_flows,
+            horizon=horizon, bin_seconds=bin_seconds,
+            base_tpt=tuple(float(t * s) for t, s in zip(base_tpt, scale)),
+            base_bw=tuple(base_bw)))
+    topology = stack_topologies([s.topology() for s in specs])
+    arrivals = list(arrival_families or ARRIVAL_FAMILIES)
+    arng = np.random.default_rng(seed + 0x5EED)
+    flows = [arrival_schedule(arrivals[int(arng.integers(0, len(arrivals)))],
+                              n_flows, horizon=horizon,
+                              seed=int(arng.integers(0, 2 ** 31 - 1)))
+             for _ in range(n)]
+    if objective_mix is None:
+        objectives = [default_objectives(n_flows) for _ in range(n)]
+    else:
+        kw = {} if objective_mix is True else dict(objective_mix)
+        orng = np.random.default_rng(seed + 0x0BB1)
+        objectives = [sample_objectives(
+            n_flows, seed=int(orng.integers(0, 2 ** 31 - 1)),
+            horizon=horizon, base_bw=base_bw, **kw) for _ in range(n)]
+    return specs, topology, stack_flow_schedules(flows), \
         stack_flow_objectives(objectives)
 
 

@@ -8,4 +8,6 @@ from repro.transfer.engine import (
     StageThrottle,
     FlowGate,
     SharedLink,
+    PathGate,
+    MultiLink,
 )

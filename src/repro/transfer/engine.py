@@ -28,6 +28,7 @@ import os
 import threading
 import time
 from dataclasses import dataclass
+from types import SimpleNamespace
 
 
 _UNSET = object()
@@ -104,6 +105,18 @@ class StageThrottle:
                 self._tokens -= nbytes  # may go negative: debt
                 return True, None
             return False, (need_tokens - self._tokens) / agg
+
+    def _refund(self, nbytes):
+        """Return tokens withdrawn by a granted ``try_acquire`` that a
+        composite caller (``PathGate``) could not use because a LATER bucket
+        in its chain refused — the all-or-nothing acquire over a link path
+        must not burn capacity on links it didn't traverse. Clamped to the
+        burst so a refund never manufactures tokens beyond one second of
+        the cap."""
+        with self._lock:
+            if self.aggregate_bps:
+                self._tokens = min(self._tokens + float(nbytes),
+                                   float(self.aggregate_bps))
 
     def _per_thread_sleep(self, nbytes):
         with self._lock:
@@ -662,6 +675,196 @@ class SharedLink:
     def observe(self):
         """Per-flow observe() dicts, in attach order — the input shape
         FleetController.step expects."""
+        return [e.observe() for e in self.engines]
+
+    def bytes_written(self):
+        return sum(e.bytes_written() for e in self.engines)
+
+    def close(self):
+        for e in self.engines:
+            e.close()
+
+
+class PathGate:
+    """A chunk must clear EVERY link on its flow's path: the composite
+    throttle a ``MultiLink`` hands a TransferEngine stage. ``acquire`` is
+    all-or-nothing — it polls ``try_acquire`` on each pool in path order
+    and, if any pool refuses, REFUNDS the pools already granted before
+    backing off, so a flow blocked at its bottleneck link never burns
+    capacity on (= never steals tokens from) the other links it crosses.
+    The effective rate is the min over the path's pools — the live twin of
+    the simulator's min-over-links combine in ``_topology_substep_rates``.
+
+    ``set_pools`` swaps the path at runtime (thread-safe): a live reroute,
+    the engine's workers pick up the new pools on their next chunk."""
+
+    def __init__(self, pools):
+        self._lock = threading.Lock()
+        self._pools = list(pools)
+
+    def set_pools(self, pools):
+        with self._lock:
+            self._pools = list(pools)
+
+    def pools(self):
+        with self._lock:
+            return list(self._pools)
+
+    def set_rates(self, **kw):
+        """Retunes every pool on the current path (ScenarioDriver contract);
+        per-link retuning goes through ``MultiLink.link(e)`` instead."""
+        for p in self.pools():
+            p.set_rates(**kw)
+
+    def rates(self):
+        """The binding pool's rates: the smallest aggregate cap on the path
+        (None = uncapped; any zero reports zero — an outage anywhere on the
+        path is an outage for the flow)."""
+        pools = self.pools()
+        if not pools:
+            return None, None
+        agg = [p.rates()[0] for p in pools]
+        per = [p.rates()[1] for p in pools]
+        pick = lambda vs: (0 if any(v == 0 for v in vs) else
+                           None if all(v is None for v in vs) else
+                           min(v for v in vs if v is not None))
+        return pick(agg), pick(per)
+
+    def acquire(self, nbytes, should_abort=None):
+        while True:
+            if should_abort is not None and should_abort():
+                return None
+            pools = self.pools()
+            if not pools:  # empty path: unthrottled (a None throttle)
+                return 0.0
+            granted, sleep = [], 0.0
+            for p in pools:
+                s = p.try_acquire(nbytes)
+                if s is None:
+                    for g in granted:
+                        g._refund(nbytes)
+                    break
+                granted.append(p)
+                sleep = max(sleep, s)
+            else:
+                return sleep
+            time.sleep(0.01)
+
+    def try_acquire(self, nbytes):
+        pools = self.pools()
+        granted, sleep = [], 0.0
+        for p in pools:
+            s = p.try_acquire(nbytes)
+            if s is None:
+                for g in granted:
+                    g._refund(nbytes)
+                return None
+            granted.append(p)
+            sleep = max(sleep, s)
+        return sleep
+
+
+class MultiLink:
+    """E bottlenecks, many transfers over link paths: the live twin of the
+    topology core (``repro.core.topology``). Each link owns one pool of
+    per-stage StageThrottles; ``attach(..., path=[0, 2])`` builds a
+    TransferEngine whose stages draw through a ``PathGate`` over THAT
+    path's pools — every chunk pays every link it crosses, the flow runs at
+    the min over its links, and contention on each link follows thread
+    counts, exactly like the per-link work-conserving solve in the sim
+    (topology-trained policies drop onto a MultiLink unchanged, via
+    ``TopologyController``).
+
+        net = MultiLink(3, aggregate_bps=cap)          # 3 links, same cap
+        e0 = net.attach(src0, sink0, path=[0, 1], n_max=40)
+        e1 = net.attach(src1, sink1, path=[0, 2], n_max=40)
+        net.reroute(e1, [2])                           # live failover
+
+    A ScenarioDriver replays per-link conditions via ``net.link(e)`` (a
+    retunable ``throttles`` view of one link's pools). ``aggregate_bps`` /
+    ``per_thread_bps``: a list of E per-stage 3-tuples, or one 3-tuple /
+    scalar applied to every link."""
+
+    def __init__(self, n_links, aggregate_bps=None, per_thread_bps=None):
+        if n_links < 1:
+            raise ValueError("MultiLink needs n_links >= 1")
+
+        def _per_link(v):
+            if isinstance(v, (list,)) and len(v) == n_links:
+                rows = v
+            else:
+                rows = [v] * n_links
+            out = []
+            for r in rows:
+                if r is None or isinstance(r, (int, float)):
+                    out.append((r, r, r))
+                else:
+                    out.append(tuple(r))
+            return out
+
+        aggs, pers = _per_link(aggregate_bps), _per_link(per_thread_bps)
+        self.links = [tuple(StageThrottle(a, p) for a, p in zip(agg, per))
+                      for agg, per in zip(aggs, pers)]
+        self.engines = []
+        self._paths = {}  # id(engine) -> (path tuple, per-stage PathGates)
+
+    @property
+    def n_links(self):
+        return len(self.links)
+
+    def link(self, e):
+        """One link's pools as a retunable ``throttles`` object — what a
+        ScenarioDriver needs to replay THIS link's schedule."""
+        return SimpleNamespace(throttles=list(self.links[e]))
+
+    def _check_path(self, path):
+        path = [int(e) for e in path]
+        if not path:
+            raise ValueError("path needs at least one link")
+        if len(set(path)) != len(path):
+            raise ValueError(f"path revisits a link: {path}")
+        for e in path:
+            if not 0 <= e < self.n_links:
+                raise ValueError(f"link {e} out of range "
+                                 f"[0, {self.n_links})")
+        return path
+
+    def attach(self, source, sink, *, path, **engine_kw):
+        """Create a TransferEngine routed over ``path`` (link indices, in
+        traversal order). Per-engine knobs pass through."""
+        path = self._check_path(path)
+        gates = tuple(
+            PathGate([self.links[e][stage] for e in path])
+            for stage in range(3))
+        eng = TransferEngine(source, sink, throttles=gates, **engine_kw)
+        self.engines.append(eng)
+        self._paths[id(eng)] = (tuple(path), gates)
+        return eng
+
+    def reroute(self, engine, path):
+        """Swap ``engine``'s path live: its PathGates atomically adopt the
+        new links' pools; workers mid-acquire pick them up on the next poll
+        tick (blocked-at-a-dead-link flows unpark onto the backup)."""
+        path = self._check_path(path)
+        old_path, gates = self._paths[id(engine)]
+        for stage, gate in enumerate(gates):
+            gate.set_pools([self.links[e][stage] for e in path])
+        self._paths[id(engine)] = (tuple(path), gates)
+
+    def path_of(self, engine):
+        return self._paths[id(engine)][0]
+
+    def onpath(self):
+        """(F, E) 0/1 route matrix in attach order — what
+        ``TopologyController.set_paths`` / ``topology_features`` take."""
+        mat = [[0.0] * self.n_links for _ in self.engines]
+        for f, e in enumerate(self.engines):
+            for l in self._paths[id(e)][0]:
+                mat[f][l] = 1.0
+        return mat
+
+    def observe(self):
+        """Per-flow observe() dicts, in attach order."""
         return [e.observe() for e in self.engines]
 
     def bytes_written(self):

@@ -23,6 +23,8 @@ from repro.core.fleet import (FleetState, make_flow_schedule, always_on,
 from repro.core.schedule import make_table
 from repro.core.simulator import (make_env_params, env_reset, env_step,
                                   FLEET_OBS)
+from repro.core.topology import (single_link_graph, all_links_path,
+                                 _topology_substep_rates)
 
 # small, fixed shape pools keep the jitted paths to a handful of compiles
 # across all 200+ examples (values are traced, shapes are static)
@@ -113,6 +115,63 @@ def test_inactive_flows_deliver_exactly_zero(data):
         assert np.asarray(tps[1:]).max() == 0.0
         assert np.asarray(bufs[1:]).max() == 0.0
     assert np.isfinite(np.asarray(tps)).all()
+
+
+# ---------------------------------------------------------------------------
+# Topology solve: E=1 embedding is the fleet solve; caps never strand
+# capacity
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_topology_e1_rates_equal_fleet_rates_bitwise(data):
+    """For ANY fleet draw (optionally with floors — caps stay at inf, where
+    the water-fill must be an exact float no-op), the topology solve on the
+    single-link graph equals `_fleet_substep_rates` with atol=0."""
+    params, table, flows, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    obj = data.draw(st.one_of(st.none(), st.builds(
+        make_flow_objective,
+        rate_floor=st.lists(st.floats(0.0, 1.5), min_size=F, max_size=F),
+        weight=st.lists(st.sampled_from([1.0, 2.0, 4.0]),
+                        min_size=F, max_size=F))))
+    t0 = jnp.asarray(data.draw(st.floats(0.0, 2.0)), jnp.float32)
+    want = np.asarray(_fleet_substep_rates(params, table, threads, flows,
+                                           t0, SUBSTEPS, obj))
+    got = np.asarray(_topology_substep_rates(
+        params, single_link_graph(table), all_links_path(F, 1), threads,
+        flows, t0, SUBSTEPS, obj))
+    assert np.array_equal(want, got)
+
+
+@given(data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_topology_caps_strand_no_capacity(data):
+    """Work conservation, the property the fleet solve lacks: when demand
+    suffices, a saturated link moves min(bw, sum of caps) even though some
+    flows are capped — the capped flows' unused share is REDISTRIBUTED,
+    not stranded. Demand abundance is forced (30 threads each, tpt >= 0.1,
+    bw <= 2.0, so uncapped per-link demand >= 3 per stage > bw)."""
+    F = data.draw(st.integers(2, 4))
+    params = make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1],
+                             cap=[2.0, 2.0], n_max=50)
+    table = make_table(
+        np.full((1, 3), data.draw(st.floats(0.1, 0.5)), np.float32),
+        np.full((1, 3), data.draw(bw_st), np.float32), bin_seconds=1.0)
+    caps = [data.draw(st.one_of(st.just(np.inf), st.floats(0.05, 1.5)))
+            for _ in range(F)]
+    obj = make_flow_objective(rate_cap=caps)
+    threads = jnp.full((F, 3), 30.0)
+    rates = np.asarray(_topology_substep_rates(
+        params, single_link_graph(table), all_links_path(F, 1), threads,
+        always_on(F), jnp.zeros(()), 2, obj))
+    per_flow_cap = np.minimum(np.asarray(caps), 30.0 * 0.1)  # cap vs demand
+    deliverable = min(float(np.asarray(table.bw).min()),
+                      float(per_flow_cap.sum()))
+    total = rates.sum(axis=1)  # (S, 3)
+    np.testing.assert_allclose(total, deliverable, atol=1e-4, rtol=1e-4)
+    # and caps are still individually honored
+    assert (rates <= np.asarray(caps)[None, :, None] + 1e-5).all()
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,8 @@ import numpy as np
 import pytest
 
 from repro.scenarios import (ARRIVAL_FAMILIES, arrival_schedule,
-                             sample_fleet_batch, sample_objectives)
+                             sample_fleet_batch, sample_objectives,
+                             TopologySpec, sample_topology_batch)
 
 _FAMS = ("always_on", "staggered_start", "poisson_arrivals", "flash_crowd")
 
@@ -40,6 +41,15 @@ out["batch"] = {"tpt": dump(tables.tpt), "bw": dump(tables.bw),
                 "weight": dump(objs.weight), "deadline": dump(objs.deadline),
                 "demand": dump(objs.demand),
                 "rate_floor": dump(objs.rate_floor)}
+from repro.scenarios import sample_topology_batch
+tspecs, topo, tflows, tobjs = sample_topology_batch(
+    3, 4, n_links=3, seed=23, horizon=30.0, objective_mix=True)
+out["topology"] = {"tpt": dump(topo.graph.tpt), "bw": dump(topo.graph.bw),
+                   "onpath": dump(topo.paths.onpath),
+                   "route_bin": dump(topo.paths.bin_seconds),
+                   "t_start": dump(tflows.t_start),
+                   "deadline": dump(tobjs.deadline),
+                   "specs": [s.to_dict() for s in tspecs]}
 print(json.dumps(out))
 """ % (_FAMS,)
 
@@ -115,3 +125,47 @@ def test_all_arrival_families_reject_unknown_and_accept_empty():
     for fam in ARRIVAL_FAMILIES:
         s = arrival_schedule(fam, 0, horizon=30.0)
         assert s.t_start.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Topology sampling
+# ---------------------------------------------------------------------------
+
+def test_topology_different_seeds_move_the_graphs():
+    _, t1, f1, _ = sample_topology_batch(3, 4, n_links=2, seed=1,
+                                         horizon=30.0)
+    _, t2, f2, _ = sample_topology_batch(3, 4, n_links=2, seed=2,
+                                         horizon=30.0)
+    assert not np.array_equal(np.asarray(t1.graph.tpt),
+                              np.asarray(t2.graph.tpt))
+    assert not np.array_equal(np.asarray(f1.t_start), np.asarray(f2.t_start))
+    # ...while the SAME seed reproduces in-process too
+    _, t1b, _, _ = sample_topology_batch(3, 4, n_links=2, seed=1,
+                                         horizon=30.0)
+    assert np.array_equal(np.asarray(t1.graph.tpt), np.asarray(t1b.graph.tpt))
+    assert np.array_equal(np.asarray(t1.paths.onpath),
+                          np.asarray(t1b.paths.onpath))
+
+
+def test_topology_degenerates_and_json_round_trip():
+    # 0 flows: valid empty routing, not a crash
+    _, topo, flows, _ = sample_topology_batch(2, 0, n_links=2, seed=5,
+                                              horizon=30.0)
+    assert np.asarray(topo.paths.onpath).shape[2] == 0
+    assert np.asarray(flows.t_start).shape == (2, 0)
+    # single-edge graphs: every family degrades to one link cleanly
+    _, topo1, _, _ = sample_topology_batch(3, 2, n_links=1, seed=5,
+                                           horizon=30.0)
+    assert np.asarray(topo1.graph.tpt).shape[1] == 1
+    assert (np.asarray(topo1.paths.onpath) == 1.0).all()  # nowhere else
+    # specs survive the JSON round trip bit-for-bit
+    spec = TopologySpec(family="link_failover", seed=9, n_links=3,
+                        n_flows=4, horizon=30.0)
+    back = TopologySpec.from_json(spec.to_json())
+    assert back == spec
+    g1, p1 = spec.compile()
+    g2, p2 = back.compile()
+    assert np.array_equal(np.asarray(g1.tpt), np.asarray(g2.tpt))
+    assert np.array_equal(np.asarray(p1.onpath), np.asarray(p2.onpath))
+    with pytest.raises(ValueError):
+        TopologySpec(family="ring_of_fire", seed=0)
