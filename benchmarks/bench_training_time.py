@@ -96,6 +96,78 @@ def policy_rows(rows, *, n_envs=16, iters=8):
     return rows
 
 
+def fleet_scaling_rows(rows, *, Fs=(1, 8, 64, 512, 4096), iters=5,
+                       substeps=50, pallas_max_f=None):
+    """Fleet scale-out: cost of one jitted ``fleet_step`` at F flows, dense
+    reference vs the sparse compact-active-set solve vs the fused Pallas
+    contention kernel (sparse gather feeding the kernel). The arrival
+    schedule is a Poisson process with short hold windows — Globus-style
+    sparse instantaneous activity, where thousands of flows exist but only
+    a few hundred are live in any one step — so ``max_active`` (sized by
+    ``max_concurrent_flows`` + ``flow_bucket``) is far below F and the
+    sparse path's advantage is structural, not a microbenchmark artifact.
+    Off-TPU the pallas rows run the kernel in interpret mode (correctness
+    reference, NOT representative of compiled TPU cost), so
+    ``pallas_max_f`` caps how far up the F grid they go (None = all)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.fleet import (FlowSchedule, fleet_step, flow_bucket,
+                                  max_concurrent_flows)
+    from repro.core.simulator import make_env_params
+    from repro.scenarios.families import poisson_arrivals
+
+    p = make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1], cap=[2, 2],
+                        n_max=50)
+    per = {}
+    for F in Fs:
+        ts, te = poisson_arrivals(F, 60.0, seed=7, hold_frac=0.01)
+        flows = FlowSchedule(t_start=jnp.asarray(ts), t_end=jnp.asarray(te))
+        A = min(flow_bucket(max_concurrent_flows(flows, window=p.duration)),
+                F)
+        variants = [("dense", "jnp", None), ("sparse", "jnp", A)]
+        if pallas_max_f is None or F <= pallas_max_f:
+            variants.append(("pallas", "pallas", A))
+        from repro.core.fleet import FleetState
+        state = FleetState(
+            buffers=jnp.zeros((F, 2), jnp.float32),
+            threads=jnp.full((F, 3), 8.0),
+            throughputs=jnp.zeros((F, 3), jnp.float32),
+            t=jnp.float32(0.0),
+            prev_throughputs=jnp.zeros((F, 3), jnp.float32),
+            delivered=jnp.zeros((F,), jnp.float32))
+        acts = jnp.full((F, 3), 8.0)
+        for name, backend, ma in variants:
+            # two warm-up calls: the first compiles, the second warms the
+            # returned-state signature (its scalar clock is strong-typed
+            # where the hand-built one is weak) so the timed loop never
+            # retraces
+            st = fleet_step(p, state, acts, flows=flows, substeps=substeps,
+                            backend=backend, max_active=ma)[0]
+            st = fleet_step(p, st, acts, flows=flows, substeps=substeps,
+                            backend=backend, max_active=ma)[0]
+            jax.block_until_ready(st)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                st = fleet_step(p, st, acts, flows=flows, substeps=substeps,
+                                backend=backend, max_active=ma)[0]
+            jax.block_until_ready(st)
+            dt = (time.perf_counter() - t0) / iters
+            per[(F, name)] = dt
+            note = f"A={ma}" if ma is not None else "full F"
+            if name == "pallas" and jax.default_backend() != "tpu":
+                note += ", interpret-mode"
+            rows.append((f"training_time.fleet_step_F{F}_{name}_us",
+                         dt * 1e6,
+                         f"{dt * 1e3:.2f} ms per fleet_step "
+                         f"(F={F}, {note})"))
+        if (F, "sparse") in per:
+            ratio = per[(F, "dense")] / max(per[(F, "sparse")], 1e-12)
+            rows.append((f"training_time.fleet_sparse_speedup_F{F}",
+                         ratio * 1e6,
+                         f"{ratio:.1f}x sparse over dense at F={F}"))
+    return rows
+
+
 def main(rows=None):
     rows = rows if rows is not None else []
     p = make_scenario_env("read")
@@ -121,6 +193,8 @@ def main(rows=None):
     ]
     backend_rows(rows)
     policy_rows(rows)
+    # fleet_scaling_rows runs as its own run.py suite (so --profile can
+    # wrap just the scale-out timeline)
     return rows
 
 

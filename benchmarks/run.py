@@ -42,6 +42,10 @@ that rot without paying for the real numbers.
 ``--json PATH`` additionally writes every row to PATH as JSON — CI uploads
 the quick rows as a ``BENCH_<pr>.json`` artifact per PR, the repo's
 benchmark trajectory (see README).
+
+``--profile DIR`` wraps the fleet-scaling suite in ``jax.profiler.trace``
+and writes the trace to DIR (open with TensorBoard / Perfetto) — the
+scale-out rows are the ones worth a timeline when chasing a regression.
 """
 
 from __future__ import annotations
@@ -67,13 +71,33 @@ def main(argv=None) -> None:
     if "--json" in argv:
         i = argv.index("--json")
         if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
-            sys.exit("usage: run.py [--quick] [--json PATH]")
+            sys.exit("usage: run.py [--quick] [--json PATH] "
+                     "[--profile DIR]")
         json_path = argv[i + 1]
+    profile_dir = None
+    if "--profile" in argv:
+        i = argv.index("--profile")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            sys.exit("usage: run.py [--quick] [--json PATH] "
+                     "[--profile DIR]")
+        profile_dir = argv[i + 1]
     from benchmarks import (bench_training_time, bench_convergence,
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
                             bench_scenarios, bench_fleet, bench_objectives,
                             bench_topology)
+    def _maybe_profiled(fn):
+        """Wrap the fleet-scaling suite in a jax.profiler trace when
+        --profile DIR was given."""
+        if profile_dir is None:
+            return fn
+
+        def wrapped(rows):
+            import jax
+            with jax.profiler.trace(profile_dir):
+                return fn(rows)
+        return wrapped
+
     if quick:
         suites = [
             ("training_time_backends",
@@ -82,6 +106,10 @@ def main(argv=None) -> None:
             ("training_time_policies",
              lambda rows: bench_training_time.policy_rows(rows, n_envs=4,
                                                           iters=2)),
+            ("fleet_scaling_quick",
+             _maybe_profiled(lambda rows: bench_training_time.
+                             fleet_scaling_rows(rows, iters=2,
+                                                pallas_max_f=64))),
             ("scenarios_quick",
              lambda rows: bench_scenarios.main(rows, quick=True)),
             ("fleet_quick",
@@ -94,6 +122,8 @@ def main(argv=None) -> None:
     else:
         suites = [
             ("training_time", bench_training_time.main),
+            ("fleet_scaling",
+             _maybe_profiled(bench_training_time.fleet_scaling_rows)),
             ("convergence", bench_convergence.main),
             ("bottleneck", bench_bottleneck.main),
             ("action_space", bench_action_space.main),

@@ -49,7 +49,9 @@ from repro.core.fleet import (FleetState, FlowSchedule, make_flow_schedule,
                               fleet_interval, fleet_achievable, jain_index,
                               FlowObjective, make_flow_objective,
                               default_objectives, stack_flow_objectives,
-                              objective_features, PRIORITY_TIERS)
+                              objective_features, PRIORITY_TIERS,
+                              flow_bucket, max_concurrent_flows,
+                              pad_flow_schedule, pad_flow_objectives)
 from repro.core.topology import (LinkGraph, PathSpec, Topology,
                                  make_link_graph, single_link_graph,
                                  make_path_spec, all_links_path,
@@ -58,7 +60,7 @@ from repro.core.topology import (LinkGraph, PathSpec, Topology,
                                  link_peak_bw, TopologyState, topology_reset,
                                  topology_step, topology_observe,
                                  topology_interval, topology_features,
-                                 topology_achievable)
+                                 topology_achievable, pad_path_spec)
 from repro.core.simref import EventSimulator
 from repro.core.networks import (policy_init, policy_apply, value_init,
                                  value_apply, rnn_policy_init,

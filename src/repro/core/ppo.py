@@ -50,7 +50,7 @@ bit-for-bit.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace as dc_replace
 from functools import partial
 
 import jax
@@ -58,9 +58,10 @@ import jax.numpy as jnp
 
 from repro.core import networks as nets
 from repro.core.fleet import (fleet_reset, fleet_step, fleet_observe,
-                              always_on)
+                              always_on, flow_bucket, pad_flow_schedule,
+                              pad_flow_objectives)
 from repro.core.topology import (topology_reset, topology_step,
-                                 topology_observe)
+                                 topology_observe, Topology, pad_path_spec)
 from repro.core.schedule import constant_table
 from repro.core.simulator import (env_reset, env_step, observe, ACT_DIM,
                                   ObservationSpec, DEFAULT_OBS,
@@ -124,6 +125,21 @@ class PPOConfig:
     # needs. Irrelevant without objectives — the penalty is masked to
     # exactly 0.0 for flows with no finite deadline+demand, which keeps the
     # objective-free path bit-identical.
+    max_active: int | None = None  # fleet scale-out: static bound on how
+    # many flows can be active in any one step interval — the contention
+    # solve gathers that compact set, contends it, and scatters back
+    # (bitwise-equal to the dense solve), so episode cost scales with the
+    # bound instead of n_flows. Size it with repro.core.fleet.
+    # max_concurrent_flows(flows, window=duration) rounded up by
+    # flow_bucket; None = the dense solve. A bound smaller than the true
+    # peak concurrency silently drops the overflow — it is a promise.
+    pad_flows: bool = False      # fleet scale-out: pad the fleet to the
+    # next power-of-two bucket (flow_bucket(n_flows)) and pad every
+    # resampled FlowSchedule/FlowObjective/PathSpec batch to match, so
+    # sweeping flow counts stops retriggering XLA recompiles. Padded flows
+    # are never active: they move nothing, score exactly zero utility, and
+    # are masked from the Jain term — the reward is unchanged
+    # (property-pinned in tests/test_fleet_scaleout.py).
     param_selection: str = "best_episode"  # | "batch_mean": under domain
     # randomization a single episode's reward mostly measures how lucky the
     # sampled scenario was; the mean over the whole randomized batch is a
@@ -233,7 +249,7 @@ def _rollout(policy_params, env_params, table, key, *, M, substeps, spec,
 
 def _rollout_fleet(policy_params, env_params, table, flows, objectives, key,
                    *, M, substeps, spec, backend, randomize_t0, policy,
-                   n_flows, fairness_coef, deadline_coef):
+                   n_flows, fairness_coef, deadline_coef, max_active=None):
     """One fleet episode: F flows contend for the scheduled capacity, ONE
     shared policy maps each flow's observation row to that flow's action
     (the networks broadcast over the F axis), and every step's reward is
@@ -253,7 +269,8 @@ def _rollout_fleet(policy_params, env_params, table, flows, objectives, key,
     fspec = spec._replace(history=1)
     state = fleet_reset(env_params, k_reset, n_flows, t0, flows=flows,
                         table=table, substeps=substeps, spec=fspec,
-                        backend=backend, objectives=objectives)
+                        backend=backend, objectives=objectives,
+                        max_active=max_active)
     obs0 = fleet_observe(env_params, state, flows=flows, table=table,
                          spec=fspec, objectives=objectives)
     hist0 = jax.vmap(lambda f: history_init(spec, f))(obs0)  # (F, K, D)
@@ -274,7 +291,7 @@ def _rollout_fleet(policy_params, env_params, table, flows, objectives, key,
             env_params, state, action, flows=flows, table=table,
             substeps=substeps, spec=fspec, backend=backend,
             fairness_coef=fairness_coef, objectives=objectives,
-            deadline_coef=deadline_coef)
+            deadline_coef=deadline_coef, max_active=max_active)
         hist = jax.vmap(history_push)(hist, obs_next)
         out = (state, hist, h) if recurrent else (state, hist)
         return out, (obs, action, reward, logp)
@@ -288,7 +305,8 @@ def _rollout_fleet(policy_params, env_params, table, flows, objectives, key,
 
 def _rollout_topology(policy_params, env_params, topo, flows, objectives,
                       key, *, M, substeps, spec, backend, randomize_t0,
-                      policy, n_flows, fairness_coef, deadline_coef):
+                      policy, n_flows, fairness_coef, deadline_coef,
+                      max_active=None):
     """One topology episode: the fleet rollout's multi-link twin. Flows
     traverse the link paths of ``topo`` (a Topology bundle) and contend
     per-link via the work-conserving solve; the per-flow policy/history/
@@ -307,7 +325,8 @@ def _rollout_topology(policy_params, env_params, topo, flows, objectives,
     fspec = spec._replace(history=1)
     state = topology_reset(env_params, k_reset, n_flows, t0, graph=graph,
                            paths=paths, flows=flows, substeps=substeps,
-                           spec=fspec, backend=backend, objectives=objectives)
+                           spec=fspec, backend=backend,
+                           objectives=objectives, max_active=max_active)
     obs0 = topology_observe(env_params, state, graph=graph, paths=paths,
                             flows=flows, spec=fspec, objectives=objectives)
     hist0 = jax.vmap(lambda f: history_init(spec, f))(obs0)  # (F, K, D)
@@ -328,7 +347,7 @@ def _rollout_topology(policy_params, env_params, topo, flows, objectives,
             env_params, state, action, graph=graph, paths=paths, flows=flows,
             substeps=substeps, spec=fspec, backend=backend,
             fairness_coef=fairness_coef, objectives=objectives,
-            deadline_coef=deadline_coef)
+            deadline_coef=deadline_coef, max_active=max_active)
         hist = jax.vmap(history_push)(hist, obs_next)
         out = (state, hist, h) if recurrent else (state, hist)
         return out, (obs, action, reward, logp)
@@ -446,7 +465,8 @@ def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0,
                     backend=cfg.backend, randomize_t0=randomize_t0,
                     policy=cfg.policy, n_flows=cfg.n_flows,
                     fairness_coef=cfg.fairness_coef,
-                    deadline_coef=cfg.deadline_coef)
+                    deadline_coef=cfg.deadline_coef,
+                    max_active=cfg.max_active)
             )(topo, flows, objectives, roll_keys)
             # (E, M, F, ...) / rew (E, M)
         elif fleet:
@@ -457,7 +477,8 @@ def _make_episode_fn(env_params, cfg: PPOConfig, *, randomize_t0,
                     backend=cfg.backend, randomize_t0=randomize_t0,
                     policy=cfg.policy, n_flows=cfg.n_flows,
                     fairness_coef=cfg.fairness_coef,
-                    deadline_coef=cfg.deadline_coef)
+                    deadline_coef=cfg.deadline_coef,
+                    max_active=cfg.max_active)
             )(tables, flows, objectives, roll_keys)
             # (E, M, F, ...) / rew (E, M)
         else:
@@ -549,7 +570,7 @@ def _broadcast_table(table, n_envs):
 def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
               resample=None, flows=None, resample_flows=None,
               objectives=None, resample_objectives=None, topology=None,
-              resample_topology=None, r_max=None, key=None):
+              resample_topology=None, r_max=None, mesh=None, key=None):
     """Algorithm 2, schedule-native. Returns TrainResult with the BEST (not
     last) params.
 
@@ -577,8 +598,18 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
     repro.scenarios.sample_topology_batch) and its per-round redraw. When
     either is given the rollout swaps to the per-link work-conserving
     contention solve (topology_step); ``tables``/``resample`` are ignored
-    and episode start times randomize over the graph horizon."""
+    and episode start times randomize over the graph horizon.
+    ``mesh``: optional 1-D jax Mesh over the flow axis
+    (repro.launch.make_fleet_mesh) — every resampled FlowSchedule /
+    FlowObjective / PathSpec batch is device_put with its F axis sharded
+    (repro.sharding.fleet) before the jitted episode, so GSPMD partitions
+    the rollout across devices. Combine with ``cfg.pad_flows`` so F always
+    divides the mesh. ``cfg.max_active`` flows through to the sparse
+    contention solve (fleet_step/topology_step ``max_active=``)."""
     cfg = cfg or PPOConfig()
+    if cfg.pad_flows and cfg.n_flows > 1:
+        cfg = dc_replace(cfg, n_flows=flow_bucket(cfg.n_flows))
+    pad_to = cfg.n_flows if (cfg.pad_flows and cfg.n_flows > 1) else None
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
     train_state = init_agent(k_init, cfg)
@@ -618,6 +649,24 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
             objectives = resample_objectives(rnd)
         if resample_topology is not None and (topology is None or rnd > 0):
             topology = resample_topology(rnd)
+        if pad_to is not None and flows is not None:
+            flows = pad_flow_schedule(flows, pad_to)
+            objectives = pad_flow_objectives(objectives, pad_to)
+            if topology is not None:
+                topology = Topology(graph=topology.graph,
+                                    paths=pad_path_spec(topology.paths,
+                                                        pad_to))
+        if mesh is not None:
+            from repro.sharding.fleet import (shard_flow_schedule,
+                                              shard_flow_objectives,
+                                              shard_path_spec)
+            if flows is not None:
+                flows = shard_flow_schedule(flows, mesh)
+            objectives = shard_flow_objectives(objectives, mesh)
+            if topology is not None:
+                topology = Topology(graph=topology.graph,
+                                    paths=shard_path_spec(topology.paths,
+                                                          mesh))
         rnd += 1
         key, k = jax.random.split(key)
         train_state, ep_rewards, loss = episode_fn(train_state, tables,

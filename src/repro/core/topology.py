@@ -58,7 +58,8 @@ from repro.core.simulator import (SimParams, ObservationSpec, DEFAULT_OBS,
 from repro.core.fleet import (FlowSchedule, FlowObjective, FleetState,
                               always_on, active_at, default_objectives,
                               fleet_observe, _delivered_or_zeros,
-                              _integrate_fleet_rates, _fleet_reward)
+                              _integrate_fleet_rates, _fleet_reward,
+                              _window_flow_ids, _gather_compact)
 
 # The topology state is the fleet state: per-flow buffers/threads/
 # throughputs, one shared sim clock, per-flow delivered counters. Only the
@@ -196,10 +197,50 @@ def link_peak_bw(graph: LinkGraph):
     return jnp.maximum(jnp.max(graph.bw, axis=(-2, -1)), 1e-9)
 
 
+def _sorted_water_fill(alloc, headroom, w, lam0):
+    """Closed-form fixed point of the F-round spill loop, O(A log A) in the
+    flow axis (axis 1 of the (S, F, E, 3) operands) instead of O(F) dense
+    rounds: the loop converges to ``alloc_f = min(headroom_f, w_f * lam)``
+    with ``lam`` the water level at which the redistributed pool is
+    exhausted (or every cap saturated). Sorting the saturation breakpoints
+    ``r_f = headroom_f / w_f`` and prefix-summing consumption yields
+    ``lam`` directly.
+
+    Bitwise contract: when no cap is finite the round-1 spill is exactly
+    0.0, so ``delta`` multiplies out to +0.0 and
+    ``min(alloc + w*0.0, inf) == alloc`` — the same exact no-op chain the
+    unrolled loop rides, keeping every no-cap pin unchanged. With finite
+    caps the result matches the loop's fixed point only up to resummation
+    order (pinned at tolerance in tests/test_fleet_properties.py)."""
+    recv = w > 0                                       # only weighted flows
+    h = jnp.where(recv, headroom, 0.0)                 # ...receive spill
+    pool = alloc.sum(axis=1)                           # (S, E, 3)
+    spill0 = jnp.maximum(alloc - headroom, 0.0).sum(axis=1)
+    r = jnp.where(recv, headroom / jnp.where(recv, w, 1.0), jnp.inf)
+    order = jnp.argsort(r, axis=1)
+    r_s = jnp.take_along_axis(r, order, axis=1)
+    h_s = jnp.take_along_axis(h, order, axis=1)
+    w_s = jnp.take_along_axis(jnp.where(recv, w, 0.0), order, axis=1)
+    w_tot = w_s.sum(axis=1)                            # (S, E, 3)
+    w_rem = w_tot[:, None] - jnp.cumsum(w_s, axis=1)   # unsaturated past i
+    # water consumed when the level reaches breakpoint r_i (inf entries —
+    # uncapped flows — are masked where their remaining weight is zero so
+    # inf * 0 never produces a NaN)
+    cons = (jnp.cumsum(h_s, axis=1)
+            + jnp.where(w_rem > 0, r_s, 0.0) * w_rem)
+    sat = cons < pool[:, None]                         # fully submerged
+    h_sat = jnp.where(sat, h_s, 0.0).sum(axis=1)
+    w_unsat = w_tot - jnp.where(sat, w_s, 0.0).sum(axis=1)
+    lam = (pool - h_sat) / jnp.maximum(w_unsat, 1e-9)
+    delta = jnp.where(spill0 > 0.0, jnp.maximum(lam - lam0, 0.0), 0.0)
+    return jnp.minimum(alloc + w * delta[:, None], headroom)
+
+
 def _topology_substep_rates(params: SimParams, graph: LinkGraph,
                             paths: PathSpec, threads, flows: FlowSchedule,
                             t0, substeps: int,
-                            objectives: FlowObjective = None):
+                            objectives: FlowObjective = None, *,
+                            water_fill="rounds"):
     """(substeps, F, 3) per-flow rates over the link graph: each link
     splits its scheduled capacity across the flows routed over it (the
     fleet contention model, per link), each flow's rate is the min over
@@ -211,7 +252,13 @@ def _topology_substep_rates(params: SimParams, graph: LinkGraph,
     a flow with an empty path moves nothing. E=1 / all-routed / no-caps is
     ``_fleet_substep_rates`` bit-for-bit: the redistribution is an exact
     float no-op when every cap is infinite, and the min over one link is
-    an identity slice."""
+    an identity slice.
+
+    ``water_fill`` selects the redistribution algorithm: "rounds" (the
+    default and the bitwise reference) unrolls the F spill rounds;
+    "sorted" computes the same fixed point in closed form via
+    ``_sorted_water_fill`` — O(A log A), what the sparse compact-set path
+    uses (identical when no cap is finite; tolerance-pinned otherwise)."""
     dt = params.duration / substeps
     T = graph.tpt.shape[-2]
     n_flows = threads.shape[0]
@@ -246,33 +293,123 @@ def _topology_substep_rates(params: SimParams, graph: LinkGraph,
         # remains, so F rounds reach the fixed point; with all caps at inf
         # every term below is an exact float no-op (headroom = inf).
         headroom = cap - guaranteed                    # inf when uncapped
-        for _ in range(n_flows):
-            spill = jnp.maximum(alloc - headroom, 0.0).sum(axis=1)
+        if water_fill == "sorted":
+            alloc = _sorted_water_fill(alloc, headroom, eff,
+                                       residual / total)
+        else:
+            for _ in range(n_flows):
+                spill = jnp.maximum(alloc - headroom, 0.0).sum(axis=1)
+                alloc = jnp.minimum(alloc, headroom)
+                w = eff * (alloc < headroom)
+                w_tot = jnp.maximum(w.sum(axis=1), 1e-9)
+                alloc = alloc + (w / w_tot[:, None]) * spill[:, None]
             alloc = jnp.minimum(alloc, headroom)
-            w = eff * (alloc < headroom)
-            w_tot = jnp.maximum(w.sum(axis=1), 1e-9)
-            alloc = alloc + (w / w_tot[:, None]) * spill[:, None]
-        alloc = jnp.minimum(alloc, headroom)
         link_rate = jnp.minimum(demand, guaranteed + alloc)
     # a flow's end-to-end rate: min over ITS links; off-path links never
-    # constrain, an empty path moves nothing
+    # constrain, an empty path moves nothing. The trailing act mask is the
+    # all-inactive guard (a bitwise no-op — see _fleet_substep_rates).
     constraining = jnp.where(onpath[..., None] > 0, link_rate, jnp.inf)
     rate = jnp.min(constraining, axis=2)               # (S, F, 3)
     has_path = onpath.sum(axis=2) > 0                  # (S, F)
-    return jnp.where(has_path[..., None], rate, 0.0)
+    return jnp.where(has_path[..., None], rate, 0.0) * act[..., None]
+
+
+def _solve_topology_rates(params: SimParams, graph: LinkGraph,
+                          paths: PathSpec, threads, flows: FlowSchedule,
+                          t0, substeps: int, objectives, backend,
+                          water_fill="rounds"):
+    """(S, F, 3) topology rates with the backend knob: "jnp" is the dense
+    reference solve; "pallas" fuses the whole per-substep solve — caps,
+    scaled floors, proportional residual split, the F-round water-fill,
+    and the min-over-path-links — into the repro.kernels.contention kernel
+    (interpret-mode off-TPU; pinned vs the reference in tests)."""
+    if backend == "pallas":
+        from repro.kernels.contention.ops import contention_rates
+        dt = params.duration / substeps
+        T = graph.tpt.shape[-2]
+        ts = t0 + dt * jnp.arange(substeps, dtype=jnp.float32)
+        idx = jnp.clip(jnp.floor(ts / graph.bin_seconds), 0, T - 1)
+        idx = idx.astype(jnp.int32)
+        tpt = jnp.swapaxes(graph.tpt[:, idx], 0, 1)    # (S, E, 3)
+        bw = jnp.swapaxes(graph.bw[:, idx], 0, 1)      # (S, E, 3)
+        act = active_at(flows, ts)                     # (S, F)
+        onpath = routes_at(paths, ts)                  # (S, F, E)
+        floor = objectives.rate_floor if objectives is not None else None
+        cap = objectives.rate_cap if objectives is not None else None
+        return contention_rates(threads, act, onpath, tpt, bw,
+                                floor=floor, cap=cap,
+                                rounds=threads.shape[0])
+    return _topology_substep_rates(params, graph, paths, threads, flows,
+                                   t0, substeps, objectives,
+                                   water_fill=water_fill)
+
+
+def _sparse_topology_interval(params: SimParams, graph, paths, buffers,
+                              threads, t0, flows: FlowSchedule, substeps,
+                              backend, objectives, max_active: int):
+    """Compact-active-set fast path of ``topology_interval``: the fleet
+    gather plus a column gather of the routing matrix, and the sort-based
+    water-fill instead of the F-round spill loop (O(A log A) in the
+    compact size). No-cap fleets match the dense solve to float32 ulp
+    noise (the same reassociation caveat as ``_sparse_fleet_interval``);
+    capped fleets match the spill loop's fixed point at 1e-5 (the sorted
+    fill reaches the same limit in closed form)."""
+    F = flows.n_flows
+    idx = _window_flow_ids(flows, t0, params.duration, max_active)
+    c_threads, c_flows, c_objs = _gather_compact(idx, F, threads, flows,
+                                                 objectives)
+    safe = jnp.minimum(idx, F - 1)
+    valid = idx < F
+    c_paths = PathSpec(
+        onpath=jnp.where(valid[None, :, None], paths.onpath[:, safe], 0.0),
+        bin_seconds=paths.bin_seconds)
+    c_bufs = jnp.where(valid[:, None], buffers[safe], 0.0)
+    rates = _solve_topology_rates(params, graph, c_paths, c_threads,
+                                  c_flows, t0, substeps, c_objs, backend,
+                                  water_fill="sorted")
+    c_bufs, c_tps = _integrate_fleet_rates(params, c_bufs, rates, backend)
+    new_buffers = buffers.at[idx].set(c_bufs, mode="drop")
+    tps = jnp.zeros_like(threads).at[idx].set(c_tps, mode="drop")
+    return new_buffers, tps
 
 
 def topology_interval(params: SimParams, buffers, threads, t0=0.0, *,
                       graph: LinkGraph, paths: PathSpec,
                       flows: FlowSchedule, substeps=50, backend="jnp",
-                      objectives: FlowObjective = None):
+                      objectives: FlowObjective = None,
+                      max_active: int = None):
     """Simulate ``duration`` seconds of F flows over the link graph —
     the topology twin of ``fleet_interval`` (same buffer dynamics, same
-    backends; only the rate solve differs)."""
-    rates = _topology_substep_rates(params, graph, paths, threads, flows,
-                                    jnp.asarray(t0, jnp.float32), substeps,
-                                    objectives)
+    backends; only the rate solve differs). ``max_active``: optional
+    static bound on per-interval concurrency — gathers the compact active
+    set and runs the sort-based water-fill on it (see ``fleet_interval``
+    for the contract)."""
+    t0 = jnp.asarray(t0, jnp.float32)
+    if max_active is not None and max_active < flows.n_flows:
+        return _sparse_topology_interval(params, graph, paths, buffers,
+                                         threads, t0, flows, substeps,
+                                         backend, objectives, max_active)
+    rates = _solve_topology_rates(params, graph, paths, threads, flows,
+                                  t0, substeps, objectives, backend)
     return _integrate_fleet_rates(params, buffers, rates, backend)
+
+
+def pad_path_spec(paths: PathSpec, n_to: int) -> PathSpec:
+    """Pad the routing matrix to ``n_to`` flows with all-zero rows (no
+    path): a pathless flow moves nothing and scores zero utility, so
+    padding is reward-exact — the routing twin of
+    ``repro.core.fleet.pad_flow_schedule``. Batched specs (leading env
+    axes) pad the same way."""
+    pad = n_to - paths.n_flows
+    if pad < 0:
+        raise ValueError(f"cannot pad {paths.n_flows} flows down to {n_to}")
+    if pad == 0:
+        return paths
+    shape = paths.onpath.shape[:-2] + (pad,) + paths.onpath.shape[-1:]
+    return PathSpec(
+        onpath=jnp.concatenate([paths.onpath,
+                                jnp.zeros(shape, jnp.float32)], axis=-2),
+        bin_seconds=paths.bin_seconds)
 
 
 def topology_features(onpath, net_tps, active, link_bw_ref):
@@ -324,12 +461,13 @@ def topology_observe(params: SimParams, state: TopologyState, *,
     return jnp.concatenate([base, topo], axis=-1)
 
 
-@partial(jax.jit, static_argnames=("n_flows", "substeps", "spec", "backend"))
+@partial(jax.jit, static_argnames=("n_flows", "substeps", "spec", "backend",
+                                   "max_active"))
 def topology_reset(params: SimParams, key, n_flows: int, t0=0.0, *,
                    graph: LinkGraph, paths: PathSpec,
                    flows: FlowSchedule = None, substeps=50,
                    spec: ObservationSpec = DEFAULT_OBS, backend="jnp",
-                   objectives: FlowObjective = None):
+                   objectives: FlowObjective = None, max_active: int = None):
     """The topology twin of ``fleet_reset``: same key stream (the (F, 3)
     thread draw), empty buffers, one warm-up interval over the graph."""
     if flows is None:
@@ -340,19 +478,21 @@ def topology_reset(params: SimParams, key, n_flows: int, t0=0.0, *,
     buffers, tps = topology_interval(params, buffers, threads, t0,
                                      graph=graph, paths=paths, flows=flows,
                                      substeps=substeps, backend=backend,
-                                     objectives=objectives)
+                                     objectives=objectives,
+                                     max_active=max_active)
     return TopologyState(buffers=buffers, threads=threads, throughputs=tps,
                          t=t0 + params.duration, prev_throughputs=tps,
                          delivered=jnp.zeros((n_flows,), jnp.float32))
 
 
-@partial(jax.jit, static_argnames=("substeps", "spec", "backend"))
+@partial(jax.jit, static_argnames=("substeps", "spec", "backend",
+                                   "max_active"))
 def topology_step(params: SimParams, state: TopologyState, actions, *,
                   graph: LinkGraph, paths: PathSpec,
                   flows: FlowSchedule = None, substeps=50,
                   spec: ObservationSpec = DEFAULT_OBS, backend="jnp",
                   fairness_coef=0.0, objectives: FlowObjective = None,
-                  deadline_coef=1.0):
+                  deadline_coef=1.0, max_active: int = None):
     """actions (F, 3) -> round -> clamp [1, n_max]; one ``duration``-second
     interval over the graph. Returns (state', obs (F, frame_dim), reward).
     The reward is the shared fleet objective (``_fleet_reward`` — ONE
@@ -365,7 +505,8 @@ def topology_step(params: SimParams, state: TopologyState, actions, *,
     buffers, tps = topology_interval(params, state.buffers, threads,
                                      state.t, graph=graph, paths=paths,
                                      flows=flows, substeps=substeps,
-                                     backend=backend, objectives=objectives)
+                                     backend=backend, objectives=objectives,
+                                     max_active=max_active)
     delivered0 = _delivered_or_zeros(state)
     new_state = TopologyState(
         buffers=buffers, threads=threads, throughputs=tps,

@@ -1,0 +1,1 @@
+from repro.kernels.contention.ops import contention_rates

@@ -1,0 +1,114 @@
+"""Fused contention solve across the substep grid.
+
+At fleet scale the contention solve — not the buffer integration — is the
+episode hot spot: every substep builds (F, E, 3) share/demand/floor tensors
+and reduces them over the flow axis several times. This kernel fuses the
+whole per-substep solve (caps, proportionally scaled floors, the
+thread-proportional residual split, the F-round water-fill redistribution,
+and the min-over-path-links combine) into one VMEM-resident program per
+substep: one HBM read of the window inputs and one (F, 3) write back, no
+intermediate (S, F, E, 3) tensors ever materialized in HBM.
+
+The grid iterates the S substeps; flows and links live entirely in VMEM
+(f32 tiles — the F axis rides the 8-sublane dimension, stages the lanes).
+The schedule gathers (table bins -> per-substep tpt/bw, activity windows ->
+act, route bins -> onpath) happen OUTSIDE the kernel: they are cheap
+order-preserving gathers and keeping them out makes the kernel a pure
+function of dense per-substep operands — exactly what the jnp reference in
+``ref.py`` computes, which is what the parity tests pin.
+
+``rounds`` is static: 0 is the single-bottleneck fleet model (no
+redistribution — capacity a capped flow cannot use is stranded, matching
+``_fleet_substep_rates``), > 0 runs that many water-fill spill rounds
+(topology semantics: F rounds reach the fixed point).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import tpu_compiler_params
+
+
+def _contention_kernel(threads_ref, act_ref, onpath_ref, tpt_ref, bw_ref,
+                       floor_ref, cap_ref, out_ref, *, with_objectives,
+                       rounds):
+    threads = threads_ref[...]                         # (F, 3)
+    act = act_ref[0]                                   # (F,)
+    onpath = onpath_ref[0]                             # (F, E)
+    tpt = tpt_ref[0]                                   # (E, 3)
+    bw = bw_ref[0]                                     # (E, 3)
+    # effective threads of flow f ON link e (0 off-path / inactive)
+    eff = (threads[:, None, :] * act[:, None, None]
+           * onpath[:, :, None])                       # (F, E, 3)
+    total = jnp.maximum(eff.sum(axis=0), 1e-9)         # (E, 3)
+    share = eff / total[None]
+    if not with_objectives:
+        link_rate = jnp.minimum(eff * tpt[None], share * bw[None])
+    else:
+        floor = floor_ref[...][:, None, :]             # (F, 1, 3)
+        cap = cap_ref[...][:, None, :]                 # (F, 1, 3)
+        demand = jnp.minimum(eff * tpt[None], cap)     # (F, E, 3)
+        guaranteed = jnp.minimum(floor, demand)
+        g_tot = guaranteed.sum(axis=0)                 # (E, 3)
+        guaranteed = guaranteed * jnp.minimum(
+            1.0, bw / jnp.maximum(g_tot, 1e-9))[None]
+        residual = jnp.maximum(bw - guaranteed.sum(axis=0), 0.0)
+        alloc = share * residual[None]
+        headroom = cap - guaranteed                    # inf when uncapped
+        if rounds:
+            def body(_, alloc):
+                spill = jnp.maximum(alloc - headroom, 0.0).sum(axis=0)
+                alloc = jnp.minimum(alloc, headroom)
+                w = eff * (alloc < headroom)
+                w_tot = jnp.maximum(w.sum(axis=0), 1e-9)
+                return alloc + (w / w_tot[None]) * spill[None]
+
+            alloc = jax.lax.fori_loop(0, rounds, body, alloc)
+            alloc = jnp.minimum(alloc, headroom)
+        link_rate = jnp.minimum(demand, guaranteed + alloc)
+    # end-to-end rate: min over the flow's links (off-path never
+    # constrains), empty paths and inactive flows move exactly nothing
+    constraining = jnp.where(onpath[:, :, None] > 0, link_rate, jnp.inf)
+    rate = jnp.min(constraining, axis=1)               # (F, 3)
+    has_path = onpath.sum(axis=1) > 0
+    out_ref[0] = jnp.where(has_path[:, None], rate, 0.0) * act[:, None]
+
+
+def contention_rates_pallas(threads, act, onpath, tpt, bw, floor, cap, *,
+                            with_objectives, rounds=0, interpret=True):
+    """threads (F, 3); act (S, F); onpath (S, F, E); tpt/bw (S, E, 3);
+    floor/cap (F, 3). Returns (S, F, 3) per-flow per-stage rates."""
+    S, F = act.shape
+    E = onpath.shape[-1]
+    kernel = functools.partial(_contention_kernel,
+                               with_objectives=with_objectives,
+                               rounds=rounds)
+    params = None if interpret else tpu_compiler_params(
+        dimension_semantics=("arbitrary",))
+    extra = {} if params is None else {"compiler_params": params}
+    return pl.pallas_call(
+        kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((F, 3), lambda i: (0, 0)),
+            pl.BlockSpec((1, F), lambda i: (i, 0)),
+            pl.BlockSpec((1, F, E), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, E, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, E, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((F, 3), lambda i: (0, 0)),
+            pl.BlockSpec((F, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, F, 3), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, F, 3), jnp.float32),
+        interpret=interpret,
+        name="contention_solve",
+        **extra,
+    )(threads.astype(jnp.float32), act.astype(jnp.float32),
+      onpath.astype(jnp.float32), tpt.astype(jnp.float32),
+      bw.astype(jnp.float32), floor.astype(jnp.float32),
+      cap.astype(jnp.float32))

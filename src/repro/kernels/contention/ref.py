@@ -1,0 +1,49 @@
+"""Oracle: the dense pure-jnp contention solve on pre-gathered operands.
+
+Same contract as ``contention_rates`` — the same math
+``repro.core.topology._topology_substep_rates`` computes after its schedule
+gathers (and, at rounds=0, ``repro.core.fleet._fleet_substep_rates`` at the
+E=1 embedding). The kernel parity tests pin the Pallas output against this.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def contention_rates_reference(threads, act, onpath, tpt, bw, floor=None,
+                               cap=None, *, rounds=0):
+    """threads (F, 3); act (S, F); onpath (S, F, E); tpt/bw (S, E, 3);
+    floor/cap optional (F,). Returns (S, F, 3)."""
+    eff = (threads[None, :, None, :] * act[:, :, None, None]
+           * onpath[..., None])                        # (S, F, E, 3)
+    total = jnp.maximum(eff.sum(axis=1), 1e-9)         # (S, E, 3)
+    share = eff / total[:, None]
+    if floor is None and cap is None:
+        link_rate = jnp.minimum(eff * tpt[:, None], share * bw[:, None])
+    else:
+        F = threads.shape[0]
+        floor = jnp.zeros((F,), jnp.float32) if floor is None else floor
+        cap = jnp.full((F,), jnp.inf, jnp.float32) if cap is None else cap
+        cap_b = cap[None, :, None, None]
+        demand = jnp.minimum(eff * tpt[:, None], cap_b)
+        guaranteed = jnp.minimum(floor[None, :, None, None], demand)
+        g_tot = guaranteed.sum(axis=1)
+        guaranteed = guaranteed * jnp.minimum(
+            1.0, bw / jnp.maximum(g_tot, 1e-9))[:, None]
+        residual = jnp.maximum(bw - guaranteed.sum(axis=1), 0.0)
+        alloc = share * residual[:, None]
+        headroom = cap_b - guaranteed
+        for _ in range(rounds):
+            spill = jnp.maximum(alloc - headroom, 0.0).sum(axis=1)
+            alloc = jnp.minimum(alloc, headroom)
+            w = eff * (alloc < headroom)
+            w_tot = jnp.maximum(w.sum(axis=1), 1e-9)
+            alloc = alloc + (w / w_tot[:, None]) * spill[:, None]
+        if rounds:
+            alloc = jnp.minimum(alloc, headroom)
+        link_rate = jnp.minimum(demand, guaranteed + alloc)
+    constraining = jnp.where(onpath[..., None] > 0, link_rate, jnp.inf)
+    rate = jnp.min(constraining, axis=2)               # (S, F, 3)
+    has_path = onpath.sum(axis=2) > 0
+    return jnp.where(has_path[..., None], rate, 0.0) * act[..., None]

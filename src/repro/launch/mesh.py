@@ -30,3 +30,18 @@ def make_smoke_mesh():
     from jax.sharding import Mesh
     devs = np.array(jax.devices()[:1]).reshape(1, 1)
     return Mesh(devs, ("data", "model"))
+
+
+def make_fleet_mesh(n_devices: int | None = None):
+    """1-D mesh over the flow axis ("flows", repro.sharding.fleet) — fleet
+    scale-out: every visible device (or a prefix of them) holds a slice of
+    the F axis of the fleet/topology pytrees, and GSPMD turns the solve's
+    cross-flow reductions into collectives. On a single device this is the
+    trivial mesh (every spec degenerates to replication), so the same code
+    path runs everywhere — multi-device CPU tests force a device count via
+    XLA_FLAGS=--xla_force_host_platform_device_count=N."""
+    import jax
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    return Mesh(np.array(devs[:n]), ("flows",))

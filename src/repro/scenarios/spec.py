@@ -24,10 +24,12 @@ import numpy as np
 
 from repro.core.fleet import (make_flow_schedule, stack_flow_schedules,
                               make_flow_objective, default_objectives,
-                              stack_flow_objectives, PRIORITY_TIERS)
+                              stack_flow_objectives, PRIORITY_TIERS,
+                              flow_bucket, pad_flow_schedule,
+                              pad_flow_objectives)
 from repro.core.topology import (LinkGraph, PathSpec, Topology,
                                  make_link_graph, make_path_spec,
-                                 stack_topologies)
+                                 stack_topologies, pad_path_spec)
 from repro.scenarios.families import (FAMILIES, ARRIVAL_FAMILIES,
                                       TOPOLOGY_FAMILIES)
 from repro.scenarios.schedule import ScheduleTable, make_table, stack_tables
@@ -152,7 +154,8 @@ def sample_objectives(n_flows, *, seed=0, horizon=60.0, base_bw=DEFAULT_BW,
 def sample_fleet_batch(n, n_flows, *, arrival_families=None,
                        families=("static",), seed=0, horizon=60.0,
                        bin_seconds=1.0, base_tpt=DEFAULT_TPT,
-                       base_bw=DEFAULT_BW, jitter=0.25, objective_mix=None):
+                       base_bw=DEFAULT_BW, jitter=0.25, objective_mix=None,
+                       pad_flows=False):
     """Domain randomization for fleet training: ``n`` (condition table,
     arrival schedule, objective set) triples — conditions drawn like
     ``sample_scenario_batch`` (default: static, so contention is the thing
@@ -163,7 +166,11 @@ def sample_fleet_batch(n, n_flows, *, arrival_families=None,
     objective-blind PR 4 distribution, with tables and flows byte-identical
     for any given seed). All batched outputs have a leading env axis and a
     single shape for any n, so the training step never retraces.
-    Deterministic in ``seed``.
+    ``pad_flows=True`` additionally pads the flow axis to the next
+    power-of-two bucket (``flow_bucket``) with never-active, reward-exact
+    flows, so batches resampled at DIFFERENT ``n_flows`` inside a bucket
+    share one XLA shape and never retrace either. Deterministic in
+    ``seed``.
 
     Returns ``(specs, tables, flows, objectives)``."""
     specs, tables = sample_scenario_batch(
@@ -186,8 +193,12 @@ def sample_fleet_batch(n, n_flows, *, arrival_families=None,
         objectives = [sample_objectives(
             n_flows, seed=int(orng.integers(0, 2 ** 31 - 1)),
             horizon=horizon, base_bw=base_bw, **kw) for _ in range(n)]
-    return specs, tables, stack_flow_schedules(flows), \
-        stack_flow_objectives(objectives)
+    flows = stack_flow_schedules(flows)
+    objectives = stack_flow_objectives(objectives)
+    if pad_flows:
+        flows = pad_flow_schedule(flows, flow_bucket(n_flows))
+        objectives = pad_flow_objectives(objectives, flow_bucket(n_flows))
+    return specs, tables, flows, objectives
 
 
 @dataclass
@@ -269,7 +280,7 @@ def sample_topology_batch(n, n_flows, *, n_links=2, families=None,
                           arrival_families=None, seed=0, horizon=60.0,
                           bin_seconds=1.0, base_tpt=DEFAULT_TPT,
                           base_bw=DEFAULT_BW, jitter=0.25,
-                          objective_mix=None):
+                          objective_mix=None, pad_flows=False):
     """Domain randomization for topology training: ``n`` (link graph +
     routes, arrival schedule, objective set) triples — graphs drawn over
     the topology ``families`` with randomized seeds and per-stage jitter
@@ -277,7 +288,10 @@ def sample_topology_batch(n, n_flows, *, n_links=2, families=None,
     drawn exactly like ``sample_fleet_batch`` from their own independent
     streams (0x70B0 / 0x5EED / 0x0BB1 offsets — adding any one axis never
     perturbs the others). All batched outputs share one shape for any n,
-    so the training step never retraces. Deterministic in ``seed``.
+    so the training step never retraces; ``pad_flows=True`` pads the flow
+    axis (schedules, objectives, AND route rows) to the ``flow_bucket``
+    power-of-two grid so varying ``n_flows`` shares shapes too.
+    Deterministic in ``seed``.
 
     Returns ``(specs, Topology (batched), flows, objectives)``."""
     families = list(families or TOPOLOGY_FAMILIES)
@@ -307,8 +321,15 @@ def sample_topology_batch(n, n_flows, *, n_links=2, families=None,
         objectives = [sample_objectives(
             n_flows, seed=int(orng.integers(0, 2 ** 31 - 1)),
             horizon=horizon, base_bw=base_bw, **kw) for _ in range(n)]
-    return specs, topology, stack_flow_schedules(flows), \
-        stack_flow_objectives(objectives)
+    flows = stack_flow_schedules(flows)
+    objectives = stack_flow_objectives(objectives)
+    if pad_flows:
+        flows = pad_flow_schedule(flows, flow_bucket(n_flows))
+        objectives = pad_flow_objectives(objectives, flow_bucket(n_flows))
+        topology = Topology(graph=topology.graph,
+                            paths=pad_path_spec(topology.paths,
+                                                flow_bucket(n_flows)))
+    return specs, topology, flows, objectives
 
 
 def sample_scenario_batch(n, *, families=None, seed=0, horizon=60.0,

@@ -1,3 +1,11 @@
+from repro.sharding.fleet import (
+    FLOW_AXIS,
+    flow_sharding,
+    shard_flow_schedule,
+    shard_flow_objectives,
+    shard_path_spec,
+    shard_fleet_state,
+)
 from repro.sharding.rules import (
     param_specs,
     cache_specs,

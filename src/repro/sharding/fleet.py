@@ -1,0 +1,83 @@
+"""Sharded fleets: the flow axis of fleet/topology pytrees on a device mesh.
+
+GSPMD does the heavy lifting: once the INPUTS of a jitted fleet or topology
+step carry NamedShardings that split the F axis, XLA partitions the whole
+program — per-flow elementwise work (the integration, the policy applied
+per flow row) stays device-local, and the cross-flow reductions (the
+``eff.sum`` of the contention solve, the utility/Jain sums of the reward)
+lower to the matching collectives. Nothing in ``repro.core`` changes;
+these helpers only build the PartitionSpecs and ``device_put`` the pytrees
+before the jitted call (``train_ppo(mesh=...)`` does exactly this each
+round).
+
+Divisibility guard (same contract as ``repro.sharding.rules._div``): a
+fleet whose F is not divisible by the mesh's flow axis falls back to
+replication — correct, just not distributed. Pair ``pad_flows`` /
+``flow_bucket`` with a power-of-two device count and the axis always
+divides.
+
+Batched pytrees (leading env axes from the trainer) shard the same way:
+the flow dim is addressed from the RIGHT, so extra leading axes are simply
+replicated.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+FLOW_AXIS = "flows"
+
+
+def flow_sharding(mesh, ndim: int, flow_dim: int, n_flows: int):
+    """NamedSharding splitting dimension ``flow_dim`` (negative = from the
+    right) of an ndim-rank array over the mesh's ``FLOW_AXIS`` — replicated
+    when the mesh has no flow axis or ``n_flows`` does not divide it."""
+    spec = [None] * ndim
+    size = dict(zip(mesh.axis_names, mesh.devices.shape)).get(FLOW_AXIS, 1)
+    if flow_dim is not None and size > 0 and n_flows % size == 0:
+        spec[flow_dim] = FLOW_AXIS
+    return NamedSharding(mesh, PartitionSpec(*spec))
+
+
+def _put(x, mesh, flow_dim, n_flows):
+    if x is None:
+        return None
+    return jax.device_put(x, flow_sharding(mesh, jax.numpy.ndim(x),
+                                           flow_dim, n_flows))
+
+
+def shard_flow_schedule(flows, mesh):
+    """FlowSchedule with the F (last) axis of both windows sharded."""
+    F = flows.n_flows
+    return type(flows)(t_start=_put(flows.t_start, mesh, -1, F),
+                       t_end=_put(flows.t_end, mesh, -1, F))
+
+
+def shard_flow_objectives(objectives, mesh):
+    """FlowObjective with every (…, F) leaf sharded; None stays None."""
+    if objectives is None:
+        return None
+    F = objectives.n_flows
+    return type(objectives)(**{
+        f: _put(getattr(objectives, f), mesh, -1, F)
+        for f in objectives._fields})
+
+
+def shard_path_spec(paths, mesh):
+    """PathSpec with the F axis (second-to-last of onpath) sharded; the
+    route-bin width is replicated."""
+    F = paths.n_flows
+    return type(paths)(onpath=_put(paths.onpath, mesh, -2, F),
+                       bin_seconds=_put(paths.bin_seconds, mesh, None, F))
+
+
+def shard_fleet_state(state, mesh):
+    """FleetState/TopologyState with every per-flow leaf sharded on its F
+    axis (buffers/threads/throughputs at -2, delivered at -1); the shared
+    clock ``t`` is replicated."""
+    F = state.threads.shape[-2]
+    dims = {"buffers": -2, "threads": -2, "throughputs": -2,
+            "prev_throughputs": -2, "delivered": -1, "t": None}
+    return type(state)(**{f: _put(getattr(state, f), mesh, dims[f], F)
+                          for f in state._fields})

@@ -19,11 +19,13 @@ from repro.core import networks as nets
 from repro.core.fleet import (FleetState, make_flow_schedule, always_on,
                               make_flow_objective, active_at, fleet_reset,
                               fleet_step, fleet_observe, fleet_interval,
-                              jain_index, _fleet_substep_rates)
+                              jain_index, _fleet_substep_rates, flow_bucket)
 from repro.core.schedule import make_table
 from repro.core.simulator import (make_env_params, env_reset, env_step,
                                   FLEET_OBS)
 from repro.core.topology import (single_link_graph, all_links_path,
+                                 make_link_graph, make_path_spec,
+                                 topology_interval,
                                  _topology_substep_rates)
 
 # small, fixed shape pools keep the jitted paths to a handful of compiles
@@ -172,6 +174,153 @@ def test_topology_caps_strand_no_capacity(data):
     np.testing.assert_allclose(total, deliverable, atol=1e-4, rtol=1e-4)
     # and caps are still individually honored
     assert (rates <= np.asarray(caps)[None, :, None] + 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# Fleet scale-out: the sparse compact-active-set solve IS the dense solve
+# ---------------------------------------------------------------------------
+
+@given(data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_sparse_fleet_interval_equals_dense(data):
+    """For ANY fleet/schedule/objective draw and any static ``max_active``
+    bound that honors the caller promise (>= the true concurrency), the
+    compact gather->solve->scatter path returns the dense buffers and
+    throughputs to float32 ulp noise (the order-preserving gather keeps
+    the summand ORDER, but dropping a mid-fleet zero term shifts XLA's
+    SIMD lane grouping — 1e-5 is thousands of ulps of margin), and the
+    ungathered flows stay EXACTLY untouched."""
+    params, table, flows, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    obj = data.draw(st.one_of(st.none(), objectives_for(F)))
+    t0 = data.draw(st.floats(0.0, 2.0))
+    buffers = jnp.asarray(
+        [[data.draw(st.floats(0.0, 0.4)) for _ in range(2)]
+         for _ in range(F)], jnp.float32)
+    want_b, want_t = fleet_interval(params, buffers, threads, t0,
+                                    flows=flows, table=table,
+                                    substeps=SUBSTEPS, objectives=obj)
+    # max_active = F is the honest bound for these draws (every window may
+    # intersect the interval); padding the fleet makes it a REAL bound
+    pad = data.draw(st.integers(1, 3))
+    flows_p = make_flow_schedule(
+        list(np.asarray(flows.t_start)) + [np.inf] * pad,
+        list(np.asarray(flows.t_end)) + [np.inf] * pad)
+    threads_p = jnp.concatenate([threads, jnp.ones((pad, 3))])
+    buffers_p = jnp.concatenate([buffers, jnp.zeros((pad, 2))])
+    from repro.core.fleet import pad_flow_objectives
+    obj_p = pad_flow_objectives(obj, F + pad)
+    got_b, got_t = fleet_interval(params, buffers_p, threads_p, t0,
+                                  flows=flows_p, table=table,
+                                  substeps=SUBSTEPS, objectives=obj_p,
+                                  max_active=F)
+    np.testing.assert_allclose(np.asarray(got_b[:F]), np.asarray(want_b),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_t[:F]), np.asarray(want_t),
+                               atol=1e-5)
+    # the padded flows moved exactly nothing
+    assert np.asarray(got_b[F:]).max(initial=0.0) == 0.0
+    assert np.asarray(got_t[F:]).max(initial=0.0) == 0.0
+
+
+@given(data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_sparse_topology_interval_matches_dense(data):
+    """Topology twin: on a random 2-link graph with per-flow routes, the
+    sparse path (compact gather + sorted water-fill) matches the dense
+    solve at 1e-5 — ulp-level gather-lane reassociation when no finite
+    caps exist (the water-fill is an exact no-op on both paths), plus the
+    sorted fill reaching the F-round spill loop's fixed point in closed
+    form when caps redistribute."""
+    params, table, flows, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    E = 2
+    graph = make_link_graph(
+        jnp.stack([table.tpt, table.tpt * 0.8]),
+        jnp.stack([table.bw, table.bw * 1.2]),
+        bin_seconds=table.bin_seconds)
+    onpath = jnp.asarray(
+        [[data.draw(st.sampled_from([0.0, 1.0])) for _ in range(E)]
+         for _ in range(F)], jnp.float32)
+    paths = make_path_spec(onpath)
+    capped = data.draw(st.booleans())
+    obj = data.draw(objectives_for(F)) if capped else None
+    t0 = data.draw(st.floats(0.0, 2.0))
+    buffers = jnp.zeros((F, 2), jnp.float32)
+    want_b, want_t = topology_interval(params, buffers, threads, t0,
+                                       graph=graph, paths=paths,
+                                       flows=flows, substeps=SUBSTEPS,
+                                       objectives=obj)
+    from repro.core.fleet import pad_flow_schedule, pad_flow_objectives
+    from repro.core.topology import pad_path_spec
+    flows_p = pad_flow_schedule(flows, F + 2)
+    got_b, got_t = topology_interval(
+        params, jnp.concatenate([buffers, jnp.zeros((2, 2))]),
+        jnp.concatenate([threads, jnp.ones((2, 3))]), t0, graph=graph,
+        paths=pad_path_spec(paths, F + 2), flows=flows_p,
+        substeps=SUBSTEPS, objectives=pad_flow_objectives(obj, F + 2),
+        max_active=F)
+    np.testing.assert_allclose(np.asarray(got_b[:F]), np.asarray(want_b),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_t[:F]), np.asarray(want_t),
+                               atol=1e-5)
+    assert np.asarray(got_t[F:]).max(initial=0.0) == 0.0
+
+
+@given(data=st.data())
+@settings(max_examples=150, deadline=None)
+def test_sorted_water_fill_matches_round_loop(data):
+    """The O(A log A) sort-based water-fill reaches the same fixed point
+    as the F-round spill loop for any draw: bitwise when no finite caps
+    exist (both are exact no-ops), 1e-5 otherwise (same limit, different
+    partial-sum order — the loop converges geometrically, the sort solves
+    the breakpoint equation in closed form)."""
+    params, table, flows, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    obj = data.draw(st.one_of(st.none(), objectives_for(F)))
+    graph = single_link_graph(table)
+    paths = all_links_path(F, 1)
+    t0 = jnp.asarray(data.draw(st.floats(0.0, 2.0)), jnp.float32)
+    loop = np.asarray(_topology_substep_rates(
+        params, graph, paths, threads, flows, t0, SUBSTEPS, obj,
+        water_fill="rounds"))
+    srt = np.asarray(_topology_substep_rates(
+        params, graph, paths, threads, flows, t0, SUBSTEPS, obj,
+        water_fill="sorted"))
+    has_finite_cap = obj is not None and bool(
+        np.isfinite(np.asarray(obj.rate_cap)).any())
+    if not has_finite_cap:
+        assert np.array_equal(loop, srt)
+    else:
+        np.testing.assert_allclose(srt, loop, atol=1e-5)
+
+
+@given(data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_all_inactive_substeps_move_zero_bytes_every_path(data):
+    """An interval no flow's window intersects moves EXACTLY zero bytes on
+    every solve path — dense, sparse (whose gather comes back empty),
+    and the fused kernel — for any draw, objectives included. This pins
+    the trailing activity guard: without it the floor/share math can
+    assign epsilon rates to inactive flows."""
+    params, table, _, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    obj = data.draw(st.one_of(st.none(), objectives_for(F)))
+    # every window strictly after the simulated interval [0, duration)
+    flows = make_flow_schedule([float(params.duration) + 1.0] * F,
+                               [np.inf] * F)
+    buffers = jnp.asarray(
+        [[data.draw(st.floats(0.0, 0.4)) for _ in range(2)]
+         for _ in range(F)], jnp.float32)
+    for kw in ({}, {"max_active": max(F - 1, 1)}, {"backend": "pallas"},
+               {"backend": "pallas", "max_active": max(F - 1, 1)}):
+        if kw.get("max_active", F) >= F:
+            kw = {k: v for k, v in kw.items() if k != "max_active"}
+        bufs, tps = fleet_interval(params, buffers, threads, 0.0,
+                                   flows=flows, table=table,
+                                   substeps=SUBSTEPS, objectives=obj, **kw)
+        assert np.asarray(tps).max(initial=0.0) == 0.0, kw
+        assert np.array_equal(np.asarray(bufs), np.asarray(buffers)), kw
 
 
 # ---------------------------------------------------------------------------
