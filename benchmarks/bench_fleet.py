@@ -53,24 +53,19 @@ def train_fleet_agent(params, *, seed=0, episodes=1500, n_envs=16,
     (condition table, arrival schedule) pairs over all arrival families, so
     the ONE shared policy sees every population regime — alone on the link,
     rolling arrivals, the flash crowd. Returns (FleetPolicy, TrainResult)."""
-    cache = {}
-
     def draw(rnd):
-        if rnd not in cache:
-            cache.clear()  # train_ppo asks tables then flows for the same rnd
-            cache[rnd] = sample_fleet_batch(
-                n_envs, n_flows, seed=seed * 7919 + rnd, horizon=horizon,
-                base_tpt=BASE_TPT, base_bw=BASE_BW)[1:3]
-        return cache[rnd]
+        wl = sample_fleet_batch(
+            n_envs, n_flows, seed=seed * 7919 + rnd, horizon=horizon,
+            base_tpt=BASE_TPT, base_bw=BASE_BW)
+        # objective-blind trainer: drop the sampler's default objectives so
+        # the episode trace matches the pinned PR 4 fleet path exactly
+        return wl.replace(objectives=None, specs=None)
 
     cfg = PPOConfig(max_episodes=episodes, n_envs=n_envs,
                     action_scale=N_MAX / 4, seed=seed, obs_spec=FLEET_OBS,
                     param_selection="batch_mean", policy=policy,
                     n_flows=n_flows, fairness_coef=fairness_coef)
-    tables, flows = draw(0)
-    res = train_ppo(params, cfg, tables=tables, flows=flows,
-                    resample=lambda rnd: draw(rnd)[0],
-                    resample_flows=lambda rnd: draw(rnd)[1])
+    res = train_ppo(params, cfg, workload=draw(0), resample=draw)
     fleet = FleetPolicy(res.params["policy"], n_max=N_MAX,
                         deterministic=True,
                         obs_spec=effective_obs_spec(cfg), policy=policy)

@@ -67,25 +67,20 @@ def train_topology_agent(params, *, seed=0, episodes=1500, n_envs=16,
     theft — so the ONE shared policy learns to read WHICH link binds.
     Returns (FleetPolicy, TrainResult); the params drop into
     TopologyController unchanged for the live MultiLink."""
-    cache = {}
-
     def draw(rnd):
-        if rnd not in cache:
-            cache.clear()  # train_ppo asks topology then flows per rnd
-            cache[rnd] = sample_topology_batch(
-                n_envs, n_flows, n_links=n_links, seed=seed * 7919 + rnd,
-                horizon=horizon, base_tpt=BASE_TPT, base_bw=BASE_BW)[1:3]
-        return cache[rnd]
+        wl = sample_topology_batch(
+            n_envs, n_flows, n_links=n_links, seed=seed * 7919 + rnd,
+            horizon=horizon, base_tpt=BASE_TPT, base_bw=BASE_BW)
+        # objective-blind trainer: drop the sampler's default objectives so
+        # the episode trace matches the pinned PR 6 topology path exactly
+        return wl.replace(objectives=None, specs=None)
 
     cfg = PPOConfig(max_episodes=episodes, n_envs=n_envs,
                     action_scale=N_MAX / 4, seed=seed,
                     obs_spec=TOPOLOGY_OBS, param_selection="batch_mean",
                     policy=policy, n_flows=n_flows,
                     fairness_coef=fairness_coef)
-    topology, flows = draw(0)
-    res = train_ppo(params, cfg, topology=topology, flows=flows,
-                    resample_topology=lambda rnd: draw(rnd)[0],
-                    resample_flows=lambda rnd: draw(rnd)[1])
+    res = train_ppo(params, cfg, workload=draw(0), resample=draw)
     pol = FleetPolicy(res.params["policy"], n_max=N_MAX, deterministic=True,
                       obs_spec=effective_obs_spec(cfg), policy=policy)
     return pol, res

@@ -32,10 +32,16 @@ Prints ``name,us_per_call,derived`` CSV rows.
                                     regional_diurnal / link_failover /
                                     cross_traffic — aggregate utilization +
                                     Jain + failover recovery time)
+  beyond  -> bench_faults          (failure & recovery: the fault-trained
+                                    fleet policy vs frozen fault-blind and
+                                    static baselines under seeded
+                                    kill/restart + stage-hang schedules —
+                                    post-failure recovery time, completion
+                                    time, deadline hit-rate)
 
 ``--quick`` runs the CI smoke subset: the substep-backend and per-policy
 episode-cost microbenches plus bench_scenarios, bench_fleet,
-bench_objectives, and bench_topology in quick mode (tiny training
+bench_objectives, bench_topology, and bench_faults in quick mode (tiny training
 budgets) — minutes, not the full suite, so CI catches perf entry points
 that rot without paying for the real numbers.
 
@@ -85,7 +91,7 @@ def main(argv=None) -> None:
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
                             bench_scenarios, bench_fleet, bench_objectives,
-                            bench_topology)
+                            bench_topology, bench_faults)
     def _maybe_profiled(fn):
         """Wrap the fleet-scaling suite in a jax.profiler trace when
         --profile DIR was given."""
@@ -118,6 +124,8 @@ def main(argv=None) -> None:
              lambda rows: bench_objectives.main(rows, quick=True)),
             ("topology_quick",
              lambda rows: bench_topology.main(rows, quick=True)),
+            ("faults_quick",
+             lambda rows: bench_faults.main(rows, quick=True)),
         ]
     else:
         suites = [
@@ -134,6 +142,7 @@ def main(argv=None) -> None:
             ("fleet", bench_fleet.main),
             ("objectives", bench_objectives.main),
             ("topology", bench_topology.main),
+            ("faults", bench_faults.main),
         ]
     print("name,us_per_call,derived")
     failed = []

@@ -219,5 +219,8 @@ class AsyncCheckpointer:
         t = self._thread
         if t is not None:
             t.join()
-        if self.last_error:
-            raise self.last_error
+        # hand the error off exactly once — a failed save must not poison
+        # every later wait() after subsequent saves succeeded
+        err, self.last_error = self.last_error, None
+        if err:
+            raise err

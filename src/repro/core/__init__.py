@@ -66,6 +66,7 @@ from repro.core.networks import (policy_init, policy_apply, value_init,
                                  value_apply, rnn_policy_init,
                                  rnn_policy_apply, rnn_value_init,
                                  rnn_value_apply, rnn_carry)
+from repro.core.workload import Workload
 from repro.core.ppo import PPOConfig, train_ppo, effective_obs_spec
 from repro.core.marlin import MarlinOptimizer
 from repro.core.globus import GlobusController

@@ -345,31 +345,66 @@ class FleetController:
         return [tuple(int(x) for x in row) for row in acts]
 
     def run(self, engines, *, interval=1.0, max_steps=None, total_bytes=None,
-            on_step=None):
+            on_step=None, registry=None, dead_after=None):
         """Drive N live engines until every one reports done() or is closed
         (or ``total_bytes`` moved fleet-wide / ``max_steps`` elapsed).
         Engines that finish early — or are torn down mid-run — keep being
         observed but are masked inactive and no longer steered.
+
+        Health checks: when ``registry`` (a
+        ``repro.runtime.HeartbeatRegistry``) is given, the controller beats
+        ``flow<i>`` for every engine that made byte progress since the last
+        step (and once up front, so nobody is born dead). A flow whose last
+        beat is older than ``dead_after`` seconds is declared DEAD and
+        masked exactly like a closed engine: out of the active mask, no
+        longer steered, and not required for termination — its share of
+        the fleet features (and hence of the policy's allocation) is
+        released to the survivors. A dead flow that resumes making
+        progress (a checkpointed restart) is re-admitted at the next
+        check. ``dead_after`` defaults to ``4 * interval`` when a
+        registry is given.
+
         Returns the trace [(t, [n3 per flow], [goodput per flow])]."""
         import time
 
-        def settled(e):
-            return e.done() or not getattr(e, "alive", True)
+        dead = set()    # flow indices declared dead by the health check
+        if registry is not None and dead_after is None:
+            dead_after = 4.0 * interval
+        last_bytes = [None] * len(engines)
+
+        def settled(i, e):
+            return i in dead or e.done() or not getattr(e, "alive", True)
+
+        def health_check(step):
+            for i, e in enumerate(engines):
+                b = e.bytes_written()
+                # progress (or first sight, or clean completion) = alive
+                if last_bytes[i] is None or b > last_bytes[i] or e.done():
+                    registry.beat(f"flow{i}", step, interval)
+                last_bytes[i] = b
+            now_m = time.monotonic()
+            dead.clear()   # recomputed each check: a flow that resumes
+            for w, (beat_t, _, _) in registry.snapshot().items():
+                if w.startswith("flow") and now_m - beat_t > dead_after:
+                    dead.add(int(w[4:]))   # progress re-enters the fleet
 
         trace = []
         t0 = time.time()
         steps = 0
         while True:
+            if registry is not None:
+                health_check(steps)
             obs = [e.observe() for e in engines]
-            active = np.asarray([0.0 if settled(e) else 1.0
-                                 for e in engines])
+            active = np.asarray([0.0 if settled(i, e) else 1.0
+                                 for i, e in enumerate(engines)])
             # the objective inputs: run-clock seconds + per-flow delivered
             # bytes — the live twins of FleetState.t / .delivered
             delivered = [e.bytes_written() for e in engines]
-            for e, n in zip(engines,
-                            self.step(obs, active, t=time.time() - t0,
-                                      delivered=delivered)):
-                if not settled(e):
+            for i, (e, n) in enumerate(
+                    zip(engines,
+                        self.step(obs, active, t=time.time() - t0,
+                                  delivered=delivered))):
+                if not settled(i, e):
                     e.set_concurrency(n)
             time.sleep(interval)
             obs2 = [e.observe() for e in engines]
@@ -382,7 +417,7 @@ class FleetController:
             moved = sum(e.bytes_written() for e in engines)
             if total_bytes is not None and moved >= total_bytes:
                 break
-            if all(settled(e) for e in engines):
+            if all(settled(i, e) for i, e in enumerate(engines)):
                 break
             if max_steps is not None and steps >= max_steps:
                 break

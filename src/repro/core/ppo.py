@@ -9,13 +9,19 @@ episodes pass without improvement.
 
 ``train_ppo`` covers every training regime through ONE jitted episode fn:
 
-  static          train_ppo(params, cfg) — no tables; the env runs the
+  static          train_ppo(params, cfg) — no workload; the env runs the
                   params' frozen conditions as a 1-bin schedule
-  single schedule train_ppo(params, cfg, tables=<batched table>)
-  domain random.  train_ppo(params, cfg, tables=..., resample=fn) — the
+  single schedule train_ppo(params, cfg, workload=Workload(tables=...))
+  domain random.  train_ppo(params, cfg, workload=..., resample=fn) — the
                   batched schedule tables are a TRACED argument, so redrawing
                   the scenario distribution between episode batches reuses
                   the one compiled program (no per-schedule retrace)
+
+The ``Workload`` bundle (repro.core.workload) carries every scenario axis —
+tables, flow arrivals, per-flow objectives, topology, and fault schedules —
+and ``resample=fn(round) -> Workload`` redraws them together; the samplers
+in repro.scenarios return it directly. The per-axis kwarg pairs below are
+deprecated shims for one cycle.
 
 Beyond-paper: the rollout is vmapped over ``cfg.n_envs`` parallel simulator
 environments and the whole episode+update is one jitted call — this is what
@@ -50,6 +56,7 @@ bit-for-bit.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, replace as dc_replace
 from functools import partial
 
@@ -57,6 +64,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks as nets
+from repro.core.workload import Workload
 from repro.core.fleet import (fleet_reset, fleet_step, fleet_observe,
                               always_on, flow_bucket, pad_flow_schedule,
                               pad_flow_objectives)
@@ -567,61 +575,95 @@ def _broadcast_table(table, n_envs):
         lambda x: jnp.broadcast_to(x, (n_envs,) + x.shape), table)
 
 
-def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
-              resample=None, flows=None, resample_flows=None,
+_LEGACY_KWARG_PAIRS = ("tables", "flows/resample_flows",
+                       "objectives/resample_objectives",
+                       "topology/resample_topology",
+                       "faults/resample_faults")
+
+
+def train_ppo(env_params, cfg: PPOConfig = None, *, workload=None,
+              resample=None, tables=None, flows=None, resample_flows=None,
               objectives=None, resample_objectives=None, topology=None,
-              resample_topology=None, r_max=None, mesh=None, key=None):
+              resample_topology=None, faults=None, resample_faults=None,
+              r_max=None, mesh=None, key=None):
     """Algorithm 2, schedule-native. Returns TrainResult with the BEST (not
     last) params.
 
-    ``tables``: optional batched ScheduleTable with leading axis cfg.n_envs —
-    each env rolls out under its own time-varying conditions, with episode
-    start times drawn uniformly over the horizon. None = the params' static
-    conditions (paper-faithful: one 1-bin schedule, episodes start at t=0).
-    ``resample``: optional ``fn(round_index) -> batched tables`` called
-    before every episode batch to redraw the scenario distribution (same
-    shapes => no retrace); explicitly passed ``tables`` are honored for
-    round 0, resampling starts at round 1.
-    ``flows`` / ``resample_flows``: the fleet twins (cfg.n_flows > 1) — a
-    batched FlowSchedule (leading axis cfg.n_envs) of per-flow activity
-    windows, and the per-round redraw over arrival families
-    (repro.scenarios.sample_fleet_batch). None = every flow active the whole
-    episode.
-    ``objectives`` / ``resample_objectives``: per-flow objectives (batched
-    FlowObjective, leading axis cfg.n_envs) and their per-round redraw —
-    priority tiers, deadlines, rate floors/caps
-    (repro.scenarios.sample_fleet_batch(objective_mix=...)). None = the
-    default objective for every flow (the objective-free reward,
-    bit-for-bit).
-    ``topology`` / ``resample_topology``: the multi-link world — a batched
-    Topology (leading axis cfg.n_envs; LinkGraph + PathSpec, see
-    repro.scenarios.sample_topology_batch) and its per-round redraw. When
-    either is given the rollout swaps to the per-link work-conserving
-    contention solve (topology_step); ``tables``/``resample`` are ignored
-    and episode start times randomize over the graph horizon.
+    ``workload``: a ``repro.core.Workload`` bundling everything one round
+    runs on — batched ScheduleTable (leading axis cfg.n_envs; None = the
+    params' static conditions), batched FlowSchedule activity windows
+    (None = every flow active all episode), batched FlowObjective (None =
+    the default objective — the objective-free reward, bit-for-bit),
+    batched Topology (None = the single-bottleneck fleet world; when
+    present the rollout swaps to the per-link work-conserving
+    topology_step, the workload's tables are ignored, and episode start
+    times randomize over the graph horizon), and per-env FaultSpec
+    schedules (None = the fault-free world, bit-identical; when present
+    each round's kills/hangs/blackouts are compiled into activity-window
+    and capacity edits — ``Workload.compiled()`` — before the jitted
+    episode, so the policy trains through liveness discontinuities).
+    ``repro.scenarios.sample_fleet_batch`` / ``sample_topology_batch``
+    return exactly this bundle.
+    ``resample``: optional ``fn(round_index) -> Workload`` called before
+    every episode batch to redraw the whole distribution (same shapes =>
+    no retrace); an explicitly passed ``workload`` is honored for round 0,
+    resampling starts at round 1. Whether the rollout is topology-mode is
+    fixed by round 0 (the initial workload or ``resample(0)``).
     ``mesh``: optional 1-D jax Mesh over the flow axis
     (repro.launch.make_fleet_mesh) — every resampled FlowSchedule /
     FlowObjective / PathSpec batch is device_put with its F axis sharded
     (repro.sharding.fleet) before the jitted episode, so GSPMD partitions
     the rollout across devices. Combine with ``cfg.pad_flows`` so F always
     divides the mesh. ``cfg.max_active`` flows through to the sparse
-    contention solve (fleet_step/topology_step ``max_active=``)."""
+    contention solve (fleet_step/topology_step ``max_active=``).
+
+    DEPRECATED (one cycle, removal pinned in tests/test_faults.py): the
+    per-axis kwarg pairs — ``tables``/``resample``-returning-tables,
+    ``flows``/``resample_flows``, ``objectives``/``resample_objectives``,
+    ``topology``/``resample_topology``, ``faults``/``resample_faults`` —
+    emit DeprecationWarning and are folded into a Workload internally,
+    compiling to the exact trace the bundled spelling compiles (pinned
+    bitwise in tests/test_faults.py)."""
     cfg = cfg or PPOConfig()
+    legacy = {"tables": tables, "flows": flows, "objectives": objectives,
+              "topology": topology, "faults": faults,
+              "resample_flows": resample_flows,
+              "resample_objectives": resample_objectives,
+              "resample_topology": resample_topology,
+              "resample_faults": resample_faults}
+    if any(v is not None for v in legacy.values()):
+        warnings.warn(
+            "train_ppo's per-axis kwarg pairs "
+            f"({', '.join(_LEGACY_KWARG_PAIRS)}) are deprecated: bundle "
+            "the axes in a repro.core.Workload and pass "
+            "train_ppo(workload=..., resample=fn(round) -> Workload). "
+            "The bundled path compiles to the identical trace.",
+            DeprecationWarning, stacklevel=2)
+        if workload is not None:
+            raise ValueError("pass workload= or the legacy per-axis "
+                             "kwargs, not both")
+        workload = Workload(tables=tables, flows=flows,
+                            objectives=objectives, topology=topology,
+                            faults=faults)
+    wl = workload if workload is not None else Workload()
     if cfg.pad_flows and cfg.n_flows > 1:
         cfg = dc_replace(cfg, n_flows=flow_bucket(cfg.n_flows))
     pad_to = cfg.n_flows if (cfg.pad_flows and cfg.n_flows > 1) else None
     key = key if key is not None else jax.random.PRNGKey(cfg.seed)
     k_init, key = jax.random.split(key)
     train_state = init_agent(k_init, cfg)
-    topo_mode = topology is not None or resample_topology is not None
-    scheduled = tables is not None or resample is not None or topo_mode
-    if tables is None and resample is None and not topo_mode:
-        tables = _broadcast_table(
+    topo_mode = wl.topology is not None or resample_topology is not None
+    scheduled = wl.tables is not None or resample is not None or topo_mode
+    # defaults are filled per round AFTER resampling, from these constants
+    # — the same broadcast arrays every round, so the trace never changes
+    fill_tables = fill_flows = None
+    if wl.tables is None and resample is None and not topo_mode:
+        fill_tables = _broadcast_table(
             constant_table(env_params.tpt, env_params.bw, env_params.duration),
             cfg.n_envs)
-    if ((cfg.n_flows > 1 or topo_mode) and flows is None
+    if ((cfg.n_flows > 1 or topo_mode) and wl.flows is None
             and resample_flows is None):
-        flows = _broadcast_table(always_on(cfg.n_flows), cfg.n_envs)
+        fill_flows = _broadcast_table(always_on(cfg.n_flows), cfg.n_envs)
     # objectives=None stays None (an empty pytree vmaps fine): the
     # objective-blind fleet keeps the exact PR 4 trace instead of a
     # broadcast default — fleet_step folds the defaults in-graph
@@ -638,40 +680,58 @@ def train_ppo(env_params, cfg: PPOConfig = None, *, tables=None,
     n_episodes = 0
     rnd = 0
     by_batch_mean = cfg.param_selection == "batch_mean"
+    warned_table_resample = False
 
     while n_episodes < cfg.max_episodes:
-        if resample is not None and (tables is None or rnd > 0):
-            tables = resample(rnd)
-        if resample_flows is not None and (flows is None or rnd > 0):
-            flows = resample_flows(rnd)
-        if resample_objectives is not None and (objectives is None
+        if resample is not None and ((wl.tables is None
+                                      and wl.topology is None) or rnd > 0):
+            out = resample(rnd)
+            if isinstance(out, Workload):
+                wl = out
+            else:  # legacy fn(round) -> batched tables
+                if not warned_table_resample:
+                    warned_table_resample = True
+                    warnings.warn(
+                        "train_ppo(resample=...) returning bare tables is "
+                        "deprecated: return a repro.core.Workload",
+                        DeprecationWarning, stacklevel=2)
+                wl = wl.replace(tables=out)
+        if resample_flows is not None and (wl.flows is None or rnd > 0):
+            wl = wl.replace(flows=resample_flows(rnd))
+        if resample_objectives is not None and (wl.objectives is None
                                                 or rnd > 0):
-            objectives = resample_objectives(rnd)
-        if resample_topology is not None and (topology is None or rnd > 0):
-            topology = resample_topology(rnd)
-        if pad_to is not None and flows is not None:
-            flows = pad_flow_schedule(flows, pad_to)
-            objectives = pad_flow_objectives(objectives, pad_to)
-            if topology is not None:
-                topology = Topology(graph=topology.graph,
-                                    paths=pad_path_spec(topology.paths,
-                                                        pad_to))
+            wl = wl.replace(objectives=resample_objectives(rnd))
+        if resample_topology is not None and (wl.topology is None or rnd > 0):
+            wl = wl.replace(topology=resample_topology(rnd))
+        if resample_faults is not None and (wl.faults is None or rnd > 0):
+            wl = wl.replace(faults=resample_faults(rnd))
+        run = wl.compiled()  # fault edits (no faults -> wl itself)
+        tables_r = run.tables if run.tables is not None else fill_tables
+        flows_r = run.flows if run.flows is not None else fill_flows
+        objectives_r, topology_r = run.objectives, run.topology
+        if pad_to is not None and flows_r is not None:
+            flows_r = pad_flow_schedule(flows_r, pad_to)
+            objectives_r = pad_flow_objectives(objectives_r, pad_to)
+            if topology_r is not None:
+                topology_r = Topology(graph=topology_r.graph,
+                                      paths=pad_path_spec(topology_r.paths,
+                                                          pad_to))
         if mesh is not None:
             from repro.sharding.fleet import (shard_flow_schedule,
                                               shard_flow_objectives,
                                               shard_path_spec)
-            if flows is not None:
-                flows = shard_flow_schedule(flows, mesh)
-            objectives = shard_flow_objectives(objectives, mesh)
-            if topology is not None:
-                topology = Topology(graph=topology.graph,
-                                    paths=shard_path_spec(topology.paths,
-                                                          mesh))
+            if flows_r is not None:
+                flows_r = shard_flow_schedule(flows_r, mesh)
+            objectives_r = shard_flow_objectives(objectives_r, mesh)
+            if topology_r is not None:
+                topology_r = Topology(graph=topology_r.graph,
+                                      paths=shard_path_spec(topology_r.paths,
+                                                            mesh))
         rnd += 1
         key, k = jax.random.split(key)
-        train_state, ep_rewards, loss = episode_fn(train_state, tables,
-                                                   flows, objectives,
-                                                   topology, k)
+        train_state, ep_rewards, loss = episode_fn(train_state, tables_r,
+                                                   flows_r, objectives_r,
+                                                   topology_r, k)
         ep_rewards = jax.device_get(ep_rewards)
         if by_batch_mean:
             batch_mean = float(ep_rewards.mean())

@@ -1,0 +1,82 @@
+"""Workload: the one bundle a training round consumes.
+
+``train_ppo``'s surface had grown one kwarg PAIR per scenario axis —
+``tables/resample``, ``flows/resample_flows``, ``objectives/
+resample_objectives``, ``topology/resample_topology`` — and the fault axis
+would have made it ten parallel kwargs. A ``Workload`` names the whole
+bundle instead: the batched schedule tables, the flow activity windows,
+the per-flow objectives, the optional multi-link topology, and the
+optional per-env fault schedules, plus the ScenarioSpecs they were drawn
+from. ``repro.scenarios.sample_fleet_batch`` / ``sample_topology_batch``
+return one, and ``train_ppo(workload=..., resample=fn(round) ->
+Workload)`` consumes one per round.
+
+Back-compat (one cycle, the PR 2 -> 3 deprecation pattern): the samplers
+used to return positional tuples — fleet ``(specs, tables, flows,
+objectives)`` and topology ``(specs, topology, flows, objectives)`` — so
+``Workload`` iterates in exactly that order (``topology`` slots in where
+``tables`` sat when present), keeping every ``a, b, c, d = sample_*(...)``
+unpack working. Faults deliberately do NOT join the iteration order;
+that's the point of the bundle — new axes stop growing the tuple.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Optional
+
+
+@dataclass
+class Workload:
+    """Everything one training round runs on. Any field may be None:
+    ``tables`` None means "use the static env params table"; ``topology``
+    None is the single-bottleneck fleet world; ``objectives`` None is the
+    objective-free fleet; ``faults`` None (or an empty list) is the
+    fault-free world — bit-identical to the PR 7 trace.
+
+    ``faults`` is a list of ``repro.scenarios.FaultSpec`` (one per env,
+    None entries allowed) kept UNCOMPILED: ``compiled()`` applies them,
+    returning a new Workload whose tables/flows/topology carry the edits,
+    so the pristine draw stays inspectable."""
+
+    tables: Any = None      # batched ScheduleTable (leading env axis)
+    flows: Any = None       # batched FlowSchedule
+    objectives: Any = None  # batched FlowObjective
+    topology: Any = None    # batched Topology (graph + paths)
+    faults: Any = None      # list[FaultSpec | None], one per env
+    specs: Any = field(default=None, repr=False)  # the ScenarioSpec draws
+
+    def __iter__(self):
+        # legacy tuple order: (specs, tables-or-topology, flows, objectives)
+        yield self.specs
+        yield self.topology if self.topology is not None else self.tables
+        yield self.flows
+        yield self.objectives
+
+    def __len__(self):
+        return 4
+
+    def __getitem__(self, i):
+        # the tuple-compat shim also covers ``batch[1]`` / ``batch[1:3]``
+        return tuple(self)[i]
+
+    def replace(self, **changes) -> "Workload":
+        return replace(self, **changes)
+
+    @property
+    def has_faults(self) -> bool:
+        return bool(self.faults) and any(f is not None for f in self.faults)
+
+    def compiled(self) -> "Workload":
+        """Apply the fault schedules to the sim arrays: kills truncate or
+        carve down windows out of ``flows``, stage hangs zero ScheduleTable
+        bins, link blackouts zero LinkGraph bins. No faults -> self,
+        untouched (the arrays are not even copied)."""
+        if not self.has_faults:
+            return self
+        from repro.scenarios.faults import compile_fault_batch
+        tables, flows, topology = compile_fault_batch(
+            self.faults, tables=self.tables, flows=self.flows,
+            topology=self.topology)
+        return self.replace(tables=tables, flows=flows, topology=topology,
+                            faults=None)

@@ -117,7 +117,12 @@ class FaultTolerantTrainer:
                 report.restarts += 1
                 if restarts > max_restarts:
                     raise
-                self.saver.wait()
+                try:
+                    self.saver.wait()  # drain any in-flight save first
+                except Exception:
+                    # a FAILED save must not kill the restart path — fall
+                    # back to the latest checkpoint that did land on disk
+                    pass
                 if latest_step(self.ckpt_dir) is not None:
                     state, step = load_checkpoint(self.ckpt_dir, state)
                 else:

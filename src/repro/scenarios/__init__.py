@@ -13,9 +13,16 @@ conditions, driven from ONE definition into all three layers —
                 batch sampling (conditions, fleet arrivals, and per-flow
                 objectives: priority tiers / deadlines / rate floors);
                 TopologySpec + sample_topology_batch for the multi-link
-                layer (link graphs, routes)
+                layer (link graphs, routes); both samplers return a
+                repro.core.Workload bundle
+  faults.py     FaultSpec: seeded, JSON-serializable liveness faults
+                (kill_flow / restart_flow / stage_hang / link_blackout)
+                compiled into ScheduleTable / FlowSchedule / LinkGraph
+                edits for the sim, sampled per-env for training
   driver.py     ScenarioDriver: replay against the live TransferEngine
-                (or a SharedLink — anything with retunable ``throttles``)
+                (or a SharedLink — anything with retunable ``throttles``);
+                FaultInjector: replay a FaultSpec's liveness events
+                against live links and engines
   evaluate.py   scoring harness vs static / exploration-only baselines,
                 single-flow, fleet, and topology (aggregate utilization +
                 Jain + failover recovery time)
@@ -35,7 +42,12 @@ from repro.scenarios.spec import (ScenarioSpec, default_specs,
                                   sample_scenario_batch, arrival_schedule,
                                   sample_fleet_batch, sample_objectives,
                                   TopologySpec, sample_topology_batch)
-from repro.scenarios.driver import ScenarioDriver
+from repro.scenarios.faults import (FaultEvent, FaultSpec, sample_faults,
+                                    sample_fault_batch, compile_fault_batch,
+                                    apply_faults_to_table,
+                                    apply_faults_to_flows,
+                                    apply_faults_to_graph)
+from repro.scenarios.driver import ScenarioDriver, FaultInjector
 from repro.scenarios.evaluate import (StaticController, exploration_baseline,
                                       static_baseline, run_in_dynamic_sim,
                                       evaluate_scenario, default_params,

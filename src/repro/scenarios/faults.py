@@ -1,0 +1,392 @@
+"""FaultSpec — liveness faults as a first-class scenario axis.
+
+Scenario families vary RATES; fault specs vary LIVENESS: a flow's endpoint
+crashes mid-transfer and (maybe) comes back, one pipeline stage hangs, a
+whole link browns out to zero and recovers. A ``FaultSpec`` is the same
+kind of object as ``ScenarioSpec`` — a small, seeded, JSON-serializable
+event list — with the same three consumers:
+
+  * the dense JAX simulator: ``compile_fault_batch`` folds the events into
+    the existing ``ScheduleTable`` / ``FlowSchedule`` / ``LinkGraph``
+    machinery, so ``fleet_step`` / ``topology_step`` see faults as
+    activity-window and capacity EDITS (no new traced code — shapes are
+    unchanged, so nothing retraces, and an empty event list leaves every
+    array bitwise untouched);
+  * training: ``sample_fault_batch`` draws per-env fault schedules from
+    their own rng stream (``seed + 0xFA17`` — adding faults never perturbs
+    the table/arrival/objective draws any fault-blind consumer pinned);
+  * the live engine: ``repro.scenarios.driver.FaultInjector`` replays the
+    same events in wall-clock against ``SharedLink`` / ``MultiLink``
+    throttles and real ``TransferEngine`` kills/restarts.
+
+Event kinds and their sim compilation:
+
+  ``kill_flow``      flow f dies at t. With no matching restart the flow's
+                     ``t_end`` truncates to t; with one, the pair compiles
+                     to a ``FlowSchedule`` down window [t_kill, t_restart).
+  ``restart_flow``   flow f comes back at t (requires an earlier kill).
+  ``stage_hang``     stage s delivers nothing on [t, until): the stage's
+                     tpt/bw table bins covering the window drop to zero
+                     (on a LinkGraph: that stage on EVERY link — a hung
+                     endpoint stage is off-path of any individual link).
+  ``link_blackout``  link e delivers nothing on [t, until): all three
+                     stages of link e's bins drop to zero (on a plain
+                     fleet ScheduleTable the single bottleneck IS the
+                     link: all stages drop).
+
+File format (``.faults.json``)::
+
+    {"name": "evening-outage", "seed": 7,
+     "events": [{"kind": "kill_flow", "t": 12.0, "flow": 1},
+                {"kind": "restart_flow", "t": 20.0, "flow": 1},
+                {"kind": "link_blackout", "t": 30.0, "until": 35.0,
+                 "link": 0}]}
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field, asdict
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.fleet import FlowSchedule
+from repro.core.topology import LinkGraph, Topology
+from repro.scenarios.schedule import ScheduleTable
+
+FAULT_KINDS = ("kill_flow", "restart_flow", "stage_hang", "link_blackout")
+
+
+@dataclass
+class FaultEvent:
+    """One liveness event. ``t`` is the sim-clock time it fires; ``until``
+    is the recovery time for the windowed kinds (stage_hang /
+    link_blackout; inf = never recovers). ``flow``/``stage``/``link``
+    address the victim for the kinds that need each."""
+
+    kind: str
+    t: float
+    until: float = math.inf   # stage_hang / link_blackout recovery
+    flow: int = 0             # kill_flow / restart_flow target
+    stage: int = 0            # stage_hang target (0 read, 1 net, 2 write)
+    link: int = 0             # link_blackout target
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"have {FAULT_KINDS}")
+        if self.t < 0:
+            raise ValueError(f"fault time must be >= 0, got {self.t}")
+        if self.kind in ("stage_hang", "link_blackout") \
+                and self.until <= self.t:
+            raise ValueError(f"{self.kind} needs until > t "
+                             f"({self.until} <= {self.t})")
+        if self.kind == "stage_hang" and self.stage not in (0, 1, 2):
+            raise ValueError(f"stage must be 0..2, got {self.stage}")
+
+    def to_dict(self):
+        d = {"kind": self.kind, "t": self.t}
+        if math.isfinite(self.until):
+            d["until"] = self.until
+        if self.kind in ("kill_flow", "restart_flow"):
+            d["flow"] = self.flow
+        if self.kind == "stage_hang":
+            d["stage"] = self.stage
+        if self.kind == "link_blackout":
+            d["link"] = self.link
+        return d
+
+
+@dataclass
+class FaultSpec:
+    """A seeded, serializable fault schedule: the liveness twin of
+    ``ScenarioSpec``. Validation enforces the one-outage-per-flow contract
+    the ``FlowSchedule`` down window can express: at most one kill per
+    flow, each restart paired after a kill of the same flow."""
+
+    name: str = ""
+    seed: int = 0
+    events: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.events = [e if isinstance(e, FaultEvent) else FaultEvent(**e)
+                       for e in self.events]
+        if not self.name:
+            self.name = f"faults-{self.seed}"
+        kills, restarts = {}, {}
+        for e in self.events:
+            if e.kind == "kill_flow":
+                if e.flow in kills:
+                    raise ValueError(f"flow {e.flow} killed twice: the "
+                                     "down-window encoding holds one "
+                                     "kill/restart cycle per flow")
+                kills[e.flow] = e.t
+            elif e.kind == "restart_flow":
+                if e.flow in restarts:
+                    raise ValueError(f"flow {e.flow} restarted twice")
+                restarts[e.flow] = e.t
+        for f, t in restarts.items():
+            if f not in kills:
+                raise ValueError(f"restart of flow {f} without a kill")
+            if t <= kills[f]:
+                raise ValueError(f"flow {f} restarts at {t} before its "
+                                 f"kill at {kills[f]}")
+
+    # -- fault files ------------------------------------------------------
+    def to_dict(self):
+        d = asdict(self)
+        d["events"] = [e.to_dict() for e in self.events]
+        return d
+
+    def to_json(self, path=None):
+        s = json.dumps(self.to_dict(), indent=2, sort_keys=True)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(s + "\n")
+        return s
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**dict(d))
+
+    @classmethod
+    def from_json(cls, s_or_path):
+        s = s_or_path
+        if not s.lstrip().startswith("{"):
+            with open(s_or_path) as f:
+                s = f.read()
+        return cls.from_dict(json.loads(s))
+
+    # -- convenience views ------------------------------------------------
+    def outages(self):
+        """{flow: (t_kill, t_restart)} with t_restart = inf for unrecovered
+        kills — the down-window form the sim compiles to and the live
+        ``FaultInjector`` replays."""
+        kills = {e.flow: e.t for e in self.events if e.kind == "kill_flow"}
+        restarts = {e.flow: e.t for e in self.events
+                    if e.kind == "restart_flow"}
+        return {f: (t, restarts.get(f, math.inf)) for f, t in kills.items()}
+
+
+def _events(spec_or_events):
+    if spec_or_events is None:
+        return []
+    if isinstance(spec_or_events, FaultSpec):
+        return spec_or_events.events
+    return list(spec_or_events)
+
+
+def _zero_bins(arr, bin_seconds, t, until):
+    """Zero the time bins of a (..., T, 3) numpy table slice that overlap
+    [t, until). Bin b covers [b*bin_s, (b+1)*bin_s); right-extension means
+    the LAST bin also covers everything past the horizon."""
+    T = arr.shape[-2]
+    lo = max(int(math.floor(t / bin_seconds)), 0)
+    hi = T if not math.isfinite(until) \
+        else min(int(math.ceil(until / bin_seconds)), T)
+    if math.isfinite(until) and until > T * bin_seconds:
+        hi = T  # past-horizon recovery: the held last bin is dark too
+    return lo, hi
+
+
+def apply_faults_to_flows(spec_or_events, flows: FlowSchedule) -> FlowSchedule:
+    """Compile kill/restart events into one UNBATCHED (F,) FlowSchedule:
+    an unrecovered kill truncates ``t_end``; a kill/restart pair becomes a
+    down window. No kill events -> the input, untouched."""
+    events = [e for e in _events(spec_or_events)
+              if e.kind in ("kill_flow", "restart_flow")]
+    if not events:
+        return flows
+    outages = FaultSpec(events=events).outages()
+    ts = np.asarray(flows.t_start, np.float32).copy()
+    te = np.asarray(flows.t_end, np.float32).copy()
+    F = ts.shape[-1]
+    ds = (np.full_like(ts, np.inf) if flows.down_start is None
+          else np.asarray(flows.down_start, np.float32).copy())
+    de = (np.full_like(ts, np.inf) if flows.down_end is None
+          else np.asarray(flows.down_end, np.float32).copy())
+    for f, (t_kill, t_restart) in outages.items():
+        if not 0 <= f < F:
+            raise ValueError(f"kill_flow targets flow {f} of an F={F} fleet")
+        if math.isfinite(t_restart):
+            if np.isfinite(ds[..., f]).any():
+                raise ValueError(f"flow {f} already carries a down window")
+            ds[..., f] = t_kill
+            de[..., f] = t_restart
+        else:
+            te[..., f] = np.minimum(te[..., f], np.float32(t_kill))
+    return FlowSchedule(t_start=jnp.asarray(ts), t_end=jnp.asarray(te),
+                        down_start=jnp.asarray(ds), down_end=jnp.asarray(de))
+
+
+def apply_faults_to_table(spec_or_events, table: ScheduleTable) \
+        -> ScheduleTable:
+    """Compile stage_hang / link_blackout events into one UNBATCHED (T, 3)
+    ScheduleTable by zeroing the covered bins (a blackout of the single
+    bottleneck link darkens every stage). No capacity events -> the input,
+    untouched."""
+    events = [e for e in _events(spec_or_events)
+              if e.kind in ("stage_hang", "link_blackout")]
+    if not events:
+        return table
+    tpt = np.asarray(table.tpt, np.float32).copy()
+    bw = np.asarray(table.bw, np.float32).copy()
+    bin_s = float(np.asarray(table.bin_seconds))
+    for e in events:
+        lo, hi = _zero_bins(tpt, bin_s, e.t, e.until)
+        cols = slice(None) if e.kind == "link_blackout" \
+            else slice(e.stage, e.stage + 1)
+        tpt[lo:hi, cols] = 0.0
+        bw[lo:hi, cols] = 0.0
+    return ScheduleTable(tpt=jnp.asarray(tpt), bw=jnp.asarray(bw),
+                         bin_seconds=table.bin_seconds)
+
+
+def apply_faults_to_graph(spec_or_events, graph: LinkGraph) -> LinkGraph:
+    """Compile stage_hang / link_blackout events into one UNBATCHED
+    (E, T, 3) LinkGraph: a hang zeroes its stage on EVERY link (the stage
+    is endpoint-side, shared by all paths), a blackout zeroes every stage
+    of its link. No capacity events -> the input, untouched."""
+    events = [e for e in _events(spec_or_events)
+              if e.kind in ("stage_hang", "link_blackout")]
+    if not events:
+        return graph
+    tpt = np.asarray(graph.tpt, np.float32).copy()
+    bw = np.asarray(graph.bw, np.float32).copy()
+    E = tpt.shape[0]
+    bin_s = float(np.asarray(graph.bin_seconds))
+    for e in events:
+        lo, hi = _zero_bins(tpt, bin_s, e.t, e.until)
+        if e.kind == "link_blackout":
+            if not 0 <= e.link < E:
+                raise ValueError(f"link_blackout targets link {e.link} of "
+                                 f"an E={E} graph")
+            tpt[e.link, lo:hi, :] = 0.0
+            bw[e.link, lo:hi, :] = 0.0
+        else:
+            tpt[:, lo:hi, e.stage] = 0.0
+            bw[:, lo:hi, e.stage] = 0.0
+    return LinkGraph(tpt=jnp.asarray(tpt), bw=jnp.asarray(bw),
+                     bin_seconds=graph.bin_seconds)
+
+
+def compile_fault_batch(faults, *, tables=None, flows=None, topology=None):
+    """Apply per-env fault schedules to BATCHED sim structures (leading env
+    axis): ``faults`` is a list of FaultSpec/None, one per env. Returns
+    ``(tables, flows, topology)`` with the edits applied; envs with no
+    faults pass through their slices bitwise unchanged, and an all-None
+    list returns the inputs untouched (same objects). Array shapes never
+    change, so downstream jitted steps never retrace."""
+    faults = list(faults or [])
+    if not any(f is not None for f in faults):
+        return tables, flows, topology
+
+    def _check(n, what):
+        if n != len(faults):
+            raise ValueError(f"{len(faults)} fault schedules for a batch "
+                             f"of {n} {what}")
+
+    if flows is not None:
+        F = flows.t_start.shape
+        if len(F) != 2:
+            raise ValueError(f"compile_fault_batch expects batched (N, F) "
+                             f"flows, got {F}")
+        _check(F[0], "flow schedules")
+        per_env = [FlowSchedule(
+            t_start=flows.t_start[i], t_end=flows.t_end[i],
+            down_start=(None if flows.down_start is None
+                        else flows.down_start[i]),
+            down_end=(None if flows.down_end is None
+                      else flows.down_end[i]))
+            for i in range(F[0])]
+        per_env = [apply_faults_to_flows(f, s)
+                   for f, s in zip(faults, per_env)]
+        from repro.core.fleet import stack_flow_schedules
+        flows = stack_flow_schedules(per_env)
+    if tables is not None:
+        N = tables.tpt.shape[0]
+        _check(N, "tables")
+        edited = [apply_faults_to_table(
+            f, ScheduleTable(tpt=tables.tpt[i], bw=tables.bw[i],
+                             bin_seconds=tables.bin_seconds[i]))
+            for i, f in enumerate(faults)]
+        tables = ScheduleTable(
+            tpt=jnp.stack([t.tpt for t in edited]),
+            bw=jnp.stack([t.bw for t in edited]),
+            bin_seconds=tables.bin_seconds)
+    if topology is not None:
+        graph = topology.graph
+        N = graph.tpt.shape[0]
+        _check(N, "graphs")
+        edited = [apply_faults_to_graph(
+            f, LinkGraph(tpt=graph.tpt[i], bw=graph.bw[i],
+                         bin_seconds=graph.bin_seconds[i]))
+            for i, f in enumerate(faults)]
+        topology = Topology(
+            graph=LinkGraph(tpt=jnp.stack([g.tpt for g in edited]),
+                            bw=jnp.stack([g.bw for g in edited]),
+                            bin_seconds=graph.bin_seconds),
+            paths=topology.paths)
+    return tables, flows, topology
+
+
+def sample_faults(n_flows, *, seed=0, horizon=60.0, n_links=1,
+                  kill_prob=0.4, restart_prob=0.75, hang_prob=0.3,
+                  blackout_prob=0.0, kill_window=(0.2, 0.6),
+                  outage_frac=(0.05, 0.25), hang_frac=(0.05, 0.2)) \
+        -> FaultSpec:
+    """One random fault schedule — the liveness twin of
+    ``arrival_schedule``. Each flow is killed with probability
+    ``kill_prob`` at a uniform time in ``kill_window`` of the horizon and
+    restarts with probability ``restart_prob`` after an outage of
+    ``outage_frac`` of the horizon; with probability ``hang_prob`` one
+    random stage hangs for ``hang_frac`` of the horizon; with probability
+    ``blackout_prob`` (per link, meaningful when ``n_links`` > 1) a link
+    blacks out likewise. Deterministic in ``seed``."""
+    rng = np.random.default_rng(seed)
+    events = []
+    for f in range(n_flows):
+        if rng.random() >= kill_prob:
+            continue
+        t_kill = float(rng.uniform(*kill_window) * horizon)
+        events.append(FaultEvent(kind="kill_flow", t=t_kill, flow=f))
+        if rng.random() < restart_prob:
+            t_back = t_kill + float(rng.uniform(*outage_frac) * horizon)
+            events.append(FaultEvent(kind="restart_flow", t=t_back, flow=f))
+    if rng.random() < hang_prob:
+        t = float(rng.uniform(0.1, 0.7) * horizon)
+        events.append(FaultEvent(
+            kind="stage_hang", t=t,
+            until=t + float(rng.uniform(*hang_frac) * horizon),
+            stage=int(rng.integers(0, 3))))
+    for e in range(n_links):
+        if rng.random() >= blackout_prob:
+            continue
+        t = float(rng.uniform(0.1, 0.7) * horizon)
+        events.append(FaultEvent(
+            kind="link_blackout", t=t,
+            until=t + float(rng.uniform(*hang_frac) * horizon), link=e))
+    return FaultSpec(name=f"faults-{seed}", seed=seed, events=events)
+
+
+def sample_fault_batch(n, n_flows, *, seed=0, horizon=60.0, n_links=1,
+                       fault_prob=1.0, **mix):
+    """``n`` per-env fault schedules for training — drawn from their OWN
+    rng stream (``seed + 0xFA17``), so adding the fault axis to a sampled
+    workload never perturbs the table/arrival/objective draws. Each env
+    carries a schedule with probability ``fault_prob`` (None otherwise —
+    the fault-free env trains alongside the faulted ones); remaining
+    ``mix`` kwargs forward to ``sample_faults``. Deterministic in
+    ``seed``. Returns ``list[FaultSpec | None]`` of length ``n``."""
+    rng = np.random.default_rng(seed + 0xFA17)
+    out = []
+    for _ in range(n):
+        sub = int(rng.integers(0, 2 ** 31 - 1))
+        if rng.random() >= fault_prob:
+            out.append(None)
+            continue
+        out.append(sample_faults(n_flows, seed=sub, horizon=horizon,
+                                 n_links=n_links, **mix))
+    return out

@@ -27,6 +27,7 @@ from repro.core.fleet import (make_flow_schedule, stack_flow_schedules,
                               stack_flow_objectives, PRIORITY_TIERS,
                               flow_bucket, pad_flow_schedule,
                               pad_flow_objectives)
+from repro.core.workload import Workload
 from repro.core.topology import (LinkGraph, PathSpec, Topology,
                                  make_link_graph, make_path_spec,
                                  stack_topologies, pad_path_spec)
@@ -155,7 +156,7 @@ def sample_fleet_batch(n, n_flows, *, arrival_families=None,
                        families=("static",), seed=0, horizon=60.0,
                        bin_seconds=1.0, base_tpt=DEFAULT_TPT,
                        base_bw=DEFAULT_BW, jitter=0.25, objective_mix=None,
-                       pad_flows=False):
+                       fault_mix=None, pad_flows=False):
     """Domain randomization for fleet training: ``n`` (condition table,
     arrival schedule, objective set) triples — conditions drawn like
     ``sample_scenario_batch`` (default: static, so contention is the thing
@@ -169,10 +170,16 @@ def sample_fleet_batch(n, n_flows, *, arrival_families=None,
     ``pad_flows=True`` additionally pads the flow axis to the next
     power-of-two bucket (``flow_bucket``) with never-active, reward-exact
     flows, so batches resampled at DIFFERENT ``n_flows`` inside a bucket
-    share one XLA shape and never retrace either. Deterministic in
-    ``seed``.
+    share one XLA shape and never retrace either. ``fault_mix`` draws a
+    per-env fault schedule the same way ``objective_mix`` draws objectives
+    (a kwargs dict for ``sample_fault_batch``, or ``True`` for its
+    defaults) from its own 0xFA17 stream — the returned faults are
+    UNCOMPILED (``Workload.compiled()`` folds them in); None is the
+    fault-free PR 7 distribution, byte-identical for any given seed.
+    Deterministic in ``seed``.
 
-    Returns ``(specs, tables, flows, objectives)``."""
+    Returns a ``repro.core.Workload``; iterating it yields the legacy
+    ``(specs, tables, flows, objectives)`` tuple for one more cycle."""
     specs, tables = sample_scenario_batch(
         n, families=families, seed=seed, horizon=horizon,
         bin_seconds=bin_seconds, base_tpt=base_tpt, base_bw=base_bw,
@@ -193,12 +200,19 @@ def sample_fleet_batch(n, n_flows, *, arrival_families=None,
         objectives = [sample_objectives(
             n_flows, seed=int(orng.integers(0, 2 ** 31 - 1)),
             horizon=horizon, base_bw=base_bw, **kw) for _ in range(n)]
+    faults = None
+    if fault_mix is not None:
+        from repro.scenarios.faults import sample_fault_batch
+        kw = {} if fault_mix is True else dict(fault_mix)
+        faults = sample_fault_batch(n, n_flows, seed=seed, horizon=horizon,
+                                    **kw)
     flows = stack_flow_schedules(flows)
     objectives = stack_flow_objectives(objectives)
     if pad_flows:
         flows = pad_flow_schedule(flows, flow_bucket(n_flows))
         objectives = pad_flow_objectives(objectives, flow_bucket(n_flows))
-    return specs, tables, flows, objectives
+    return Workload(tables=tables, flows=flows, objectives=objectives,
+                    faults=faults, specs=specs)
 
 
 @dataclass
@@ -280,20 +294,23 @@ def sample_topology_batch(n, n_flows, *, n_links=2, families=None,
                           arrival_families=None, seed=0, horizon=60.0,
                           bin_seconds=1.0, base_tpt=DEFAULT_TPT,
                           base_bw=DEFAULT_BW, jitter=0.25,
-                          objective_mix=None, pad_flows=False):
+                          objective_mix=None, fault_mix=None,
+                          pad_flows=False):
     """Domain randomization for topology training: ``n`` (link graph +
     routes, arrival schedule, objective set) triples — graphs drawn over
     the topology ``families`` with randomized seeds and per-stage jitter
     (the graph twin of ``sample_scenario_batch``), arrivals and objectives
     drawn exactly like ``sample_fleet_batch`` from their own independent
-    streams (0x70B0 / 0x5EED / 0x0BB1 offsets — adding any one axis never
-    perturbs the others). All batched outputs share one shape for any n,
-    so the training step never retraces; ``pad_flows=True`` pads the flow
-    axis (schedules, objectives, AND route rows) to the ``flow_bucket``
-    power-of-two grid so varying ``n_flows`` shares shapes too.
-    Deterministic in ``seed``.
+    streams (0x70B0 / 0x5EED / 0x0BB1 / 0xFA17 offsets — adding any one
+    axis never perturbs the others; ``fault_mix`` works exactly as in
+    ``sample_fleet_batch``, with link blackouts available since E > 1).
+    All batched outputs share one shape for any n, so the training step
+    never retraces; ``pad_flows=True`` pads the flow axis (schedules,
+    objectives, AND route rows) to the ``flow_bucket`` power-of-two grid
+    so varying ``n_flows`` shares shapes too. Deterministic in ``seed``.
 
-    Returns ``(specs, Topology (batched), flows, objectives)``."""
+    Returns a ``repro.core.Workload``; iterating it yields the legacy
+    ``(specs, topology, flows, objectives)`` tuple for one more cycle."""
     families = list(families or TOPOLOGY_FAMILIES)
     rng = np.random.default_rng(seed + 0x70B0)
     specs = []
@@ -321,6 +338,13 @@ def sample_topology_batch(n, n_flows, *, n_links=2, families=None,
         objectives = [sample_objectives(
             n_flows, seed=int(orng.integers(0, 2 ** 31 - 1)),
             horizon=horizon, base_bw=base_bw, **kw) for _ in range(n)]
+    faults = None
+    if fault_mix is not None:
+        from repro.scenarios.faults import sample_fault_batch
+        kw = {} if fault_mix is True else dict(fault_mix)
+        kw.setdefault("n_links", n_links)
+        faults = sample_fault_batch(n, n_flows, seed=seed, horizon=horizon,
+                                    **kw)
     flows = stack_flow_schedules(flows)
     objectives = stack_flow_objectives(objectives)
     if pad_flows:
@@ -329,7 +353,8 @@ def sample_topology_batch(n, n_flows, *, n_links=2, families=None,
         topology = Topology(graph=topology.graph,
                             paths=pad_path_spec(topology.paths,
                                                 flow_bucket(n_flows)))
-    return specs, topology, flows, objectives
+    return Workload(topology=topology, flows=flows, objectives=objectives,
+                    faults=faults, specs=specs)
 
 
 def sample_scenario_batch(n, *, families=None, seed=0, horizon=60.0,

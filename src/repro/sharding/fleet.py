@@ -48,10 +48,14 @@ def _put(x, mesh, flow_dim, n_flows):
 
 
 def shard_flow_schedule(flows, mesh):
-    """FlowSchedule with the F (last) axis of both windows sharded."""
+    """FlowSchedule with the F (last) axis of every window sharded —
+    activity and (when present) fault down windows alike; None down
+    windows stay None (the fault-free trace)."""
     F = flows.n_flows
     return type(flows)(t_start=_put(flows.t_start, mesh, -1, F),
-                       t_end=_put(flows.t_end, mesh, -1, F))
+                       t_end=_put(flows.t_end, mesh, -1, F),
+                       down_start=_put(flows.down_start, mesh, -1, F),
+                       down_end=_put(flows.down_end, mesh, -1, F))
 
 
 def shard_flow_objectives(objectives, mesh):

@@ -11,3 +11,14 @@ from repro.transfer.engine import (
     PathGate,
     MultiLink,
 )
+from repro.transfer.recovery import (
+    RetryPolicy,
+    CircuitBreaker,
+    acquire_with_retry,
+    FlowCursor,
+    CursorSink,
+    ResumableSource,
+    save_cursor,
+    load_cursor,
+    CheckpointedFlow,
+)

@@ -428,11 +428,23 @@ class TransferEngine:
                  sender_buf=64 << 20, receiver_buf=64 << 20,
                  throttles=(None, None, None),
                  initial_concurrency=(1, 1, 1), n_max=64,
-                 metric_interval=1.0):
+                 metric_interval=1.0, retry=None):
         self.source = source
         self.sink = sink
         self.buffers = (BoundedBuffer(sender_buf), BoundedBuffer(receiver_buf))
         self.throttles = [t or StageThrottle() for t in throttles]
+        self.retry = retry
+        self.breakers = None
+        if retry is not None:
+            # opt-in resilience (repro.transfer.recovery): stage acquires
+            # poll try_acquire under backoff, and a per-stage circuit
+            # breaker parks the stage's workers through an outage instead
+            # of letting them hammer the bucket lock. None (default) is
+            # the blocking acquire, untouched.
+            from repro.transfer.recovery import CircuitBreaker
+            self.breakers = [CircuitBreaker(retry.failure_threshold,
+                                            retry.cooldown)
+                             for _ in range(3)]
         self.n_max = n_max
         self.metric_interval = metric_interval
         self._stats = [_StageStats(), _StageStats(), _StageStats()]
@@ -451,7 +463,15 @@ class TransferEngine:
     def _acquire(self, stage, nbytes):
         """Throttle acquire that observes engine shutdown: close() flips
         _alive and workers parked in an outage bin or a token wait unwind
-        within one poll interval instead of never."""
+        within one poll interval instead of never. With ``retry`` set, the
+        acquire goes through the backoff + circuit-breaker path instead of
+        blocking (same grant/abort contract)."""
+        if self.retry is not None:
+            from repro.transfer.recovery import acquire_with_retry
+            return acquire_with_retry(
+                self.throttles[stage], nbytes, policy=self.retry,
+                breaker=self.breakers[stage],
+                should_abort=lambda: not self._alive)
         return self.throttles[stage].acquire(
             nbytes, should_abort=lambda: not self._alive)
 

@@ -1,0 +1,363 @@
+"""Failure-and-recovery scenario axis + the Workload API consolidation.
+
+Pins, in order of importance:
+  * the NO-FAULT default is bit-identical to the PR 7 trace (atol=0):
+    schedules without down windows run the exact same program, and a
+    MATERIALIZED all-inf down window is an exact no-op through
+    fleet_reset/fleet_step;
+  * FaultSpec/FaultEvent validate and JSON-round-trip like ScenarioSpec;
+  * compiling faults edits exactly the targeted env slices — kill
+    truncates, kill+restart carves a down window, hangs/blackouts zero
+    bins — with shapes unchanged and fault-free envs bitwise untouched;
+  * the fault stream (seed + 0xFA17) is INDEPENDENT: adding fault_mix to
+    a sampled workload never perturbs the table/arrival/objective draws;
+  * Workload is the sampler return and the train_ppo input; legacy tuple
+    unpack/indexing and legacy kwargs survive ONE deprecation cycle with
+    the training trace pinned bitwise-identical. REMOVAL PIN: the legacy
+    kwargs (tables=, flows=, resample_flows=, objectives=,
+    resample_objectives=, topology=, resample_topology=) and the tuple
+    iteration order are scheduled for deletion NEXT cycle — when removing
+    them, delete the tests in the "legacy surface" section below too.
+"""
+
+import json
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Workload
+from repro.core.fleet import (make_flow_schedule, stack_flow_schedules,
+                              active_at, pad_flow_schedule, fleet_reset,
+                              fleet_step, always_on)
+from repro.core.ppo import PPOConfig, train_ppo
+from repro.core.schedule import make_table, stack_tables
+from repro.core.simulator import make_env_params, FLEET_OBS
+from repro.scenarios import (FaultEvent, FaultSpec, sample_faults,
+                             sample_fault_batch, compile_fault_batch,
+                             apply_faults_to_table, apply_faults_to_flows,
+                             apply_faults_to_graph, sample_fleet_batch,
+                             sample_topology_batch)
+
+pytestmark = pytest.mark.ft
+
+
+def _params():
+    return make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1], cap=[2, 2],
+                           n_max=50)
+
+
+def _tree_equal(a, b):
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb)
+    for x, y in zip(fa, fb):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity of the no-fault default (atol=0) — the acceptance pin
+# ---------------------------------------------------------------------------
+
+def test_no_down_fields_by_default():
+    f = make_flow_schedule([0.0, 5.0], [30.0, 30.0])
+    assert f.down_start is None and f.down_end is None
+
+
+def test_materialized_inf_down_window_is_exact_noop():
+    """fleet_reset + fleet_step with an all-inf down window must produce
+    BITWISE the same states/obs/rewards as the down=None PR 7 path."""
+    p = _params()
+    base = make_flow_schedule([0.0, 5.0, 2.0], [30.0, 30.0, 20.0])
+    inf = jnp.full(3, jnp.inf)
+    faulted = make_flow_schedule(base.t_start, base.t_end, inf, inf)
+    key = jax.random.PRNGKey(3)
+    st0 = fleet_reset(p, key, 3, flows=base)
+    st1 = fleet_reset(p, key, 3, flows=faulted)
+    _tree_equal(st0, st1)
+    acts = jnp.ones((3, 3), jnp.float32)
+    for _ in range(4):
+        st0, obs0, r0 = fleet_step(p, st0, acts, flows=base)
+        st1, obs1, r1 = fleet_step(p, st1, acts, flows=faulted)
+        _tree_equal(st0, st1)
+        assert np.array_equal(np.asarray(obs0), np.asarray(obs1))
+        assert float(r0) == float(r1)
+
+
+def test_active_at_masks_down_window():
+    f = make_flow_schedule([0.0, 0.0], [30.0, 30.0],
+                           [5.0, jnp.inf], [9.0, jnp.inf])
+    assert np.array_equal(np.asarray(active_at(f, 4.0)), [1.0, 1.0])
+    assert np.array_equal(np.asarray(active_at(f, 6.0)), [0.0, 1.0])
+    assert np.array_equal(np.asarray(active_at(f, 10.0)), [1.0, 1.0])
+    # vectorized time axis keeps the (S, F) contract
+    m = np.asarray(active_at(f, jnp.asarray([4.0, 6.0, 10.0])))
+    assert m.shape == (3, 2)
+    assert np.array_equal(m[:, 0], [1.0, 0.0, 1.0])
+
+
+def test_stack_and_pad_preserve_down_semantics():
+    a = make_flow_schedule([0.0], [30.0], [5.0], [9.0])
+    b = make_flow_schedule([0.0], [30.0])
+    s = stack_flow_schedules([a, b])
+    assert np.asarray(s.down_start).shape == (2, 1)
+    assert np.isinf(np.asarray(s.down_start)[1]).all()  # missing = no-op
+    assert stack_flow_schedules([b, b]).down_start is None  # all-None stays
+    padded = pad_flow_schedule(a, 4)
+    assert np.asarray(padded.down_start).shape == (4,)
+    assert np.isinf(np.asarray(padded.down_start)[1:]).all()
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec validation + JSON round trip
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="nope", t=1.0)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="kill_flow", t=-1.0)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="stage_hang", t=5.0, until=5.0)  # empty window
+    with pytest.raises(ValueError):
+        FaultEvent(kind="stage_hang", t=1.0, until=2.0, stage=3)
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):  # two kills of one flow
+        FaultSpec(name="x", events=[
+            FaultEvent(kind="kill_flow", t=1.0, flow=0),
+            FaultEvent(kind="kill_flow", t=2.0, flow=0)])
+    with pytest.raises(ValueError):  # restart before its kill
+        FaultSpec(name="x", events=[
+            FaultEvent(kind="kill_flow", t=5.0, flow=0),
+            FaultEvent(kind="restart_flow", t=4.0, flow=0)])
+
+
+def test_fault_spec_json_round_trip():
+    spec = sample_faults(4, seed=11, horizon=60.0, blackout_prob=0.5,
+                         n_links=2)
+    s = spec.to_json()
+    back = FaultSpec.from_json(s)
+    assert back == spec
+    assert json.loads(s)["seed"] == 11
+
+
+def test_outages_map():
+    spec = FaultSpec(name="x", events=[
+        FaultEvent(kind="kill_flow", t=5.0, flow=1),
+        FaultEvent(kind="restart_flow", t=9.0, flow=1),
+        FaultEvent(kind="kill_flow", t=7.0, flow=2)])
+    out = spec.outages()
+    assert out[1] == (5.0, 9.0)
+    assert out[2][0] == 7.0 and np.isinf(out[2][1])
+
+
+# ---------------------------------------------------------------------------
+# Compilation: faults -> activity-window / capacity edits
+# ---------------------------------------------------------------------------
+
+def test_apply_faults_to_flows():
+    flows = make_flow_schedule([0.0, 0.0, 0.0], [30.0, 30.0, 30.0])
+    spec = FaultSpec(name="x", events=[
+        FaultEvent(kind="kill_flow", t=10.0, flow=0),                # dies
+        FaultEvent(kind="kill_flow", t=5.0, flow=1),                 # outage
+        FaultEvent(kind="restart_flow", t=9.0, flow=1)])
+    out = apply_faults_to_flows(spec, flows)
+    assert float(out.t_end[0]) == 10.0          # unrecovered kill truncates
+    assert float(out.t_end[1]) == 30.0
+    assert float(out.down_start[1]) == 5.0 and float(out.down_end[1]) == 9.0
+    assert np.isinf(float(out.down_start[2]))   # untouched flow: no window
+
+
+def test_apply_faults_to_table_and_blackout():
+    tpt = np.full((6, 3), 0.2, np.float32)
+    bw = np.full((6, 3), 1.0, np.float32)
+    table = make_table(tpt, bw, bin_seconds=2.0)
+    out = apply_faults_to_table(
+        FaultSpec(name="x", events=[
+            FaultEvent(kind="stage_hang", t=4.0, until=8.0, stage=1)]),
+        table)
+    tb = np.asarray(out.bw)
+    assert np.array_equal(tb[:, 0], bw[:, 0])        # other stages intact
+    assert np.array_equal(tb[2:4, 1], [0.0, 0.0])    # bins [4, 8) zeroed
+    assert tb[1, 1] == 1.0 and tb[4, 1] == 1.0
+    # a blackout on a single-link table is a full outage: every stage
+    out2 = apply_faults_to_table(
+        FaultSpec(name="x", events=[
+            FaultEvent(kind="link_blackout", t=0.0, until=2.0)]), table)
+    assert np.array_equal(np.asarray(out2.bw)[0], np.zeros(3))
+
+
+def test_apply_faults_to_graph():
+    from repro.core.topology import make_link_graph
+    tpt = np.full((2, 5, 3), 0.2, np.float32)
+    bw = np.full((2, 5, 3), 1.0, np.float32)
+    g = make_link_graph(tpt, bw, 1.0)
+    out = apply_faults_to_graph(
+        FaultSpec(name="x", events=[
+            FaultEvent(kind="link_blackout", t=1.0, until=3.0, link=1),
+            FaultEvent(kind="stage_hang", t=0.0, until=1.0, stage=2)]), g)
+    b = np.asarray(out.bw)
+    assert np.array_equal(b[1, 1:3], np.zeros((2, 3)))   # link 1 dark
+    assert np.array_equal(b[:, 0, 2], np.zeros(2))       # stage 2 hangs
+    assert b[0, 1, 0] == 1.0                             # rest intact
+    with pytest.raises(ValueError):
+        apply_faults_to_graph(
+            FaultSpec(name="x", events=[
+                FaultEvent(kind="link_blackout", t=1.0, until=3.0,
+                           link=7)]), g)
+
+
+def test_compile_fault_batch_touches_only_faulted_envs():
+    wl = sample_fleet_batch(3, 2, seed=4, horizon=30.0)
+    spec = FaultSpec(name="x", events=[
+        FaultEvent(kind="kill_flow", t=10.0, flow=0),
+        FaultEvent(kind="stage_hang", t=2.0, until=6.0, stage=0)])
+    tables, flows, _ = compile_fault_batch(
+        [None, spec, None], tables=wl.tables, flows=wl.flows)
+    assert tables.tpt.shape == wl.tables.tpt.shape
+    assert flows.t_start.shape == wl.flows.t_start.shape
+    for i in (0, 2):   # fault-free envs bitwise untouched
+        assert np.array_equal(np.asarray(tables.bw[i]),
+                              np.asarray(wl.tables.bw[i]))
+        assert np.array_equal(np.asarray(flows.t_end[i]),
+                              np.asarray(wl.flows.t_end[i]))
+    assert float(flows.t_end[1, 0]) == 10.0
+    assert (np.asarray(tables.bw[1, 2:6, 0]) == 0.0).all()
+    # all-None short-circuits: the very same objects come back
+    t2, f2, _ = compile_fault_batch([None, None, None], tables=wl.tables,
+                                    flows=wl.flows)
+    assert t2 is wl.tables and f2 is wl.flows
+
+
+# ---------------------------------------------------------------------------
+# Sampler determinism + stream independence
+# ---------------------------------------------------------------------------
+
+def test_sample_fault_batch_deterministic():
+    a = sample_fault_batch(6, 3, seed=9, horizon=60.0)
+    b = sample_fault_batch(6, 3, seed=9, horizon=60.0)
+    assert a == b
+    assert a != sample_fault_batch(6, 3, seed=10, horizon=60.0)
+    # fault_prob honors the per-env draw without shifting later sub-seeds
+    sparse = sample_fault_batch(6, 3, seed=9, horizon=60.0, fault_prob=0.0)
+    assert sparse == [None] * 6
+
+
+def test_fault_stream_independent_of_other_axes():
+    """Adding fault_mix must leave tables/flows/objectives byte-identical —
+    the same independence contract the objective stream pinned."""
+    base = sample_fleet_batch(4, 3, seed=5, horizon=30.0,
+                              objective_mix=True)
+    with_f = sample_fleet_batch(4, 3, seed=5, horizon=30.0,
+                                objective_mix=True, fault_mix=True)
+    assert base.faults is None and with_f.has_faults
+    _tree_equal(base.tables, with_f.tables)
+    _tree_equal(base.flows, with_f.flows)
+    _tree_equal(base.objectives, with_f.objectives)
+    # topology sampler: same contract
+    tb = sample_topology_batch(3, 2, n_links=2, seed=5, horizon=30.0)
+    tf = sample_topology_batch(3, 2, n_links=2, seed=5, horizon=30.0,
+                               fault_mix=dict(blackout_prob=0.6))
+    _tree_equal(tb.topology, tf.topology)
+    _tree_equal(tb.flows, tf.flows)
+
+
+# ---------------------------------------------------------------------------
+# Workload: the bundle and its compiled() view
+# ---------------------------------------------------------------------------
+
+def test_workload_compiled_no_faults_is_self():
+    wl = sample_fleet_batch(2, 2, seed=0, horizon=30.0)
+    assert wl.compiled() is wl
+    assert not wl.has_faults
+
+
+def test_workload_compiled_applies_faults_and_keeps_draw():
+    wl = sample_fleet_batch(2, 2, seed=0, horizon=30.0,
+                            fault_mix=dict(kill_prob=1.0, restart_prob=1.0,
+                                           hang_prob=1.0))
+    run = wl.compiled()
+    assert run.faults is None and wl.has_faults   # pristine draw kept
+    assert run.flows.down_start is not None
+    assert run.tables.tpt.shape == wl.tables.tpt.shape
+
+
+# ---------------------------------------------------------------------------
+# train_ppo: workload/resample is the API; faults train end-to-end
+# ---------------------------------------------------------------------------
+
+def _cfg(**kw):
+    kw.setdefault("max_episodes", 6)
+    kw.setdefault("n_envs", 2)
+    kw.setdefault("n_flows", 2)
+    kw.setdefault("max_steps", 4)
+    kw.setdefault("obs_spec", FLEET_OBS)
+    kw.setdefault("log_every", 0)
+    return PPOConfig(**kw)
+
+
+def test_train_ppo_workload_with_faults_smoke():
+    p = _params()
+
+    def draw(rnd):
+        return sample_fleet_batch(
+            2, 2, seed=rnd, horizon=30.0,
+            fault_mix=dict(kill_prob=0.8, hang_prob=0.5)
+        ).replace(objectives=None, specs=None)
+
+    res = train_ppo(p, _cfg(), workload=draw(0), resample=draw)
+    assert res.episodes == 6
+    assert np.isfinite(res.history).all()
+
+
+def test_train_ppo_fault_free_workload_matches_legacy_trace():
+    """The consolidation pin: workload= must run the EXACT episode stream
+    the legacy kwargs ran — bitwise-equal training histories."""
+    p = _params()
+    wl = sample_fleet_batch(2, 2, seed=3, horizon=30.0).replace(
+        objectives=None, specs=None)
+    res_new = train_ppo(p, _cfg(seed=1), workload=wl)
+    with pytest.deprecated_call():
+        res_old = train_ppo(p, _cfg(seed=1), tables=wl.tables,
+                            flows=wl.flows)
+    assert np.array_equal(np.asarray(res_new.history),
+                          np.asarray(res_old.history))
+
+
+# ---------------------------------------------------------------------------
+# Legacy surface — DELETE this whole section when the kwargs are removed
+# ---------------------------------------------------------------------------
+
+def test_workload_iterates_and_indexes_like_the_legacy_tuple():
+    wl = sample_fleet_batch(2, 3, seed=7, horizon=30.0)
+    specs, tables, flows, objectives = wl
+    assert specs is wl.specs and tables is wl.tables
+    assert flows is wl.flows and objectives is wl.objectives
+    assert len(wl) == 4
+    assert wl[1] is wl.tables and wl[1:3] == (wl.tables, wl.flows)
+    # topology batches slot the graph where tables sat
+    tw = sample_topology_batch(2, 2, n_links=2, seed=7, horizon=30.0)
+    _, topo, _, _ = tw
+    assert topo is tw.topology
+
+
+def test_train_ppo_legacy_kwargs_warn_and_conflict():
+    p = _params()
+    wl = sample_fleet_batch(2, 2, seed=3, horizon=30.0)
+    with pytest.deprecated_call():
+        train_ppo(p, _cfg(max_episodes=2), tables=wl.tables)
+    with pytest.raises(ValueError):
+        train_ppo(p, _cfg(max_episodes=2), workload=Workload(),
+                  tables=wl.tables)
+
+
+def test_train_ppo_legacy_resample_tables_warns_once():
+    p = _params()
+    wl = sample_fleet_batch(2, 2, seed=3, horizon=30.0)
+    with pytest.deprecated_call():
+        res = train_ppo(p, _cfg(max_episodes=4),
+                        resample=lambda rnd: wl.tables)
+    assert res.episodes == 4
