@@ -1,0 +1,258 @@
+"""Live-path scale-out bench: per-interval controller cost at fleet size F.
+
+Two questions, one suite (``controller_scaling``):
+
+1. What does ONE control interval cost the live ``FleetController`` at
+   F in {8, 64, 512, 4096}?  The pre-PR 9 hot path — one Python
+   ``_FrameBuilder`` per flow, a jnp ``objective_features`` call with a
+   device pull per interval, host-side sampling/round/clip after the
+   jitted network apply — is kept here verbatim as the LOOP baseline and
+   raced against the array-native ``step_arrays`` path (vectorized (F, ...)
+   frame matrix, ONE fused jitted dispatch). Synthetic observe matrices
+   and a SMALL policy net (hidden=32): the network forward is the same
+   compiled matmul in both paths, so the race must measure the controller
+   architecture around it, not model FLOPs (the training-size net's
+   (4096, 256) blocks drown a ~45 ms Python loop in ~45 ms of matmul on
+   CPU, hiding the very overhead this suite exists to pin).
+
+2. What does one full SIM step cost with observe + reward included, dense
+   over F vs the compact-active-set sparse path (``max_active``)?  Same
+   Poisson arrival schedule as the training-side scale-out rows
+   (``fleet_scaling``): at F=4096 the window bound gives A=256, so the
+   sparse step's advantage is structural; at F=64 the two are expected at
+   parity (A ~ F, the gather is overhead, the row documents that it's
+   benign).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _synthetic_obs(F, rng):
+    """Batched (F, ...) observation arrays, plausible live-engine ranges."""
+    return {
+        "threads": rng.integers(1, 40, size=(F, 3)).astype(float),
+        "throughputs": rng.uniform(0.05, 1.2, size=(F, 3)),
+        "sender_free": rng.uniform(0.1, 2.0, size=F),
+        "receiver_free": rng.uniform(0.1, 2.0, size=F),
+        "sender_capacity": np.full(F, 2.0),
+        "receiver_capacity": np.full(F, 2.0),
+    }
+
+
+def _as_dicts(obs):
+    """Batched arrays -> per-flow observe() dicts (the loop baseline's
+    input shape)."""
+    F = obs["throughputs"].shape[0]
+    return [{
+        "threads": obs["threads"][i].tolist(),
+        "throughputs": obs["throughputs"][i].tolist(),
+        "sender_free": float(obs["sender_free"][i]),
+        "receiver_free": float(obs["receiver_free"][i]),
+        "sender_capacity": float(obs["sender_capacity"][i]),
+        "receiver_capacity": float(obs["receiver_capacity"][i]),
+    } for i in range(F)]
+
+
+class _LoopBaseline:
+    """The pre-PR 9 per-flow controller hot path, preserved as the bench
+    baseline: a Python loop building one frame per flow (float64 scalar
+    ops), per-flow Python max scans for the shared bandwidth reference, the
+    objective block via the jnp ``objective_features`` (one device
+    round-trip per interval), then the jitted network apply with HOST-side
+    deterministic round/clip. Same spec, params, and inputs as the
+    vectorized path — the race measures the architecture, not the model."""
+
+    def __init__(self, params, *, n_max, bw_ref, interval, objectives):
+        import jax
+        from repro.core import networks as nets
+        self.params = params
+        self.n_max = n_max
+        self.bw_ref = bw_ref
+        self.interval = interval
+        self.objectives = objectives
+        self._apply = jax.jit(nets.policy_apply)
+        self._prev = {}
+
+    def _frame(self, i, o):
+        threads = np.asarray(o["threads"], float)
+        tps = np.asarray(o["throughputs"], float)
+        s_cap = max(o["sender_capacity"], 1e-9)
+        r_cap = max(o["receiver_capacity"], 1e-9)
+        parts = [threads / self.n_max, tps / self.bw_ref,
+                 np.asarray([o["sender_free"] / s_cap,
+                             o["receiver_free"] / r_cap])]
+        prev = self._prev.get(i, tps)
+        parts.append((tps - prev) / self.bw_ref)
+        parts.append(np.asarray([
+            (tps[1] - tps[0]) * self.interval / s_cap,
+            (tps[2] - tps[1]) * self.interval / r_cap]))
+        self._prev[i] = tps
+        return np.concatenate(parts)
+
+    def step(self, obs_list, t=0.0, delivered=None):
+        import jax.numpy as jnp
+        from repro.core.fleet import objective_features
+        F = len(obs_list)
+        base = np.stack([self._frame(i, o)
+                         for i, o in enumerate(obs_list)])
+        shared = max(self.bw_ref,
+                     *(max(o["throughputs"]) for o in obs_list))
+        net = np.asarray([o["throughputs"][1] for o in obs_list])
+        agg = net.sum()
+        fleet = np.stack([np.full(F, 1.0), np.full(F, agg / shared),
+                          net / max(agg, 1e-9)], axis=-1)
+        obj = np.asarray(objective_features(
+            self.objectives, float(t),
+            jnp.asarray(delivered, jnp.float32),
+            bw_ref=shared, duration=self.interval))
+        frames = np.concatenate([base, fleet, obj],
+                                axis=-1).astype(np.float32)
+        mean, _std = self._apply(self.params, frames)
+        return np.clip(np.round(np.asarray(mean)), 1,
+                       self.n_max).astype(int)
+
+
+def _time_step(fn, *, iters):
+    fn()
+    fn()  # two warm-ups: compile, then warm the carry/prev signatures
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters
+
+
+def _controller_rows(rows, *, Fs, iters):
+    import jax
+    from repro.core import networks as nets
+    from repro.core.controller import FleetController
+    from repro.core.fleet import make_flow_objective
+    from repro.core.simulator import ObservationSpec
+
+    spec = ObservationSpec(context=True, fleet=True, objectives=True)
+    # hidden=32: controller-architecture race, not a matmul race (see
+    # module docstring)
+    params = nets.policy_init(jax.random.PRNGKey(0), obs_dim=spec.dim,
+                              act_dim=3, hidden=32)
+    per = {}
+    for F in Fs:
+        rng = np.random.default_rng(F)
+        obs = _synthetic_obs(F, rng)
+        dicts = _as_dicts(obs)
+        delivered = rng.uniform(0.0, 5.0, size=F)
+        obj = make_flow_objective(
+            F, tiers=[("gold", "silver", "bronze", "bronze")[i % 4]
+                      for i in range(F)],
+            deadline=np.where(np.arange(F) % 4 == 0, 30.0, np.inf),
+            demand=np.where(np.arange(F) % 4 == 0, 6.0, np.inf))
+
+        loop = _LoopBaseline(params, n_max=50.0, bw_ref=1.0, interval=1.0,
+                             objectives=obj)
+        dt = _time_step(lambda: loop.step(dicts, t=5.0,
+                                          delivered=delivered),
+                        iters=iters)
+        per[(F, "loop")] = dt
+        rows.append((f"controller.step_F{F}_loop_us", dt * 1e6,
+                     f"{dt * 1e3:.2f} ms per interval (per-flow Python "
+                     f"loop, pre-PR 9 path)"))
+
+        ctrl = FleetController(params, n_flows=F, n_max=50.0, bw_ref=1.0,
+                               deterministic=True, obs_spec=spec,
+                               interval=1.0, objectives=obj)
+        dt = _time_step(lambda: ctrl.step_arrays(obs, t=5.0,
+                                                 delivered=delivered),
+                        iters=iters)
+        per[(F, "vec")] = dt
+        rows.append((f"controller.step_F{F}_vectorized_us", dt * 1e6,
+                     f"{dt * 1e3:.2f} ms per interval (array-native, one "
+                     f"jitted dispatch; {ctrl.fleet_policy._act_cache_size()}"
+                     f" compile)"))
+        ratio = per[(F, "loop")] / max(per[(F, "vec")], 1e-12)
+        rows.append((f"controller.vectorized_speedup_F{F}", ratio * 1e6,
+                     f"{ratio:.1f}x vectorized over per-flow loop at F={F}"))
+    return per
+
+
+def _sim_step_rows(rows, *, iters, substeps):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.fleet import (FleetState, FlowSchedule, fleet_step,
+                                  flow_bucket, make_flow_objective,
+                                  max_concurrent_flows)
+    from repro.core.simulator import ObservationSpec, make_env_params
+    from repro.scenarios.families import poisson_arrivals
+
+    spec = ObservationSpec(context=True, fleet=True, objectives=True)
+    p = make_env_params(tpt=[0.2, 0.15, 0.2], bw=[1, 1, 1], cap=[2, 2],
+                        n_max=50)
+    per = {}
+    for F in (64, 4096):
+        ts, te = poisson_arrivals(F, 60.0, seed=7, hold_frac=0.01)
+        flows = FlowSchedule(t_start=jnp.asarray(ts),
+                             t_end=jnp.asarray(te))
+        A = min(flow_bucket(max_concurrent_flows(flows, window=p.duration)),
+                F)
+        obj = make_flow_objective(
+            F, tiers=[("gold", "silver", "bronze", "bronze")[i % 4]
+                      for i in range(F)],
+            deadline=np.where(np.arange(F) % 4 == 0, 30.0, np.inf),
+            demand=np.where(np.arange(F) % 4 == 0, 6.0, np.inf))
+        state = FleetState(
+            buffers=jnp.zeros((F, 2), jnp.float32),
+            threads=jnp.full((F, 3), 8.0),
+            throughputs=jnp.zeros((F, 3), jnp.float32),
+            t=jnp.float32(0.0),
+            prev_throughputs=jnp.zeros((F, 3), jnp.float32),
+            delivered=jnp.zeros((F,), jnp.float32))
+        acts = jnp.full((F, 3), 8.0)
+        for name, ma in (("dense", None), ("sparse", A)):
+            def one(st=[state]):
+                st[0], obs, rew = fleet_step(
+                    p, st[0], acts, flows=flows, substeps=substeps,
+                    spec=spec, objectives=obj, fairness_coef=0.3,
+                    max_active=ma)
+                return st[0], obs, rew
+            one(); out = one()
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = one()
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / iters
+            per[(F, name)] = dt
+            note = f"A={ma}" if ma is not None else "full F"
+            rows.append((f"controller.fleet_step_obs_F{F}_{name}_us",
+                         dt * 1e6,
+                         f"{dt * 1e3:.2f} ms per step incl observe+reward "
+                         f"(F={F}, {note})"))
+        ratio = per[(F, "dense")] / max(per[(F, "sparse")], 1e-12)
+        rows.append((f"controller.sparse_obs_speedup_F{F}", ratio * 1e6,
+                     f"{ratio:.2f}x sparse over dense at F={F} "
+                     f"(observe+reward included)"))
+    return per
+
+
+def controller_scaling(rows=None, *, Fs=(8, 64, 512, 4096), iters=None,
+                       substeps=None, quick=False):
+    rows = rows if rows is not None else []
+    iters = iters if iters is not None else (3 if quick else 10)
+    substeps = substeps if substeps is not None else (20 if quick else 50)
+    _controller_rows(rows, Fs=Fs, iters=iters)
+    _sim_step_rows(rows, iters=iters, substeps=substeps)
+    return rows
+
+
+def main(rows=None, *, quick=False):
+    return controller_scaling(rows, quick=quick)
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _ROOT)
+    for n, us, derived in main(quick="--quick" in sys.argv[1:]):
+        print(f"{n},{us:.1f},{derived}")

@@ -38,12 +38,24 @@ Prints ``name,us_per_call,derived`` CSV rows.
                                     kill/restart + stage-hang schedules —
                                     post-failure recovery time, completion
                                     time, deadline hit-rate)
+  beyond  -> bench_controller      (live-path scale-out: per-interval
+                                    FleetController cost at F up to 4096,
+                                    per-flow Python loop baseline vs the
+                                    array-native one-dispatch path, plus
+                                    full sim step dense vs sparse with
+                                    observe+reward included)
 
 ``--quick`` runs the CI smoke subset: the substep-backend and per-policy
 episode-cost microbenches plus bench_scenarios, bench_fleet,
-bench_objectives, bench_topology, and bench_faults in quick mode (tiny training
-budgets) — minutes, not the full suite, so CI catches perf entry points
-that rot without paying for the real numbers.
+bench_objectives, bench_topology, bench_faults, and bench_controller in
+quick mode (tiny training budgets) — minutes, not the full suite, so CI
+catches perf entry points that rot without paying for the real numbers.
+
+``--suite NAME[,NAME...]`` runs only the named suite(s) from the selected
+set (quick names with ``--quick``, full names otherwise) — e.g.
+``run.py --quick --suite controller_scaling_quick`` re-measures one suite
+without paying for the rest. Unknown names fail fast, listing what's
+available.
 
 ``--json PATH`` additionally writes every row to PATH as JSON — CI uploads
 the quick rows as a ``BENCH_<pr>.json`` artifact per PR, the repo's
@@ -85,13 +97,20 @@ def main(argv=None) -> None:
         i = argv.index("--profile")
         if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
             sys.exit("usage: run.py [--quick] [--json PATH] "
-                     "[--profile DIR]")
+                     "[--profile DIR] [--suite NAME[,NAME...]]")
         profile_dir = argv[i + 1]
+    only = None
+    if "--suite" in argv:
+        i = argv.index("--suite")
+        if i + 1 >= len(argv) or argv[i + 1].startswith("-"):
+            sys.exit("usage: run.py [--quick] [--json PATH] "
+                     "[--profile DIR] [--suite NAME[,NAME...]]")
+        only = [s for s in argv[i + 1].split(",") if s]
     from benchmarks import (bench_training_time, bench_convergence,
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
                             bench_scenarios, bench_fleet, bench_objectives,
-                            bench_topology, bench_faults)
+                            bench_topology, bench_faults, bench_controller)
     def _maybe_profiled(fn):
         """Wrap the fleet-scaling suite in a jax.profiler trace when
         --profile DIR was given."""
@@ -126,6 +145,9 @@ def main(argv=None) -> None:
              lambda rows: bench_topology.main(rows, quick=True)),
             ("faults_quick",
              lambda rows: bench_faults.main(rows, quick=True)),
+            ("controller_scaling_quick",
+             lambda rows: bench_controller.controller_scaling(rows,
+                                                              quick=True)),
         ]
     else:
         suites = [
@@ -143,7 +165,15 @@ def main(argv=None) -> None:
             ("objectives", bench_objectives.main),
             ("topology", bench_topology.main),
             ("faults", bench_faults.main),
+            ("controller_scaling", bench_controller.controller_scaling),
         ]
+    if only is not None:
+        known = {n for n, _ in suites}
+        bad = [s for s in only if s not in known]
+        if bad:
+            sys.exit(f"run.py: unknown suite(s) {', '.join(bad)} — "
+                     f"available: {', '.join(sorted(known))}")
+        suites = [(n, fn) for n, fn in suites if n in only]
     print("name,us_per_call,derived")
     failed = []
     all_rows = []

@@ -24,20 +24,26 @@ makes it thread the recurrent carry (zeros at reset) across consecutive
 unchanged (pinned by the live/sim parity tests).
 
 Fleets transfer too: ``FleetController`` runs ONE shared policy across N
-live engines on a SharedLink — each engine's observe() dict becomes one
-per-flow frame (the same ``_FrameBuilder`` the single-flow controller
-uses), the cross-flow features (active fraction, aggregate utilization,
-my-share) are appended exactly as ``repro.core.fleet.fleet_observe``
-derives them, and ``FleetPolicy`` applies the policy to the whole
-(F, frame_dim) matrix at once (the networks broadcast over leading axes).
+live engines on a SharedLink. The per-step cost is O(fleet) array work, not
+O(fleet) Python work: ``_FleetFrames`` builds the whole (F, frame_dim)
+matrix from batched (F, ...) observation arrays in a handful of NumPy ops
+(no per-flow frame loop), the objective block rides the NumPy twin of
+``objective_features`` (no device round-trip on the observe path), and
+``FleetPolicy`` runs ONE jitted dispatch per control interval — sampling,
+rounding, and clamping fused into the compiled step, the GRU carry donated
+to its own update — pulling the whole (F, 3) action matrix back at once.
+The array-native entry points (``frames_arrays``/``step_arrays``) take the
+batched arrays directly (``SharedLink.observe_all`` telemetry);
+``frames``/``step`` keep the list-of-observe()-dicts contract and stack it.
 
 Heterogeneous objectives transfer the same way: hand ``FleetController`` a
 ``FlowObjective`` (in ENGINE units — bytes and wall seconds) and an
 objective-aware spec, and it appends the identical per-flow
-priority/slack/urgency block ``fleet_observe`` emits — literally the same
-``objective_features`` function, fed the controller's run clock and the
-engines' delivered-byte counters — so a policy trained against sim
-objectives steers live flows with deadlines unchanged."""
+priority/slack/urgency block ``fleet_observe`` emits — the same
+``objective_features`` program (NumPy twin, equality-pinned), fed the
+controller's run clock and the engines' delivered-byte counters — so a
+policy trained against sim objectives steers live flows with deadlines
+unchanged."""
 
 from __future__ import annotations
 
@@ -47,18 +53,42 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import networks as nets
-from repro.core.fleet import (FlowObjective, objective_features,
+from repro.core.fleet import (FlowObjective, objective_features_np,
                               default_objectives)
-from repro.core.simulator import ObservationSpec, DEFAULT_OBS
+from repro.core.simulator import ObservationSpec, DEFAULT_OBS, TOPO_DIM
 from repro.core.topology import topology_features
 
+_OBS_KEYS = ("threads", "throughputs", "sender_free", "receiver_free",
+             "sender_capacity", "receiver_capacity")
 
-class _FrameBuilder:
-    """One flow's observation frame from consecutive observe() dicts — the
-    live twin of one row of ``simulator.observe`` / ``fleet.fleet_observe``
-    (base dims + optional schedule context). Holds the per-flow running
-    state: previous throughputs (context deltas) and the running bandwidth
-    max used when no explicit normalization reference is given."""
+
+def _stack_observations(obs_list):
+    """List of per-flow observe() dicts -> dict of (F, ...) float arrays,
+    the batched-observation form the array-native controller entry points
+    take (``SharedLink.observe_all`` yields the list in attach order)."""
+    return {k: np.asarray([o[k] for o in obs_list], float)
+            for k in _OBS_KEYS}
+
+
+def _observe_fleet(engines):
+    """One batched telemetry pass: every engine snapshotted against ONE
+    timestamp (``observe_at``) so the per-flow rate windows cannot skew
+    apart across a large fleet; engines without the batched hook fall back
+    to their own clock."""
+    import time
+    now = time.monotonic()
+    return [e.observe_at(now) if hasattr(e, "observe_at") else e.observe()
+            for e in engines]
+
+
+class _FleetFrames:
+    """The whole fleet's per-flow observation frames from consecutive
+    BATCHED observations — the vectorized live twin of the base (+ context)
+    rows of ``fleet.fleet_observe``, computed on (F, ...) matrices with no
+    per-flow Python loop (F=1 is the single-flow frame, which is how
+    ``AutoMDTController`` rides it). Holds the cross-step running state:
+    previous throughputs (context deltas) and the running bandwidth max
+    used when no explicit normalization reference is given."""
 
     def __init__(self, *, n_max, bw_ref, obs_spec: ObservationSpec,
                  interval):
@@ -67,41 +97,49 @@ class _FrameBuilder:
         self.obs_spec = obs_spec
         self.interval = interval
         self._bw_seen = 1e-9
-        self._prev_tps = None
+        self._prev_tps = None     # (F, 3) float64
 
     def reset(self):
         self._bw_seen = 1e-9
         self._prev_tps = None
 
-    def bw(self, obs: dict):
-        if self.bw_ref:
-            return self.bw_ref
-        # running max, not the instantaneous max: under time-varying
-        # conditions the observation scale must not shrink with every
-        # bandwidth dip (training normalizes by the schedule's PEAK)
-        self._bw_seen = max(self._bw_seen, max(obs["throughputs"]), 1e-9)
+    def bw(self, tps):
+        """Scalar normalization reference: the explicit ``bw_ref`` when
+        given — 0 is a legitimate (clamped) explicit reference, not "unset"
+        — else the fleet-wide RUNNING max, not the instantaneous max:
+        under time-varying conditions the observation scale must not
+        shrink with every bandwidth dip (training normalizes by the
+        schedule's PEAK)."""
+        if self.bw_ref is not None:
+            return max(float(self.bw_ref), 1e-9)
+        if tps.size:
+            self._bw_seen = max(self._bw_seen, float(tps.max()), 1e-9)
         return self._bw_seen
 
-    def frame(self, obs: dict):
-        bw = self.bw(obs)
+    def frames(self, obs):
+        """dict of (F, ...) arrays -> (F, base_dim) float32 frame block."""
+        threads = np.asarray(obs["threads"], float)
         tps = np.asarray(obs["throughputs"], float)
+        bw = self.bw(tps)
+        s_cap = np.maximum(np.asarray(obs["sender_capacity"], float), 1e-9)
+        r_cap = np.maximum(np.asarray(obs["receiver_capacity"], float),
+                           1e-9)
         parts = [
-            np.asarray(obs["threads"], float) / self.n_max,
+            threads / self.n_max,
             tps / bw,
-            [obs["sender_free"] / max(obs["sender_capacity"], 1e-9),
-             obs["receiver_free"] / max(obs["receiver_capacity"], 1e-9)],
+            np.stack([np.asarray(obs["sender_free"], float) / s_cap,
+                      np.asarray(obs["receiver_free"], float) / r_cap],
+                     axis=-1),
         ]
         if self.obs_spec.context:
             prev = self._prev_tps if self._prev_tps is not None else tps
             parts.append((tps - prev) / bw)
-            parts.append([
-                (tps[1] - tps[0]) * self.interval
-                / max(obs["sender_capacity"], 1e-9),
-                (tps[2] - tps[1]) * self.interval
-                / max(obs["receiver_capacity"], 1e-9),
-            ])
+            parts.append(np.stack([
+                (tps[:, 1] - tps[:, 0]) * self.interval / s_cap,
+                (tps[:, 2] - tps[:, 1]) * self.interval / r_cap,
+            ], axis=-1))
         self._prev_tps = tps
-        return np.concatenate(parts).astype(np.float32)
+        return np.concatenate(parts, axis=-1).astype(np.float32)
 
 
 class AutoMDTController:
@@ -120,8 +158,8 @@ class AutoMDTController:
         # "stacked" vs "mlp" is decided by obs_spec.history; only the
         # recurrent path needs a different apply fn + carry
         self.policy = "gru" if policy == "gru" else "mlp"
-        self._frames = _FrameBuilder(n_max=n_max, bw_ref=bw_ref,
-                                     obs_spec=obs_spec, interval=interval)
+        self._frames = _FleetFrames(n_max=n_max, bw_ref=bw_ref,
+                                    obs_spec=obs_spec, interval=interval)
         # the temporal stepping (K-frame window / GRU carry / action
         # sampling+clipping) is the F=1 slice of the fleet policy — ONE
         # implementation of the live/sim transfer contract
@@ -138,7 +176,7 @@ class AutoMDTController:
         return self._policy._carry
 
     def _frame_vector(self, obs: dict):
-        return self._frames.frame(obs)
+        return self._frames.frames(_stack_observations([obs]))[0]
 
     def _obs_vector(self, obs: dict):
         """Network input under the spec: one frame (history=1, the PR 2
@@ -195,7 +233,15 @@ class FleetPolicy:
     ((F, H), zeros at reset) the fleet rollout used in training — so
     fleet-trained params drop in unchanged. Shared by the sim-side fleet
     evaluation (frames from ``fleet_observe``) and the live
-    ``FleetController`` (frames from engine observe() dicts)."""
+    ``FleetController`` (frames from engine observe() dicts).
+
+    The whole act step — network apply, Gaussian sampling, round, clamp —
+    is ONE jitted function compiled once per fleet size: a single device
+    dispatch per control interval, the GRU carry donated to its own update,
+    and the (F, 3) action matrix pulled back in one transfer.
+    ``n_dispatch`` counts dispatches and ``_act_cache_size()`` exposes the
+    compile cache, so the hot-loop regression test can pin "one dispatch
+    per step, zero recompiles" directly."""
 
     def __init__(self, policy_params, *, n_max=100, deterministic=True,
                  seed=0, obs_spec: ObservationSpec = DEFAULT_OBS,
@@ -208,10 +254,38 @@ class FleetPolicy:
         self.obs_spec = obs_spec
         self.policy = "gru" if policy == "gru" else "mlp"
         self._key = jax.random.PRNGKey(seed)
-        self._apply = jax.jit(nets.rnn_policy_apply if self.policy == "gru"
-                              else nets.policy_apply)
+        self.n_dispatch = 0  # jitted dispatches issued (one per act step)
+        self._act_fn = self._make_act_fn()
         self._hist = None   # (F, K, frame_dim) when obs_spec.history > 1
         self._carry = None  # (F, H) GRU carry
+
+    def _make_act_fn(self):
+        n_max = float(self.n_max)
+        deterministic = self.deterministic
+
+        def _sample(key, mean, std):
+            if deterministic:
+                return key, mean
+            key, k = jax.random.split(key)
+            return key, mean + std * jax.random.normal(k, mean.shape)
+
+        if self.policy == "gru":
+            def _act(params, carry, key, vec):
+                carry, mean, std = nets.rnn_policy_apply(params, carry, vec)
+                key, a = _sample(key, mean, std)
+                return carry, key, jnp.clip(jnp.round(a), 1.0, n_max)
+            return jax.jit(_act, donate_argnums=(1,))
+
+        def _act(params, key, vec):
+            mean, std = nets.policy_apply(params, vec)
+            key, a = _sample(key, mean, std)
+            return key, jnp.clip(jnp.round(a), 1.0, n_max)
+        return jax.jit(_act)
+
+    def _act_cache_size(self):
+        """Entries in the act step's jit cache — constant across steps at
+        a fixed fleet size (the zero-recompile pin)."""
+        return self._act_fn._cache_size()
 
     def reset(self):
         self._hist = None
@@ -220,32 +294,30 @@ class FleetPolicy:
     def _window(self, frames):
         """Maintain the per-flow zero-padded K-frame windows: (F, frame_dim)
         new frames -> (F, dim) network input (K=1 passes frames through)."""
+        frames = np.asarray(frames, np.float32)
         n_flows = frames.shape[0]
         K = self.obs_spec.history
         if K == 1:
-            return jnp.asarray(frames)
+            return frames
         if self._hist is None:
             self._hist = np.zeros((n_flows, K, frames.shape[1]), np.float32)
         self._hist = np.concatenate([self._hist[:, 1:],
                                      frames[:, None]], axis=1)
-        return jnp.asarray(self._hist.reshape(n_flows, -1))
+        return self._hist.reshape(n_flows, -1)
 
     def _action(self, vec):
         """(F, dim) network input -> (F, 3) int thread allocations,
-        threading the GRU carry when recurrent."""
+        threading the GRU carry when recurrent — ONE jitted dispatch."""
+        vec = np.asarray(vec, np.float32)
         if self.policy == "gru":
             if self._carry is None:
                 self._carry = nets.rnn_carry(self.params, (vec.shape[0],))
-            self._carry, mean, std = self._apply(self.params, self._carry,
-                                                 vec)
+            self._carry, self._key, a = self._act_fn(
+                self.params, self._carry, self._key, vec)
         else:
-            mean, std = self._apply(self.params, vec)
-        if self.deterministic:
-            a = mean
-        else:
-            self._key, k = jax.random.split(self._key)
-            a = mean + std * jax.random.normal(k, mean.shape)
-        return np.clip(np.round(np.asarray(a)), 1, self.n_max).astype(int)
+            self._key, a = self._act_fn(self.params, self._key, vec)
+        self.n_dispatch += 1
+        return np.asarray(a).astype(int)
 
     def act(self, frames):
         """frames: (F, frame_dim) -> (F, 3) int thread allocations."""
@@ -254,13 +326,15 @@ class FleetPolicy:
 
 class FleetController:
     """Production phase for a FLEET: one shared policy drives N live engines
-    contending on a SharedLink, mirroring the sim contention model. Each
-    engine's observe() dict becomes one per-flow frame; when the spec
-    carries the fleet dims, the cross-flow features are appended exactly as
-    ``fleet_observe`` computes them — active fraction, aggregate network
-    utilization over ``bw_ref``, and each flow's share of the aggregate —
-    so sim-trained fleet params transfer unchanged (live/sim parity is
-    pinned in tests/test_fleet.py)."""
+    contending on a SharedLink, mirroring the sim contention model. The
+    batched observations become the (F, frame_dim) matrix in a handful of
+    array ops (``_FleetFrames``); when the spec carries the fleet dims, the
+    cross-flow features are appended exactly as ``fleet_observe`` computes
+    them — active fraction, aggregate network utilization over ``bw_ref``,
+    and each flow's share of the aggregate — so sim-trained fleet params
+    transfer unchanged (live/sim parity is pinned in tests/test_fleet.py,
+    and the vectorized frames are pinned bit-identical to the pre-PR 9
+    per-flow builder in tests/test_controller_vectorized.py)."""
 
     def __init__(self, policy_params, *, n_flows, n_max=100, bw_ref=None,
                  deterministic=True, seed=0,
@@ -275,81 +349,108 @@ class FleetController:
         # controller's run clock, demand in the engines' byte counters'
         # units) — only consulted when the spec carries the objective dims
         self.objectives = objectives
-        self._builders = [
-            _FrameBuilder(n_max=n_max, bw_ref=bw_ref, obs_spec=obs_spec,
-                          interval=interval)
-            for _ in range(n_flows)]
+        self._frames = _FleetFrames(n_max=n_max, bw_ref=bw_ref,
+                                    obs_spec=obs_spec, interval=interval)
         self.fleet_policy = FleetPolicy(policy_params, n_max=n_max,
                                         deterministic=deterministic,
                                         seed=seed, obs_spec=obs_spec,
                                         policy=policy)
 
     def reset(self):
-        for b in self._builders:
-            b.reset()
+        self._frames.reset()
         self.fleet_policy.reset()
+
+    def _frame_width(self):
+        """Frame dims this class emits (the topology block is the
+        subclass's job)."""
+        w = self.obs_spec.frame_dim
+        if getattr(self.obs_spec, "topology", False):
+            w -= TOPO_DIM
+        return w
 
     def _fleet_bw(self):
         # the aggregate-utilization normalization: the explicit reference
-        # when given, else the largest running max any flow has seen
-        return self.bw_ref or max(max(b._bw_seen for b in self._builders),
-                                  1e-9)
+        # when given (0 is explicit too — clamped, not discarded), else
+        # the fleet-wide running max
+        if self.bw_ref is not None:
+            return max(float(self.bw_ref), 1e-9)
+        return max(self._frames._bw_seen, 1e-9)
 
     def frames(self, obs_list, active=None, t=0.0, delivered=None):
-        """(F, frame_dim) matrix from the engines' observe() dicts.
+        """(F, frame_dim) matrix from the engines' observe() dicts — the
+        list contract; stacks the dicts and defers to ``frames_arrays``.
+        An empty fleet snapshot yields an empty (0, frame_dim) matrix."""
+        return self.frames_arrays(_stack_observations(obs_list), active,
+                                  t=t, delivered=delivered)
+
+    def frames_arrays(self, obs, active=None, t=0.0, delivered=None):
+        """(F, frame_dim) matrix from a BATCHED observation: ``obs`` maps
+        the observe() keys to (F, ...) arrays (``threads``/``throughputs``
+        (F, 3), the buffer fields (F,) or scalars broadcast per flow).
         ``active``: optional (F,) 0/1 mask of flows currently transferring
         (default: all) — inactive flows are masked out of the aggregate and
         share features, as in the sim. When the spec carries the objective
         dims, ``t`` (seconds on the run clock) and ``delivered`` ((F,)
         bytes written per flow, default zeros) feed the same
-        ``objective_features`` block the sim emits."""
+        ``objective_features`` block the sim emits (NumPy twin)."""
+        tps = np.asarray(obs["throughputs"], float)
+        F = tps.shape[0]
+        if F == 0:
+            return np.zeros((0, self._frame_width()), np.float32)
         if self.bw_ref is None:
             # ONE shared normalization reference across the whole fleet —
             # the sim divides every flow by the same schedule peak, so a
             # flow that only ever ran under contention must not see its
             # throughputs ~2x larger than a flow that once held the link
-            shared = max(self._fleet_bw(),
-                         *(max(o["throughputs"]) for o in obs_list))
-            for b in self._builders:
-                b._bw_seen = shared
-        base = np.stack([b.frame(o)
-                         for b, o in zip(self._builders, obs_list)])
+            self._frames._bw_seen = max(self._frames._bw_seen,
+                                        float(tps.max()), 1e-9)
+        base = self._frames.frames(obs)
         if self.obs_spec.fleet:
-            act = (np.ones(self.n_flows) if active is None
+            act = (np.ones(F) if active is None
                    else np.asarray(active, float))
-            net = np.asarray([o["throughputs"][1] for o in obs_list],
-                             float) * act
+            net = tps[:, 1] * act
             agg = net.sum()
             rows = np.stack([
-                np.full(self.n_flows, act.sum() / self.n_flows),
-                np.full(self.n_flows, agg / self._fleet_bw()),
+                np.full(F, act.sum() / max(self.n_flows, 1)),
+                np.full(F, agg / self._fleet_bw()),
                 net / max(agg, 1e-9),
             ], axis=-1)
             base = np.concatenate([base, rows], axis=-1)
         if self.obs_spec.objectives:
             obj = (self.objectives if self.objectives is not None
-                   else default_objectives(self.n_flows))
-            dlv = (np.zeros(self.n_flows) if delivered is None
+                   else default_objectives(F))
+            dlv = (np.zeros(F) if delivered is None
                    else np.asarray(delivered, float))
-            # literally the sim's feature block — ONE definition
-            rows = np.asarray(objective_features(
-                obj, float(t), jnp.asarray(dlv, jnp.float32),
-                bw_ref=self._fleet_bw(), duration=self.interval))
+            # the sim's feature block, NumPy twin — ONE definition
+            rows = objective_features_np(obj, float(t), dlv,
+                                         bw_ref=self._fleet_bw(),
+                                         duration=self.interval)
             base = np.concatenate([base, rows], axis=-1)
         return base.astype(np.float32)
 
     def step(self, obs_list, active=None, t=0.0, delivered=None):
         """List of observe() dicts -> list of (n_r, n_n, n_w) tuples."""
-        acts = self.fleet_policy.act(
-            self.frames(obs_list, active, t=t, delivered=delivered))
+        acts = self.step_arrays(_stack_observations(obs_list), active,
+                                t=t, delivered=delivered)
         return [tuple(int(x) for x in row) for row in acts]
+
+    def step_arrays(self, obs, active=None, t=0.0, delivered=None):
+        """Batched observation dict -> (F, 3) int action matrix in ONE
+        jitted dispatch — the array-native hot path."""
+        frames = self.frames_arrays(obs, active, t=t, delivered=delivered)
+        if frames.shape[0] == 0:
+            return np.zeros((0, 3), int)
+        return self.fleet_policy.act(frames)
 
     def run(self, engines, *, interval=1.0, max_steps=None, total_bytes=None,
             on_step=None, registry=None, dead_after=None):
         """Drive N live engines until every one reports done() or is closed
         (or ``total_bytes`` moved fleet-wide / ``max_steps`` elapsed).
         Engines that finish early — or are torn down mid-run — keep being
-        observed but are masked inactive and no longer steered.
+        observed but are masked inactive and no longer steered. Telemetry
+        is batched: every engine is snapshotted against one shared
+        timestamp per control interval (``observe_at``), so the per-flow
+        rate windows stay aligned across the fleet.
 
         Health checks: when ``registry`` (a
         ``repro.runtime.HeartbeatRegistry``) is given, the controller beats
@@ -394,7 +495,7 @@ class FleetController:
         while True:
             if registry is not None:
                 health_check(steps)
-            obs = [e.observe() for e in engines]
+            obs = _observe_fleet(engines)
             active = np.asarray([0.0 if settled(i, e) else 1.0
                                  for i, e in enumerate(engines)])
             # the objective inputs: run-clock seconds + per-flow delivered
@@ -407,7 +508,7 @@ class FleetController:
                 if not settled(i, e):
                     e.set_concurrency(n)
             time.sleep(interval)
-            obs2 = [e.observe() for e in engines]
+            obs2 = _observe_fleet(engines)
             trace.append((time.time() - t0,
                           [tuple(o["threads"]) for o in obs2],
                           [o["throughputs"][2] for o in obs2]))
@@ -462,13 +563,15 @@ class TopologyController(FleetController):
              else min(int(t / self._route_bin), self._onpath.shape[0] - 1))
         return self._onpath[r]
 
-    def frames(self, obs_list, active=None, t=0.0, delivered=None):
-        base = super().frames(obs_list, active, t=t, delivered=delivered)
+    def frames_arrays(self, obs, active=None, t=0.0, delivered=None):
+        base = super().frames_arrays(obs, active, t=t, delivered=delivered)
         if not getattr(self.obs_spec, "topology", False):
             return base
-        act = (np.ones(self.n_flows) if active is None
+        if base.shape[0] == 0:
+            return np.zeros((0, self.obs_spec.frame_dim), np.float32)
+        act = (np.ones(base.shape[0]) if active is None
                else np.asarray(active, float))
-        net = np.asarray([o["throughputs"][1] for o in obs_list], float)
+        net = np.asarray(obs["throughputs"], float)[:, 1]
         # literally the sim's feature block — ONE definition
         rows = np.asarray(topology_features(self.routes(t), net, act,
                                             self.link_bw_ref))

@@ -280,7 +280,8 @@ def _rollout_fleet(policy_params, env_params, table, flows, objectives, key,
                         backend=backend, objectives=objectives,
                         max_active=max_active)
     obs0 = fleet_observe(env_params, state, flows=flows, table=table,
-                         spec=fspec, objectives=objectives)
+                         spec=fspec, objectives=objectives,
+                         max_active=max_active)
     hist0 = jax.vmap(lambda f: history_init(spec, f))(obs0)  # (F, K, D)
     recurrent = policy == "gru"
 
@@ -336,7 +337,8 @@ def _rollout_topology(policy_params, env_params, topo, flows, objectives,
                            spec=fspec, backend=backend,
                            objectives=objectives, max_active=max_active)
     obs0 = topology_observe(env_params, state, graph=graph, paths=paths,
-                            flows=flows, spec=fspec, objectives=objectives)
+                            flows=flows, spec=fspec, objectives=objectives,
+                            max_active=max_active)
     hist0 = jax.vmap(lambda f: history_init(spec, f))(obs0)  # (F, K, D)
     recurrent = policy == "gru"
 

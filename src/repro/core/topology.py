@@ -59,7 +59,8 @@ from repro.core.fleet import (FlowSchedule, FlowObjective, FleetState,
                               always_on, active_at, default_objectives,
                               fleet_observe, _delivered_or_zeros,
                               _integrate_fleet_rates, _fleet_reward,
-                              _window_flow_ids, _gather_compact)
+                              _window_flow_ids, _gather_compact,
+                              _sparse_fleet_observe)
 
 # The topology state is the fleet state: per-flow buffers/threads/
 # throughputs, one shared sim clock, per-flow delivered counters. Only the
@@ -346,14 +347,19 @@ def _solve_topology_rates(params: SimParams, graph: LinkGraph,
 
 def _sparse_topology_interval(params: SimParams, graph, paths, buffers,
                               threads, t0, flows: FlowSchedule, substeps,
-                              backend, objectives, max_active: int):
+                              backend, objectives, max_active: int,
+                              return_compact=False):
     """Compact-active-set fast path of ``topology_interval``: the fleet
     gather plus a column gather of the routing matrix, and the sort-based
     water-fill instead of the F-round spill loop (O(A log A) in the
     compact size). No-cap fleets match the dense solve to float32 ulp
     noise (the same reassociation caveat as ``_sparse_fleet_interval``);
     capped fleets match the spill loop's fixed point at 1e-5 (the sorted
-    fill reaches the same limit in closed form)."""
+    fill reaches the same limit in closed form).
+
+    ``return_compact`` additionally hands back the interval's gather so
+    ``topology_step`` scores the reward on the same compact set — see
+    ``_sparse_fleet_interval``."""
     F = flows.n_flows
     idx = _window_flow_ids(flows, t0, params.duration, max_active)
     c_threads, c_flows, c_objs = _gather_compact(idx, F, threads, flows,
@@ -370,6 +376,9 @@ def _sparse_topology_interval(params: SimParams, graph, paths, buffers,
     c_bufs, c_tps = _integrate_fleet_rates(params, c_bufs, rates, backend)
     new_buffers = buffers.at[idx].set(c_bufs, mode="drop")
     tps = jnp.zeros_like(threads).at[idx].set(c_tps, mode="drop")
+    if return_compact:
+        return (new_buffers, tps, idx, valid, c_tps, c_threads, c_flows,
+                c_objs)
     return new_buffers, tps
 
 
@@ -440,15 +449,59 @@ def topology_features(onpath, net_tps, active, link_bw_ref):
     return jnp.stack([b_util, path_len, my_share], axis=-1)
 
 
+def _sparse_topology_observe(params: SimParams, state: TopologyState, *,
+                             flows, graph, paths, spec, objectives,
+                             max_active: int):
+    """Compact-active-set fast path of ``topology_observe``: the sparse
+    fleet-observe gather plus a row gather of the routing matrix feeding
+    ``topology_features`` on the compact set (the per-link load sums drop
+    only exact +0.0 terms — inactive flows contribute ``net * 0``).
+    Ungathered rows scatter back as EXACTLY zero; gathered rows match the
+    dense path to float32 ulp. Same contract as ``_sparse_fleet_observe``."""
+    F = state.threads.shape[0]
+    base = _sparse_fleet_observe(params, state, flows=flows, spec=spec,
+                                 objectives=objectives,
+                                 bw_ref=graph_peak_bw(graph),
+                                 max_active=max_active)
+    if not getattr(spec, "topology", False):
+        return base
+    idx = _window_flow_ids(flows, state.t, params.duration, max_active)
+    safe = jnp.minimum(idx, F - 1)
+    valid = idx < F
+    c_flows = FlowSchedule(
+        t_start=jnp.where(valid, flows.t_start[safe], jnp.inf),
+        t_end=jnp.where(valid, flows.t_end[safe], jnp.inf),
+        down_start=(None if flows.down_start is None else
+                    jnp.where(valid, flows.down_start[safe], jnp.inf)),
+        down_end=(None if flows.down_end is None else
+                  jnp.where(valid, flows.down_end[safe], jnp.inf)))
+    onpath = routes_at(paths, state.t)                 # (F, E)
+    c_onpath = jnp.where(valid[:, None], onpath[safe], 0.0)
+    c_net = jnp.where(valid, state.throughputs[safe, 1], 0.0)
+    topo = topology_features(c_onpath, c_net, active_at(c_flows, state.t),
+                             link_peak_bw(graph))
+    topo_full = jnp.zeros((F, topo.shape[-1]), topo.dtype).at[idx].set(
+        topo, mode="drop")
+    return jnp.concatenate([base, topo_full], axis=-1)
+
+
 def topology_observe(params: SimParams, state: TopologyState, *,
                      flows: FlowSchedule, graph: LinkGraph, paths: PathSpec,
                      spec: ObservationSpec = DEFAULT_OBS,
-                     objectives: FlowObjective = None):
+                     objectives: FlowObjective = None,
+                     max_active: int = None):
     """(F, spec.frame_dim) observation matrix: the fleet observation
     normalized by the GRAPH's peak bandwidth, optionally extended
     (spec.topology) with the ``topology_features`` block. At E=1 the
     graph peak equals the table peak, so a topology-blind spec reproduces
-    ``fleet_observe`` bit-for-bit."""
+    ``fleet_observe`` bit-for-bit. ``max_active``: optional static
+    concurrency bound — the feature program runs on the compact gathered
+    set only (see ``fleet_observe`` for the contract)."""
+    if max_active is not None and max_active < state.threads.shape[0]:
+        return _sparse_topology_observe(params, state, flows=flows,
+                                        graph=graph, paths=paths, spec=spec,
+                                        objectives=objectives,
+                                        max_active=max_active)
     bw_ref = graph_peak_bw(graph)
     base = fleet_observe(params, state, flows=flows, spec=spec,
                          objectives=objectives, bw_ref=bw_ref)
@@ -499,25 +552,45 @@ def topology_step(params: SimParams, state: TopologyState, actions, *,
     definition), normalized by the graph peak."""
     if flows is None:
         flows = always_on(state.threads.shape[0])
-    objs = (default_objectives(state.threads.shape[0])
-            if objectives is None else objectives)
     threads = jnp.clip(jnp.round(actions), 1.0, params.n_max)
-    buffers, tps = topology_interval(params, state.buffers, threads,
-                                     state.t, graph=graph, paths=paths,
-                                     flows=flows, substeps=substeps,
-                                     backend=backend, objectives=objectives,
-                                     max_active=max_active)
+    bw_ref = graph_peak_bw(graph)
+    t_mid = state.t + 0.5 * params.duration
+    sparse = max_active is not None and max_active < state.threads.shape[0]
+    if sparse:
+        # one gather serves the solve AND the reward — see fleet_step
+        (buffers, tps, idx, valid, c_tps, c_threads, c_flows,
+         c_objs) = _sparse_topology_interval(
+            params, graph, paths, state.buffers, threads, state.t, flows,
+            substeps, backend, objectives, max_active, return_compact=True)
+    else:
+        buffers, tps = topology_interval(
+            params, state.buffers, threads, state.t, graph=graph,
+            paths=paths, flows=flows, substeps=substeps, backend=backend,
+            objectives=objectives, max_active=max_active)
     delivered0 = _delivered_or_zeros(state)
     new_state = TopologyState(
         buffers=buffers, threads=threads, throughputs=tps,
         t=state.t + params.duration, prev_throughputs=state.throughputs,
         delivered=delivered0 + tps[:, 2] * params.duration)
-    act = active_at(flows, state.t + 0.5 * params.duration)
-    reward = _fleet_reward(params, tps, threads, act, objs, delivered0,
-                           state.t, graph_peak_bw(graph), fairness_coef,
-                           deadline_coef)
+    if sparse:
+        c_objs = default_objectives(max_active) if c_objs is None else c_objs
+        c_delivered0 = jnp.where(
+            valid, delivered0[jnp.minimum(idx, delivered0.shape[0] - 1)],
+            0.0)
+        reward = _fleet_reward(params, c_tps, c_threads,
+                               active_at(c_flows, t_mid), c_objs,
+                               c_delivered0, state.t, bw_ref,
+                               fairness_coef, deadline_coef)
+    else:
+        objs = (default_objectives(state.threads.shape[0])
+                if objectives is None else objectives)
+        reward = _fleet_reward(params, tps, threads,
+                               active_at(flows, t_mid), objs, delivered0,
+                               state.t, bw_ref, fairness_coef,
+                               deadline_coef)
     obs = topology_observe(params, new_state, flows=flows, graph=graph,
-                           paths=paths, spec=spec, objectives=objectives)
+                           paths=paths, spec=spec, objectives=objectives,
+                           max_active=max_active)
     return new_state, obs, reward
 
 

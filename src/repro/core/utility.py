@@ -21,6 +21,8 @@ bit-identical to the PR 4 goldens.
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -64,6 +66,24 @@ def needed_rate(demand, delivered, deadline, t, *, min_horizon=1.0):
     finite = jnp.isfinite(deadline) & jnp.isfinite(demand)
     return jnp.where(finite, jnp.where(finite, remaining, 0.0) / time_left,
                      0.0)
+
+
+def needed_rate_np(demand, delivered, deadline, t, *, min_horizon=1.0):
+    """NumPy twin of ``needed_rate`` for the live controller's hot path (no
+    device round-trip per control interval). Same float32 program, including
+    the double-where mask that keeps inf/inf out of the value path —
+    equality-pinned against the jnp definition in
+    tests/test_controller_vectorized.py."""
+    demand = np.asarray(demand, np.float32)
+    deadline = np.asarray(deadline, np.float32)
+    delivered = np.asarray(delivered, np.float32)
+    t = np.float32(t)
+    remaining = np.maximum(demand - delivered, np.float32(0.0))
+    time_left = np.maximum(deadline - t, np.float32(min_horizon))
+    finite = np.isfinite(deadline) & np.isfinite(demand)
+    return np.where(finite,
+                    np.where(finite, remaining, np.float32(0.0)) / time_left,
+                    np.float32(0.0))
 
 
 def deadline_penalty(goodput, needed, *, scale=1.0, sharp=8.0):

@@ -569,7 +569,13 @@ class TransferEngine:
         return tuple(len([t for t in p if t.is_alive()]) for p in self._pools)
 
     def observe(self):
-        now = time.monotonic()
+        return self.observe_at(time.monotonic())
+
+    def observe_at(self, now):
+        """observe() against a CALLER-supplied ``time.monotonic()`` stamp —
+        the batched-telemetry hook: a fleet pass reads the clock once and
+        snapshots every engine against it, so per-flow rate windows cannot
+        skew apart across a large fleet (``SharedLink.observe_all``)."""
         dt = max(now - self._last_obs_t, 1e-6)
         with self._stats_lock:
             moved = [s.moved for s in self._stats]
@@ -697,8 +703,22 @@ class SharedLink:
         FleetController.step expects."""
         return [e.observe() for e in self.engines]
 
+    def observe_all(self):
+        """Batched telemetry: every engine snapshotted against ONE
+        ``time.monotonic()`` stamp (``TransferEngine.observe_at``), so the
+        per-flow rate windows stay aligned fleet-wide — the per-interval
+        pass ``FleetController.run`` makes."""
+        now = time.monotonic()
+        return [e.observe_at(now) for e in self.engines]
+
     def bytes_written(self):
         return sum(e.bytes_written() for e in self.engines)
+
+    def bytes_written_all(self):
+        """Per-flow delivered-byte counters in attach order — the (F,)
+        ``delivered`` vector the objective-aware controller feeds
+        ``objective_features`` (one lock pass per engine, no summing)."""
+        return [e.bytes_written() for e in self.engines]
 
     def close(self):
         for e in self.engines:
@@ -887,8 +907,18 @@ class MultiLink:
         """Per-flow observe() dicts, in attach order."""
         return [e.observe() for e in self.engines]
 
+    def observe_all(self):
+        """Batched telemetry (SharedLink twin): one shared timestamp for
+        the whole fleet's snapshots."""
+        now = time.monotonic()
+        return [e.observe_at(now) for e in self.engines]
+
     def bytes_written(self):
         return sum(e.bytes_written() for e in self.engines)
+
+    def bytes_written_all(self):
+        """Per-flow delivered-byte counters in attach order."""
+        return [e.bytes_written() for e in self.engines]
 
     def close(self):
         for e in self.engines:

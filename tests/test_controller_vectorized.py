@@ -1,0 +1,315 @@
+"""Live-path scale-out pins (PR 9).
+
+The vectorized ``FleetController`` frame path is pinned BIT-IDENTICAL to
+the per-flow ``_FrameBuilder`` path it replaced: the goldens below were
+captured from the pre-PR 9 controller at the commit before the rewrite
+(same inputs, same spec), so any drift in the array-native reimplementation
+is a live/sim transfer break, not a refactor detail. Columns 0:16 (base +
+context + fleet blocks) must match exactly; columns 16:19 (the objective
+block, now computed by the NumPy twin of ``objective_features`` instead of
+a jnp call with a device pull) are allowed 1e-6 — np.tanh and XLA's tanh
+can disagree in the last float32 bit, and the twin itself is
+equality-pinned against the jnp definition here too.
+
+Also pinned: the live hot loop issues exactly ONE jitted dispatch per
+control interval and never recompiles at a fixed fleet size; the crash
+paths (empty fleet snapshot, explicit ``bw_ref=0``) behave; and the batched
+telemetry (``SharedLink.observe_all`` / ``MultiLink.observe_all``)
+timestamps every engine's window from one clock read.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.controller import FleetController, FleetPolicy
+from repro.core.fleet import make_flow_objective
+from repro.core.simulator import ObservationSpec
+
+OBJECTIVE_OBS = ObservationSpec(context=True, fleet=True, objectives=True)
+
+
+# ---------------------------------------------------------------------------
+# Golden pins: vectorized frames == the removed per-flow builder
+# ---------------------------------------------------------------------------
+
+# Captured from the pre-PR 9 per-flow _FrameBuilder path (3 flows, spec
+# context+fleet+objectives => 19 dims) — hex of float32 (3, 19) matrices.
+_GOLD = {
+    ("explicit_bwref", 1): "0ad7a33d0ad7233e0ad7233d52b89e3e1f856b3e7b142e3e0000203f0000403f0000000000000000000000000ad723bd8fc2f5bc0000803fd7a3b03fabaa2a3e0000803f636a553fefee6e3ecdcccc3d295c0f3e0ad7a33d52b81e3f1f85eb3e7b14ae3e6666063fcdcc2c3f0000000000000000000000000ad7a3bd8fc275bd0000803fd7a3b03fabaaaa3e0000003f0000803f000000008fc2f53d8fc2f53d8fc2f53d7b146e3fd7a3303f5c8f023f9a99d93e9a99193f0000000000000000000000008fc2f5bdec51b8bd0000803fd7a3b03f0000003f0000803e0000803f00000000",
+    ("explicit_bwref", 2): "0ad7a33d0ad7233e0ad7233d3d0ad73e9a99993eae47613e3333133f0000403fae47e13d295c8f3dcdcc4c3d8fc275bd0ad723bdabaa2a3fe17a543f6c0fb93e0000803f5558513f950f633ecdcccc3d295c0f3e0ad7a33d48e13a3f14ae073f14aec73e3333f33ecdcc2c3fae47e13d295c8f3dcdcc4c3dcdccccbd295c8fbdabaa2a3fe17a543f4a78233f0000003f0000803f000000008fc2f53d8fc2f53d8fc2f53db81e853f5c8f423f295c0f3f0000c03e9a99193fae47e13d295c8f3dcdcc4c3d295c0fbecdccccbdabaa2a3fe17a543f000000000000803e0000803f00000000",
+    ("running_max", 1): "0ad7a33d0ad7233e0ad7233dabaaaa3e503f7d3ecc2e3b3e0000203f0000403f0000000000000000000000000ad723bd8fc2f5bc0000803f7cefbd3fabaa2a3e0000803f636a553f7375803ecdcccc3d295c0f3e0ad7a33dabaa2a3f503ffd3ecc2ebb3e6666063fcdcc2c3f0000000000000000000000000ad7a3bd8fc275bd0000803f7cefbd3fabaaaa3e0000003f0000803f000000008fc2f53d8fc2f53d8fc2f53d0000803f7cef3d3f19630c3f9a99d93e9a99193f0000000000000000000000008fc2f5bdec51b8bd0000803f7cefbd3f0000003f0000803e0000803f00000000",
+    ("running_max", 2): "0ad7a33d0ad7233e0ad7233decc4ce3e3bb1933e8a9d583e3333133f0000403f8a9dd83d9ed8893d4fec443d8fc275bd0ad723bdabaa2a3fc54e4c3f6c0fb93e0000803f5558513fe8535a3ecdcccc3d295c0f3e0ad7a33d3bb1333f2776023f0000c03e3333f33ecdcc2c3f8a9dd83d9ed8893d4fec443dcdccccbd295c8fbdabaa2a3fc54e4c3f4a78233f0000003f0000803f000000008fc2f53d8fc2f53d8fc2f53d0000803fb1133b3f9ed8093f0000c03e9a99193f8a9dd83d9ed8893d4fec443d295c0fbecdccccbdabaa2a3fc54e4c3f000000000000803e0000803f00000000",
+}
+
+
+def _golden(name, k):
+    return np.frombuffer(bytes.fromhex(_GOLD[(name, k)]),
+                         np.float32).reshape(3, 19)
+
+
+def _obs_dicts(k):
+    out = []
+    for f in range(3):
+        out.append({
+            "threads": [4 + f, 8 - f, 2 + 2 * f],
+            "throughputs": [0.31 * (f + 1) + 0.11 * k,
+                            0.23 * (f + 1) + 0.07 * k,
+                            0.17 * (f + 1) + 0.05 * k],
+            "sender_free": 1.25 - 0.2 * f - 0.1 * k,
+            "receiver_free": 1.5 - 0.15 * f,
+            "sender_capacity": 2.0, "receiver_capacity": 2.0})
+    return out
+
+
+def _golden_controller(**kw):
+    obj = make_flow_objective(3, tiers=["gold", "silver", "bronze"],
+                              deadline=[25.0, np.inf, np.inf],
+                              demand=[6.0, np.inf, np.inf])
+    return FleetController(None, n_flows=3, n_max=50.0,
+                           obs_spec=OBJECTIVE_OBS, deterministic=True,
+                           objectives=obj, interval=1.0, **kw)
+
+
+@pytest.mark.parametrize("name,kw", [("explicit_bwref", dict(bw_ref=1.0)),
+                                     ("running_max", dict(bw_ref=None))])
+def test_vectorized_frames_match_per_flow_builder_golden(name, kw):
+    """Two consecutive frames() calls (context deltas + running-bw state in
+    play, a mid-run active mask on the second) against the pre-rewrite
+    goldens: base/context/fleet columns bit-identical, objective columns
+    within one float32 ulp (np.tanh vs XLA tanh — the only op the NumPy
+    twin routes through a different libm)."""
+    ctrl = _golden_controller(**kw)
+    f1 = ctrl.frames(_obs_dicts(0), active=None, t=1.0,
+                     delivered=np.asarray([0.4, 0.2, 0.1]))
+    f2 = ctrl.frames(_obs_dicts(1), active=np.asarray([1.0, 1.0, 0.0]),
+                     t=2.0, delivered=np.asarray([0.9, 0.5, 0.2]))
+    for k, f in ((1, f1), (2, f2)):
+        g = _golden(name, k)
+        assert f.shape == g.shape and f.dtype == np.float32
+        np.testing.assert_array_equal(f[:, :16], g[:, :16])
+        np.testing.assert_allclose(f[:, 16:], g[:, 16:], rtol=0, atol=1e-6)
+
+
+def test_frames_and_frames_arrays_agree():
+    """The list-of-dicts contract is a thin stacking shim over the
+    array-native path — bit-identical outputs."""
+    ctrl = _golden_controller(bw_ref=1.0)
+    from repro.core.controller import _stack_observations
+    obs = _stack_observations(_obs_dicts(1))
+    a = ctrl.frames(_obs_dicts(1), t=1.5, delivered=np.asarray([0.4, 0.2, 0.1]))
+    ctrl2 = _golden_controller(bw_ref=1.0)
+    b = ctrl2.frames_arrays(obs, t=1.5, delivered=np.asarray([0.4, 0.2, 0.1]))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# NumPy twins == jnp definitions
+# ---------------------------------------------------------------------------
+
+def test_objective_features_np_matches_jnp():
+    """The live path's NumPy twin runs the same float32 program as the sim's
+    ``objective_features`` — including the double-where mask that keeps
+    inf/inf out of the value path — across random mixes of finite and
+    infinite deadlines/demands."""
+    import jax.numpy as jnp
+    from repro.core.fleet import objective_features, objective_features_np
+    rng = np.random.default_rng(3)
+    for trial in range(5):
+        F = int(rng.integers(1, 40))
+        deadline = np.where(rng.random(F) < 0.5,
+                            rng.uniform(1.0, 60.0, F), np.inf)
+        demand = np.where(rng.random(F) < 0.5,
+                          rng.uniform(1.0, 20.0, F), np.inf)
+        obj = make_flow_objective(
+            F, weight=rng.uniform(0.5, 4.0, F), deadline=deadline,
+            demand=demand)
+        t = float(rng.uniform(0.0, 80.0))
+        dlv = rng.uniform(0.0, 10.0, F)
+        bw = float(rng.uniform(0.2, 4.0))
+        ours = objective_features_np(obj, t, dlv, bw_ref=bw, duration=1.0)
+        ref = np.asarray(objective_features(
+            obj, t, jnp.asarray(dlv, jnp.float32), bw_ref=bw, duration=1.0))
+        assert ours.dtype == np.float32 and ours.shape == ref.shape
+        np.testing.assert_allclose(ours, ref, rtol=0, atol=1e-6)
+        assert np.isfinite(ours).all()
+
+
+def test_needed_rate_np_matches_jnp():
+    from repro.core.utility import needed_rate, needed_rate_np
+    demand = np.asarray([6.0, np.inf, 3.0, np.inf])
+    deadline = np.asarray([25.0, np.inf, 2.0, 40.0])
+    delivered = np.asarray([0.4, 0.2, 5.0, 1.0])
+    ours = needed_rate_np(demand, delivered, deadline, 3.0, min_horizon=1.0)
+    ref = np.asarray(needed_rate(demand, delivered, deadline, 3.0,
+                                 min_horizon=1.0))
+    np.testing.assert_array_equal(ours, ref)
+    assert np.isfinite(ours).all()
+
+
+# ---------------------------------------------------------------------------
+# Hot-loop regression: ONE jitted dispatch per interval, zero recompiles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["mlp", "gru"])
+def test_step_is_one_dispatch_and_never_recompiles(policy):
+    """At a fixed fleet size, N controller steps cost exactly N jitted
+    dispatches and ONE compile — the same discipline the sim side pins for
+    ``fleet_step`` pow2 buckets. A recompile (or a second dispatch hiding
+    in the frame path) is a per-interval latency regression the scaling
+    bench would only catch as noise."""
+    import jax
+    from repro.core import networks as nets
+    F = 6
+    init = nets.rnn_policy_init if policy == "gru" else nets.policy_init
+    params = init(jax.random.PRNGKey(0), obs_dim=OBJECTIVE_OBS.dim,
+                  act_dim=3, hidden=16)
+    ctrl = FleetController(params, n_flows=F, n_max=20.0, bw_ref=1.0,
+                           deterministic=False, seed=1,
+                           obs_spec=OBJECTIVE_OBS, policy=policy,
+                           objectives=make_flow_objective(F))
+    rng = np.random.default_rng(0)
+    fp = ctrl.fleet_policy
+    for step in range(4):
+        obs = {
+            "threads": rng.integers(1, 8, size=(F, 3)).astype(float),
+            "throughputs": rng.uniform(0.05, 1.0, size=(F, 3)),
+            "sender_free": rng.uniform(0.1, 2.0, size=F),
+            "receiver_free": rng.uniform(0.1, 2.0, size=F),
+            "sender_capacity": np.full(F, 2.0),
+            "receiver_capacity": np.full(F, 2.0),
+        }
+        acts = ctrl.step_arrays(obs, t=float(step), delivered=np.zeros(F))
+        assert acts.shape == (F, 3)
+        assert acts.min() >= 1 and acts.max() <= 20
+        assert fp.n_dispatch == step + 1
+        assert fp._act_cache_size() == 1, "act step recompiled"
+
+
+def test_gru_carry_threads_across_steps():
+    """The donated-carry jit must still thread state: with a GRU policy the
+    carry object changes every step (and keeps the (F, H) shape pinned by
+    tests/test_fleet.py)."""
+    import jax
+    from repro.core import networks as nets
+    params = nets.rnn_policy_init(jax.random.PRNGKey(0),
+                                  obs_dim=OBJECTIVE_OBS.dim, act_dim=3,
+                                  hidden=16)
+    fp = FleetPolicy(params, n_max=20.0, deterministic=True,
+                     obs_spec=OBJECTIVE_OBS, policy="gru")
+    frames = np.linspace(0.0, 1.0, 4 * OBJECTIVE_OBS.dim,
+                         dtype=np.float32).reshape(4, -1)
+    assert fp._carry is None
+    fp.act(frames)
+    c1 = np.asarray(fp._carry).copy()
+    fp.act(frames * 0.5)
+    c2 = np.asarray(fp._carry)
+    assert c1.shape == c2.shape
+    assert not np.array_equal(c1, c2)
+    fp.reset()
+    assert fp._carry is None
+
+
+# ---------------------------------------------------------------------------
+# Crash-path regressions: empty fleet snapshot, explicit bw_ref=0
+# ---------------------------------------------------------------------------
+
+def test_empty_obs_list_yields_empty_frames_and_actions():
+    """The pre-PR 9 path crashed on an empty fleet snapshot
+    (``max(shared, *(...))`` with no engines raised TypeError): now an
+    empty list is an empty (0, frame_dim) matrix and step returns no
+    actions — no policy dispatch."""
+    ctrl = _golden_controller(bw_ref=1.0)
+    f = ctrl.frames([])
+    assert f.shape == (0, OBJECTIVE_OBS.frame_dim)
+    assert f.dtype == np.float32
+    assert ctrl.step([]) == []
+    assert ctrl.step_arrays(
+        {k: np.zeros((0, 3) if k in ("threads", "throughputs") else 0)
+         for k in ("threads", "throughputs", "sender_free", "receiver_free",
+                   "sender_capacity", "receiver_capacity")}).shape == (0, 3)
+
+
+def test_bw_ref_zero_is_explicit_not_unset():
+    """``bw_ref=0`` used to fall through ``self.bw_ref or ...`` into the
+    running-max fallback (and a potential division blow-up); it must be
+    treated as an explicit (clamped) reference, and frames must stay
+    finite."""
+    ctrl = _golden_controller(bw_ref=0.0)
+    assert ctrl._fleet_bw() == pytest.approx(1e-9)
+    f = ctrl.frames(_obs_dicts(0), t=1.0, delivered=np.zeros(3))
+    assert np.isfinite(f).all()
+    # and None still means "running max" (peak tps in _obs_dicts(0) = 0.93)
+    ctrl2 = _golden_controller(bw_ref=None)
+    ctrl2.frames(_obs_dicts(0), t=1.0, delivered=np.zeros(3))
+    assert ctrl2._fleet_bw() == pytest.approx(0.93)
+
+
+# ---------------------------------------------------------------------------
+# Batched telemetry: one clock read per fleet snapshot
+# ---------------------------------------------------------------------------
+
+def _tiny_fleet(link, n=2):
+    from repro.transfer import SyntheticSource, NullSink
+    for _ in range(n):
+        link.attach(SyntheticSource(4 * 2 ** 20, chunk_bytes=64 * 1024),
+                    NullSink(), initial_concurrency=(1, 1, 1),
+                    metric_interval=0.2)
+
+
+def test_shared_link_observe_all_uses_one_timestamp():
+    import time
+    from repro.transfer import SharedLink
+    link = SharedLink(aggregate_bps=(None, 4 * 2 ** 20, None))
+    _tiny_fleet(link)
+    try:
+        time.sleep(0.3)
+        obs = link.observe_all()
+        assert len(obs) == 2
+        assert all(set(o) >= {"threads", "throughputs", "sender_free"}
+                   for o in obs)
+        stamps = {e._last_obs_t for e in link.engines}
+        assert len(stamps) == 1, "engines sampled against different clocks"
+        per_flow = link.bytes_written_all()
+        assert len(per_flow) == 2
+        assert sum(per_flow) == link.bytes_written()
+    finally:
+        link.close()
+
+
+def test_multi_link_observe_all_uses_one_timestamp():
+    import time
+    from repro.transfer import MultiLink, SyntheticSource, NullSink
+    net = MultiLink(2, aggregate_bps=4 * 2 ** 20)
+    for path in ([0], [0, 1]):
+        net.attach(SyntheticSource(4 * 2 ** 20, chunk_bytes=64 * 1024),
+                   NullSink(), path=path, initial_concurrency=(1, 1, 1),
+                   metric_interval=0.2)
+    try:
+        time.sleep(0.3)
+        obs = net.observe_all()
+        assert len(obs) == 2
+        stamps = {e._last_obs_t for e in net.engines}
+        assert len(stamps) == 1
+        assert sum(net.bytes_written_all()) == net.bytes_written()
+    finally:
+        net.close()
+
+
+def test_observe_at_matches_observe_contract():
+    """observe_at(now) is observe() with a caller clock: same dict shape,
+    and the rate window refreshes once dt exceeds half a metric_interval."""
+    import time
+    from repro.transfer import TransferEngine, SyntheticSource, NullSink
+    eng = TransferEngine(SyntheticSource(2 * 2 ** 20, chunk_bytes=64 * 1024),
+                         NullSink(), initial_concurrency=(1, 1, 1),
+                         metric_interval=0.2)
+    try:
+        time.sleep(0.25)
+        now = time.monotonic()
+        o = eng.observe_at(now)
+        assert set(o) == {"threads", "throughputs", "sender_free",
+                          "receiver_free", "sender_capacity",
+                          "receiver_capacity"}
+        assert eng._last_obs_t == now  # window re-primed at the caller clock
+    finally:
+        eng.close()

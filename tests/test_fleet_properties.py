@@ -447,3 +447,50 @@ def test_fleet_is_permutation_equivariant(data):
                                np.asarray(s2.delivered)[perm],
                                atol=1e-5, rtol=1e-5)
     assert float(rp) == pytest.approx(float(r), abs=1e-4)
+
+
+@given(data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_sparse_observe_and_reward_equal_dense(data):
+    """PR 9 property: for ANY fleet/schedule/objective draw, the sparse
+    full step (solve + observe + reward on the compact active set) matches
+    the dense step — reward to 1e-5 (the Jain/deadline sums reassociate
+    over A instead of F lanes), next state to 1e-6, observation rows of
+    flows intersecting the forward observe window to 2e-6 with everything
+    else EXACTLY zero (the spec'd sparse-observe semantics)."""
+    from repro.core.simulator import OBJECTIVE_OBS
+    params, table, flows, threads = data.draw(fleet_world())
+    F = threads.shape[0]
+    obj = data.draw(st.one_of(st.none(), objectives_for(F)))
+    pad = data.draw(st.integers(1, 3))
+    flows_p = make_flow_schedule(
+        list(np.asarray(flows.t_start)) + [np.inf] * pad,
+        list(np.asarray(flows.t_end)) + [np.inf] * pad)
+    from repro.core.fleet import pad_flow_objectives
+    obj_p = pad_flow_objectives(obj, F + pad)
+    state = fleet_reset(params, jax.random.PRNGKey(data.draw(
+        st.integers(0, 2 ** 16))), F + pad,
+        t0=data.draw(st.floats(0.0, 1.5)), flows=flows_p, table=table,
+        substeps=SUBSTEPS)
+    acts = jnp.asarray(
+        [[data.draw(st.floats(1.0, 30.0)) for _ in range(3)]
+         for _ in range(F + pad)], jnp.float32)
+    fair = data.draw(st.sampled_from([0.0, 0.3]))
+    d_state, d_obs, d_rew = fleet_step(
+        params, state, acts, flows=flows_p, table=table,
+        substeps=SUBSTEPS, spec=OBJECTIVE_OBS, objectives=obj_p,
+        fairness_coef=fair)
+    s_state, s_obs, s_rew = fleet_step(
+        params, state, acts, flows=flows_p, table=table,
+        substeps=SUBSTEPS, spec=OBJECTIVE_OBS, objectives=obj_p,
+        fairness_coef=fair, max_active=F)
+    np.testing.assert_allclose(float(s_rew), float(d_rew), rtol=1e-5,
+                               atol=1e-5)
+    for a, b in zip(s_state, d_state):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    t, d = float(d_state.t), float(params.duration)
+    hit = ((np.asarray(flows_p.t_start) < t + d)
+           & (np.asarray(flows_p.t_end) > t))
+    s_obs, d_obs = np.asarray(s_obs), np.asarray(d_obs)
+    np.testing.assert_allclose(s_obs[hit], d_obs[hit], atol=2e-6)
+    assert np.abs(s_obs[~hit]).max(initial=0.0) == 0.0

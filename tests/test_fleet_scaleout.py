@@ -492,3 +492,137 @@ def test_train_ppo_scaleout_knobs_smoke():
                     objectives=objs, mesh=make_fleet_mesh(1))
     assert res.episodes == 2
     assert np.isfinite(res.best_reward)
+
+
+# ---------------------------------------------------------------------------
+# Sparse observe + reward == dense (PR 9: the full per-step cost is O(A*E))
+# ---------------------------------------------------------------------------
+
+def _obs_world(seed, F=24, A=16):
+    """A wider seeded world where the active-set bound genuinely bites
+    (A < F): Poisson-ish staggered windows, mixed tiers/deadlines/demands
+    so every reward term is exercised."""
+    rng = np.random.default_rng(seed)
+    params = _params()
+    table = make_table(rng.uniform(0.05, 0.4, (2, 3)).astype(np.float32),
+                       rng.uniform(0.3, 1.5, (2, 3)).astype(np.float32),
+                       bin_seconds=0.5)
+    t_start = rng.uniform(0.0, 6.0, F)
+    flows = make_flow_schedule(t_start, t_start + rng.uniform(0.2, 1.5, F))
+    obj = make_flow_objective(
+        F, tiers=rng.choice(["gold", "silver", "bronze"], F),
+        deadline=np.where(rng.random(F) < 0.5,
+                          rng.uniform(1.0, 8.0, F), np.inf),
+        demand=np.where(rng.random(F) < 0.5,
+                        rng.uniform(0.5, 4.0, F), np.inf))
+    assert flow_bucket(max_concurrent_flows(
+        flows, window=float(params.duration))) <= A < F
+    return params, table, flows, obj
+
+
+def _row_parity(sparse_obs, dense_obs, hit, atol=2e-6):
+    """Gathered rows match dense; ungathered rows are EXACTLY zero (the
+    spec'd sparse-observe semantics: a flow outside the observe window is
+    all-zeros, not the dense path's resting-state row)."""
+    np.testing.assert_allclose(sparse_obs[hit], dense_obs[hit], atol=atol)
+    assert np.abs(sparse_obs[~hit]).max(initial=0.0) == 0.0
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sparse_fleet_observe_matches_dense(seed):
+    """fleet_observe(max_active=A): rows of flows whose window intersects
+    the forward observe window [t, t+duration) equal the dense observation
+    to gather-lane ulp noise; everything else is exactly zero."""
+    from repro.core.fleet import fleet_observe
+    from repro.core.simulator import ObservationSpec
+    params, table, flows, obj = _obs_world(seed)
+    spec = ObservationSpec(context=True, fleet=True, objectives=True)
+    state = fleet_reset(params, jax.random.PRNGKey(seed), flows.n_flows,
+                        t0=1.0, flows=flows, table=table,
+                        substeps=SUBSTEPS)
+    dense = np.asarray(fleet_observe(params, state, flows=flows,
+                                     table=table, spec=spec,
+                                     objectives=obj))
+    sparse = np.asarray(fleet_observe(params, state, flows=flows,
+                                      table=table, spec=spec,
+                                      objectives=obj, max_active=16))
+    t = float(state.t)
+    d = float(params.duration)
+    hit = (np.asarray(flows.t_start) < t + d) & (np.asarray(flows.t_end) > t)
+    assert hit.any() and not hit.all()
+    _row_parity(sparse, dense, hit)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_sparse_fleet_step_obs_and_reward_match_dense(seed):
+    """The full jitted step — solve + observe + reward — with
+    ``max_active`` set: same next state (1e-6), same reward (1e-5: the
+    Jain/deadline sums reassociate over A instead of F lanes), and
+    row-parity on the observation."""
+    from repro.core.simulator import ObservationSpec
+    params, table, flows, obj = _obs_world(seed)
+    spec = ObservationSpec(context=True, fleet=True, objectives=True)
+    state = fleet_reset(params, jax.random.PRNGKey(seed), flows.n_flows,
+                        t0=0.5, flows=flows, table=table,
+                        substeps=SUBSTEPS)
+    rng = np.random.default_rng(seed)
+    for step in range(3):
+        acts = jnp.asarray(rng.uniform(1.0, 30.0, (flows.n_flows, 3)),
+                           jnp.float32)
+        d_state, d_obs, d_rew = fleet_step(
+            params, state, acts, flows=flows, table=table,
+            substeps=SUBSTEPS, spec=spec, objectives=obj,
+            fairness_coef=0.3)
+        s_state, s_obs, s_rew = fleet_step(
+            params, state, acts, flows=flows, table=table,
+            substeps=SUBSTEPS, spec=spec, objectives=obj,
+            fairness_coef=0.3, max_active=16)
+        np.testing.assert_allclose(float(s_rew), float(d_rew), rtol=1e-5,
+                                   atol=1e-5)
+        for a, b in zip(s_state, d_state):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+        t = float(d_state.t)
+        d = float(params.duration)
+        hit = ((np.asarray(flows.t_start) < t + d)
+               & (np.asarray(flows.t_end) > t))
+        _row_parity(np.asarray(s_obs), np.asarray(d_obs), hit)
+        state = d_state
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_sparse_topology_step_obs_and_reward_match_dense(seed):
+    """Topology twin: the sparse observe also rebuilds the TOPOLOGY block
+    (bottleneck util / path length / my-share) from the compact set."""
+    from repro.core.simulator import ObservationSpec
+    from repro.core.topology import topology_reset, topology_step
+    params, table, flows, obj = _obs_world(seed + 10)
+    F = flows.n_flows
+    spec = ObservationSpec(context=True, fleet=True, objectives=True,
+                           topology=True)
+    graph = make_link_graph(jnp.stack([table.tpt, table.tpt * 0.8]),
+                            jnp.stack([table.bw, table.bw * 1.2]),
+                            bin_seconds=0.5)
+    rng = np.random.default_rng(seed + 10)
+    onpath = np.maximum(rng.integers(0, 2, (F, 2)),
+                        np.eye(2)[rng.integers(0, 2, F)]).astype(np.float32)
+    paths = make_path_spec(jnp.asarray(onpath))
+    state = topology_reset(params, jax.random.PRNGKey(seed), F, t0=0.5,
+                           graph=graph, paths=paths, flows=flows,
+                           substeps=SUBSTEPS)
+    acts = jnp.asarray(rng.uniform(1.0, 30.0, (F, 3)), jnp.float32)
+    d_state, d_obs, d_rew = topology_step(
+        params, state, acts, graph=graph, paths=paths, flows=flows,
+        substeps=SUBSTEPS, spec=spec, objectives=obj, fairness_coef=0.3)
+    s_state, s_obs, s_rew = topology_step(
+        params, state, acts, graph=graph, paths=paths, flows=flows,
+        substeps=SUBSTEPS, spec=spec, objectives=obj, fairness_coef=0.3,
+        max_active=16)
+    np.testing.assert_allclose(float(s_rew), float(d_rew), rtol=1e-5,
+                               atol=1e-5)
+    for a, b in zip(s_state, d_state):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+    t = float(d_state.t)
+    d = float(params.duration)
+    hit = (np.asarray(flows.t_start) < t + d) & (np.asarray(flows.t_end) > t)
+    _row_parity(np.asarray(s_obs), np.asarray(d_obs), hit)
