@@ -44,12 +44,19 @@ Prints ``name,us_per_call,derived`` CSV rows.
                                     array-native one-dispatch path, plus
                                     full sim step dense vs sparse with
                                     observe+reward included)
+  beyond  -> bench_online          (hybrid offline/online: the frozen
+                                    fleet policy + the online residual
+                                    head vs frozen-only and static on a
+                                    held-out condition family — post-
+                                    collapse recovery time + integrated
+                                    recovery deficit)
 
 ``--quick`` runs the CI smoke subset: the substep-backend and per-policy
 episode-cost microbenches plus bench_scenarios, bench_fleet,
-bench_objectives, bench_topology, bench_faults, and bench_controller in
-quick mode (tiny training budgets) — minutes, not the full suite, so CI
-catches perf entry points that rot without paying for the real numbers.
+bench_objectives, bench_topology, bench_faults, bench_controller, and
+bench_online in quick mode (tiny training budgets) — minutes, not the
+full suite, so CI catches perf entry points that rot without paying for
+the real numbers.
 
 ``--suite NAME[,NAME...]`` runs only the named suite(s) from the selected
 set (quick names with ``--quick``, full names otherwise) — e.g.
@@ -110,7 +117,8 @@ def main(argv=None) -> None:
                             bench_bottleneck, bench_action_space,
                             bench_end_to_end, bench_finetune, roofline,
                             bench_scenarios, bench_fleet, bench_objectives,
-                            bench_topology, bench_faults, bench_controller)
+                            bench_topology, bench_faults, bench_controller,
+                            bench_online)
     def _maybe_profiled(fn):
         """Wrap the fleet-scaling suite in a jax.profiler trace when
         --profile DIR was given."""
@@ -148,6 +156,8 @@ def main(argv=None) -> None:
             ("controller_scaling_quick",
              lambda rows: bench_controller.controller_scaling(rows,
                                                               quick=True)),
+            ("online_quick",
+             lambda rows: bench_online.main(rows, quick=True)),
         ]
     else:
         suites = [
@@ -166,6 +176,7 @@ def main(argv=None) -> None:
             ("topology", bench_topology.main),
             ("faults", bench_faults.main),
             ("controller_scaling", bench_controller.controller_scaling),
+            ("online", bench_online.main),
         ]
     if only is not None:
         known = {n for n, _ in suites}

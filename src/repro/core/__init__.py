@@ -31,6 +31,11 @@
                  + FleetController step ONE trained policy across N live
                  engines sharing a SharedLink; TopologyController adds the
                  TOPOLOGY_OBS features over a live MultiLink
+  online.py      hybrid offline/online adaptation: replay buffer of live
+                 transitions + a per-stage residual contextual bandit over
+                 the frozen policy's action, behind hysteresis safety rails
+                 (controllers take ``online=OnlineConfig(...)``; None is
+                 the frozen program bit-for-bit)
 """
 
 from repro.core.utility import (utility, stage_utility, r_max, K_DEFAULT,
@@ -73,3 +78,6 @@ from repro.core.globus import GlobusController
 from repro.core.exploration import explore, ExplorationResult
 from repro.core.controller import (AutoMDTController, FleetPolicy,
                                    FleetController, TopologyController)
+from repro.core.online import (OnlineConfig, OnlineAdapter, ReplayBuffer,
+                               ResidualBandit, OnlineFleetPolicy,
+                               realized_reward)

@@ -47,6 +47,8 @@ unchanged."""
 
 from __future__ import annotations
 
+import re
+
 import numpy as np
 
 import jax
@@ -55,8 +57,14 @@ import jax.numpy as jnp
 from repro.core import networks as nets
 from repro.core.fleet import (FlowObjective, objective_features_np,
                               default_objectives)
+from repro.core.online import OnlineAdapter, OnlineConfig
 from repro.core.simulator import ObservationSpec, DEFAULT_OBS, TOPO_DIM
 from repro.core.topology import topology_features
+
+# the health check's worker namespace: ONLY ``flow<digits>`` belongs to
+# this controller — a shared registry may carry foreign workers (trainer
+# shards, a ``flowctl`` supervisor, ...) that must be ignored, not parsed
+_FLOW_WORKER = re.compile(r"flow(\d+)")
 
 _OBS_KEYS = ("threads", "throughputs", "sender_free", "receiver_free",
              "sender_capacity", "receiver_capacity")
@@ -146,7 +154,7 @@ class AutoMDTController:
     def __init__(self, policy_params, *, n_max=100, bw_ref=None,
                  deterministic=False, seed=0,
                  obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0,
-                 policy="mlp"):
+                 policy="mlp", online: OnlineConfig = None):
         if policy not in ("mlp", "stacked", "gru"):
             raise ValueError(f"unknown policy {policy!r}")
         self.params = policy_params
@@ -166,6 +174,10 @@ class AutoMDTController:
         self._policy = FleetPolicy(policy_params, n_max=n_max,
                                    deterministic=deterministic, seed=seed,
                                    obs_spec=obs_spec, policy=policy)
+        # online adaptation layer (repro.core.online): None runs LITERALLY
+        # the frozen-policy program (bit-identical, pinned in tests)
+        self._online = (None if online is None else
+                        OnlineAdapter(online, n_flows=1, n_max=n_max))
 
     @property
     def _hist(self):
@@ -191,19 +203,34 @@ class AutoMDTController:
         without leakage."""
         self._frames.reset()
         self._policy.reset()
+        if self._online is not None:
+            self._online.reset()
 
     def step(self, obs: dict):
         """obs dict -> next concurrency tuple (ints)."""
-        n = self._policy._action(self._obs_vector(obs)[None])[0]
+        frame = self._frame_vector(obs)
+        if self._online is not None:
+            # settle the previous interval's pending decision: the reward
+            # its action realized is in THIS observation's telemetry
+            self._online.observe_outcome(
+                np.asarray(obs["throughputs"], float)[None],
+                np.asarray(obs["threads"], float)[None])
+        vec = self._policy._window(frame[None])[0]
+        n = self._policy._action(vec[None])[0]
+        if self._online is not None:
+            n = self._online.adjust(frame[None], n[None])[0]
         return tuple(n.tolist())
 
     def run(self, engine, *, total_bytes=None, interval=1.0, max_steps=None,
             on_step=None):
         """Drive a live engine until ``total_bytes`` moved (or engine.done()).
-        Returns the trace [(t, threads, throughputs)]."""
+        The run clock is ``time.monotonic()`` — an NTP step/slew on the
+        wall clock must never skew (or reverse) the ``t`` the trace and the
+        objective features are driven by. Returns the trace
+        [(t, threads, throughputs)]."""
         import time
         trace = []
-        t0 = time.time()
+        t0 = time.monotonic()
         steps = 0
         while True:
             obs = engine.observe()
@@ -211,7 +238,8 @@ class AutoMDTController:
             engine.set_concurrency(n)
             engine.wait(interval)
             obs2 = engine.observe()
-            trace.append((time.time() - t0, n, tuple(obs2["throughputs"])))
+            trace.append((time.monotonic() - t0, n,
+                          tuple(obs2["throughputs"])))
             if on_step:
                 on_step(trace[-1])
             steps += 1
@@ -339,7 +367,8 @@ class FleetController:
     def __init__(self, policy_params, *, n_flows, n_max=100, bw_ref=None,
                  deterministic=True, seed=0,
                  obs_spec: ObservationSpec = DEFAULT_OBS, interval=1.0,
-                 policy="mlp", objectives: FlowObjective = None):
+                 policy="mlp", objectives: FlowObjective = None,
+                 online: OnlineConfig = None):
         self.n_flows = n_flows
         self.n_max = n_max
         self.bw_ref = bw_ref
@@ -355,10 +384,18 @@ class FleetController:
                                         deterministic=deterministic,
                                         seed=seed, obs_spec=obs_spec,
                                         policy=policy)
+        # online adaptation layer (repro.core.online): None runs LITERALLY
+        # the frozen-policy program (bit-identical, pinned in tests); the
+        # realized reward rides the objective weights when given
+        self._online = (None if online is None else OnlineAdapter(
+            online, n_flows=n_flows, n_max=n_max,
+            weights=None if objectives is None else objectives.weight))
 
     def reset(self):
         self._frames.reset()
         self.fleet_policy.reset()
+        if self._online is not None:
+            self._online.reset()
 
     def _frame_width(self):
         """Frame dims this class emits (the topology block is the
@@ -440,17 +477,52 @@ class FleetController:
         frames = self.frames_arrays(obs, active, t=t, delivered=delivered)
         if frames.shape[0] == 0:
             return np.zeros((0, 3), int)
-        return self.fleet_policy.act(frames)
+        if self._online is not None:
+            # settle the previous interval's pending decision against the
+            # reward its action realized (this snapshot's telemetry)
+            self._online.observe_outcome(
+                np.asarray(obs["throughputs"], float),
+                np.asarray(obs["threads"], float), active)
+        acts = self.fleet_policy.act(frames)
+        if self._online is not None:
+            acts = self._online.adjust(frames, acts, active)
+        return acts
+
+    @staticmethod
+    def _settle_sleep(seconds, engines, settled):
+        """The engine's abort-aware sleep pattern on the control interval:
+        sleep in short slices, returning as soon as EVERY engine has
+        settled — a fleet torn down (or completing) mid-sleep ends the
+        interval promptly instead of burning the remainder."""
+        import time
+        deadline = time.monotonic() + seconds
+        while not all(settled(i, e) for i, e in enumerate(engines)):
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return
+            time.sleep(min(remaining, 0.05))
 
     def run(self, engines, *, interval=1.0, max_steps=None, total_bytes=None,
             on_step=None, registry=None, dead_after=None):
         """Drive N live engines until every one reports done() or is closed
         (or ``total_bytes`` moved fleet-wide / ``max_steps`` elapsed).
         Engines that finish early — or are torn down mid-run — keep being
-        observed but are masked inactive and no longer steered. Telemetry
-        is batched: every engine is snapshotted against one shared
-        timestamp per control interval (``observe_at``), so the per-flow
-        rate windows stay aligned across the fleet.
+        observed but are masked inactive and no longer steered. Exit
+        conditions are checked BEFORE each interval's sleep (an already-
+        settled fleet returns without burning an interval) and the sleep
+        itself is abort-aware. The run clock is ``time.monotonic()``
+        throughout — the heartbeat clock — so an NTP step/slew can never
+        skew the ``t`` fed to the objective features and
+        ``TopologyController.routes`` (let alone run it backwards).
+
+        ``engines`` is a list of engines, or a ``SharedLink``/``MultiLink``
+        directly — then the per-flow byte counters ride the batched
+        ``bytes_written_all()`` snapshot. Either way ONE snapshot per
+        control interval feeds ``delivered``, the health check, and the
+        termination sum — three consumers, one consistent view. Telemetry
+        is batched the same way: every engine is snapshotted against one
+        shared timestamp per control interval (``observe_at``), so the
+        per-flow rate windows stay aligned across the fleet.
 
         Health checks: when ``registry`` (a
         ``repro.runtime.HeartbeatRegistry``) is given, the controller beats
@@ -468,6 +540,23 @@ class FleetController:
         Returns the trace [(t, [n3 per flow], [goodput per flow])]."""
         import time
 
+        link = (engines if hasattr(engines, "bytes_written_all")
+                and hasattr(engines, "engines") else None)
+        if link is not None:
+            engines = list(link.engines)
+
+        def snapshot_bytes():
+            # the ONE per-interval byte snapshot: batched off the link
+            # when available, else one pass over the engines
+            if link is not None:
+                return link.bytes_written_all()
+            return [e.bytes_written() for e in engines]
+
+        def observe_now():
+            if link is not None:
+                return link.observe_all()
+            return _observe_fleet(engines)
+
         dead = set()    # flow indices declared dead by the health check
         if registry is not None and dead_after is None:
             dead_after = 4.0 * interval
@@ -476,52 +565,58 @@ class FleetController:
         def settled(i, e):
             return i in dead or e.done() or not getattr(e, "alive", True)
 
-        def health_check(step):
-            for i, e in enumerate(engines):
-                b = e.bytes_written()
+        def health_check(step, bytes_now):
+            for i, b in enumerate(bytes_now):
                 # progress (or first sight, or clean completion) = alive
-                if last_bytes[i] is None or b > last_bytes[i] or e.done():
+                if (last_bytes[i] is None or b > last_bytes[i]
+                        or engines[i].done()):
                     registry.beat(f"flow{i}", step, interval)
                 last_bytes[i] = b
             now_m = time.monotonic()
             dead.clear()   # recomputed each check: a flow that resumes
             for w, (beat_t, _, _) in registry.snapshot().items():
-                if w.startswith("flow") and now_m - beat_t > dead_after:
-                    dead.add(int(w[4:]))   # progress re-enters the fleet
+                m = _FLOW_WORKER.fullmatch(w)
+                if m is None:
+                    continue   # foreign worker (e.g. "flowctl"): not ours
+                idx = int(m.group(1))
+                if idx < len(engines) and now_m - beat_t > dead_after:
+                    dead.add(idx)   # progress re-enters the fleet
 
         trace = []
-        t0 = time.time()
+        t0 = time.monotonic()
         steps = 0
         while True:
-            if registry is not None:
-                health_check(steps)
-            obs = _observe_fleet(engines)
-            active = np.asarray([0.0 if settled(i, e) else 1.0
-                                 for i, e in enumerate(engines)])
             # the objective inputs: run-clock seconds + per-flow delivered
-            # bytes — the live twins of FleetState.t / .delivered
-            delivered = [e.bytes_written() for e in engines]
-            for i, (e, n) in enumerate(
-                    zip(engines,
-                        self.step(obs, active, t=time.time() - t0,
-                                  delivered=delivered))):
-                if not settled(i, e):
-                    e.set_concurrency(n)
-            time.sleep(interval)
-            obs2 = _observe_fleet(engines)
-            trace.append((time.time() - t0,
-                          [tuple(o["threads"]) for o in obs2],
-                          [o["throughputs"][2] for o in obs2]))
-            if on_step:
-                on_step(trace[-1])
-            steps += 1
-            moved = sum(e.bytes_written() for e in engines)
-            if total_bytes is not None and moved >= total_bytes:
+            # bytes — the live twins of FleetState.t / .delivered; the
+            # SAME snapshot feeds the health check and the termination sum
+            delivered = snapshot_bytes()
+            if registry is not None:
+                health_check(steps, delivered)
+            # exit checks BEFORE the sleep: an already-settled fleet (or
+            # one past its byte/step budget) must return promptly
+            if total_bytes is not None and sum(delivered) >= total_bytes:
                 break
             if all(settled(i, e) for i, e in enumerate(engines)):
                 break
             if max_steps is not None and steps >= max_steps:
                 break
+            obs = observe_now()
+            active = np.asarray([0.0 if settled(i, e) else 1.0
+                                 for i, e in enumerate(engines)])
+            for i, (e, n) in enumerate(
+                    zip(engines,
+                        self.step(obs, active, t=time.monotonic() - t0,
+                                  delivered=delivered))):
+                if not settled(i, e):
+                    e.set_concurrency(n)
+            self._settle_sleep(interval, engines, settled)
+            obs2 = observe_now()
+            trace.append((time.monotonic() - t0,
+                          [tuple(o["threads"]) for o in obs2],
+                          [o["throughputs"][2] for o in obs2]))
+            if on_step:
+                on_step(trace[-1])
+            steps += 1
         return trace
 
 

@@ -41,7 +41,8 @@ from repro.scenarios.families import (FAMILIES, ARRIVAL_FAMILIES,
 from repro.scenarios.spec import (ScenarioSpec, default_specs,
                                   sample_scenario_batch, arrival_schedule,
                                   sample_fleet_batch, sample_objectives,
-                                  TopologySpec, sample_topology_batch)
+                                  holdout_families, TopologySpec,
+                                  sample_topology_batch)
 from repro.scenarios.faults import (FaultEvent, FaultSpec, sample_faults,
                                     sample_fault_batch, compile_fault_batch,
                                     apply_faults_to_table,

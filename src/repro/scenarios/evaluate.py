@@ -223,7 +223,11 @@ def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
 
     st = fleet_reset(params, jax.random.PRNGKey(seed), n_flows, flows=flows,
                      table=table, objectives=world_obj)
-    shared = isinstance(actor, FleetPolicy)
+    # a shared actor is anything acting on the whole fleet matrix at once:
+    # a FleetPolicy, or an adaptation wrapper around one (e.g.
+    # repro.core.online.OnlineFleetPolicy) — independent per-flow
+    # controllers come as a list/tuple
+    shared = not isinstance(actor, (list, tuple))
     if shared:
         actor.reset()
     else:
@@ -252,6 +256,12 @@ def run_fleet_in_dynamic_sim(spec, flows: FlowSchedule, params, actor, *,
                               objectives=world_obj)
         t_mid = float(st.t) - 0.5 * duration
         active = ((t_mid >= t_start) & (t_mid < t_end)).astype(float)
+        if shared and hasattr(actor, "observe_outcome"):
+            # the online-adaptation feedback hook: the reward an action
+            # realized lives in the POST-step state (the live controllers
+            # read it from the next interval's telemetry the same way)
+            actor.observe_outcome(np.asarray(st.throughputs),
+                                  np.asarray(st.threads), active)
         g = np.asarray(st.throughputs[:, 2])
         goodput.append(g)
         threads_hist.append(np.asarray(st.threads))

@@ -107,6 +107,26 @@ def default_specs(*, horizon=60.0, bin_seconds=1.0, seed=0,
             for f in FAMILIES]
 
 
+def holdout_families(holdout, *, pool=None):
+    """Split the condition families into ``(train, held_out)`` for the
+    online-adaptation experiment: the offline policy is domain-randomized
+    over ``train`` (feed it to ``sample_fleet_batch(families=...)``) and
+    evaluated on ``held_out`` — conditions it NEVER saw, where only the
+    online layer can re-converge. ``pool`` defaults to every registered
+    family; order is preserved so the split is deterministic."""
+    pool = list(pool if pool is not None else FAMILIES)
+    held = set(holdout)
+    unknown = held - set(pool)
+    if unknown:
+        raise ValueError(f"unknown held-out families {sorted(unknown)}; "
+                         f"pool is {pool}")
+    train = [f for f in pool if f not in held]
+    if not train:
+        raise ValueError("holding out every family leaves nothing to "
+                         "train on")
+    return train, [f for f in pool if f in held]
+
+
 def arrival_schedule(family, n_flows, *, horizon=60.0, seed=0, **params):
     """One flow-arrival family compiled to a ``FlowSchedule`` — the fleet
     twin of ``ScenarioSpec.table()``. Deterministic in ``seed``."""
